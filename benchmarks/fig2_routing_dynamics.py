@@ -1,0 +1,37 @@
+"""Fig 2: routing dynamics of MMoE inference — device/expert/modality
+imbalance and hot-spot drift, per workload.
+
+CSV: workload,expert_imb_mean,expert_imb_p95,device_imb_mean,
+     device_imb_p95,vision_ratio_min,vision_ratio_max,hot_flips_per_100it
+"""
+from __future__ import annotations
+
+from benchmarks import traces as tr
+
+
+def run(iters: int = 600):
+    rows = []
+    for name in tr.WORKLOADS:
+        s = tr.trace_stats(tr.workload(name, iters=iters))
+        rows.append({"workload": name,
+                     "expert_imb_mean": round(s["expert_imb_mean"], 2),
+                     "expert_imb_p95": round(s["expert_imb_p95"], 2),
+                     "device_imb_mean": round(s["device_imb_mean"], 2),
+                     "device_imb_p95": round(s["device_imb_p95"], 2),
+                     "vision_ratio_min": round(s["vision_ratio_min_mean"], 2),
+                     "vision_ratio_max": round(s["vision_ratio_max_mean"], 2),
+                     "hot_flips_per_100it":
+                         round(s["hot_device_flips_per_100it"], 1)})
+    return rows
+
+
+def main():
+    rows = run()
+    cols = list(rows[0])
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Fig 4: the LB-gate regime — GEMM vs non-GEMM share of the MoE layer as
+batch grows, and the net effect of forcing ReaLB on below/above Γ.
+
+CSV: tokens_per_rank,gemm_frac,nongemm_frac,realb_gain_pct,gate_open
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import costmodel as cm
+from repro.configs import ReaLBConfig
+
+
+def run(g=cm.KIMI_VL, ep: int = 8):
+    rcfg = ReaLBConfig()
+    rows = []
+    for tpr in (16, 64, 256, 512, 1024, 2048, 4096, 8192, 16384):
+        # a mildly-imbalanced instantaneous load (hot rank = 2x mean)
+        load = np.full(ep, float(tpr))
+        load[0] *= 2.0
+        tokens = load.sum() / g.top_k
+        gemm = cm.expert_gemm_time(load[0], g, ep, False)
+        nong = cm.nongemm_time(load[0], g)
+        t_base, _ = cm.moe_layer_time(load, np.zeros(ep), g, ep, tokens)
+        fp4 = np.zeros(ep)
+        fp4[0] = 1.0   # ReaLB compresses the hot rank
+        t_realb, _ = cm.moe_layer_time(load, fp4, g, ep, tokens)
+        gate_open = tokens * g.top_k > rcfg.gate_gamma
+        rows.append(dict(
+            tokens_per_rank=tpr,
+            gemm_frac=round(gemm / (gemm + nong), 3),
+            nongemm_frac=round(nong / (gemm + nong), 3),
+            realb_gain_pct=round(100 * (1 - t_realb / t_base), 2),
+            gate_open=int(gate_open)))
+    return rows
+
+
+def main():
+    rows = run()
+    cols = list(rows[0])
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Fig 5: fine-grained MoE latency analysis on DynaMath — per-strategy
+mean/percentile layer latency, hot-rank speedup, and MoE time share.
+
+CSV: model,strategy,moe_ms_mean,moe_ms_p95,hotrank_speedup,
+     moe_e2e_share,e2e_reduction_pct
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import costmodel as cm
+from benchmarks import traces as tr
+from repro.configs import ReaLBConfig
+
+
+def run(iters: int = 400):
+    rcfg = ReaLBConfig()
+    rows = []
+    for mname, g in (("Kimi-VL", cm.KIMI_VL), ("Qwen3-VL", cm.QWEN3_VL)):
+        cfg = tr.workload("DynaMath", iters=iters, n_experts=g.n_experts,
+                          top_k=g.top_k)
+        sims = [cm.sim_baseline(cfg, g), cm.sim_eplb(cfg, g),
+                cm.sim_fp4_all(cfg, g),
+                cm.sim_realb(cfg, g, rcfg, name="ReaLB-seq", overlap=False),
+                cm.sim_realb(cfg, g, rcfg)]
+        base = sims[0]
+        # hot-rank speedup: per-iteration straggler time ratio
+        def hotrank(sim):
+            return float(np.mean(base.layer_times / sim.layer_times))
+        for s in sims:
+            ratio = s.layer_times.mean() / base.layer_times.mean()
+            share = g.moe_time_share
+            e2e_red = 100 * (1 - (1 - share + share * ratio))
+            rows.append(dict(
+                model=mname, strategy=s.name,
+                moe_ms_mean=round(s.mean_layer_ms, 4),
+                moe_ms_p95=round(float(np.percentile(
+                    s.layer_times, 95) * 1e3), 4),
+                hotrank_speedup=round(hotrank(s), 3),
+                moe_e2e_share=round(share * ratio
+                                    / (1 - share + share * ratio), 3),
+                e2e_reduction_pct=round(e2e_red, 2)))
+    return rows
+
+
+def main():
+    rows = run()
+    cols = list(rows[0])
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+
+
+if __name__ == "__main__":
+    main()

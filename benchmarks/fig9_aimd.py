@@ -1,0 +1,51 @@
+"""Fig 9 / Appendix H: AIMD controller dynamics — evolution of M_d and
+IB_global over iterations on DynaMath (the real repro.core.policy code).
+
+CSV: iter,ib_global,m_d_mean,m_d_min,congested,fp4_ranks
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import costmodel as cm
+from benchmarks import traces as tr
+from repro.configs import ReaLBConfig
+
+
+def run(iters: int = 300, stride: int = 5):
+    g = cm.KIMI_VL
+    rcfg = ReaLBConfig()
+    cfg = tr.workload("DynaMath", iters=iters, n_experts=g.n_experts,
+                      top_k=g.top_k)
+    import jax.numpy as jnp
+
+    from repro.core.policy import realb_policy
+    place = tr.default_placement(g.n_experts, cfg.ep)
+    m = np.full(cfg.ep, rcfg.md_init)
+    rows = []
+    for step in tr.generate(cfg):
+        load, vis = tr.rank_loads(step, place, cfg.ep)
+        dec = realb_policy(jnp.asarray(load), jnp.asarray(vis),
+                           jnp.asarray(m), rcfg)
+        m = np.asarray(dec.m_new)
+        if step.it % stride == 0:
+            rows.append(dict(
+                iter=step.it,
+                ib_global=round(float(dec.ib_global), 3),
+                m_d_mean=round(float(m.mean()), 3),
+                m_d_min=round(float(m.min()), 3),
+                congested=int(float(dec.ib_global) > rcfg.tau),
+                fp4_ranks=int(np.asarray(dec.use_fp4).sum())))
+    return rows
+
+
+def main():
+    rows = run()
+    cols = list(rows[0])
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+
+
+if __name__ == "__main__":
+    main()

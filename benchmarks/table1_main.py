@@ -1,0 +1,86 @@
+"""Table 1 (+ Table 2 with --suite ext): strategy comparison per model ×
+workload — e2e speedup (roofline cost model on shared traces) and ΔAcc
+proxy (measured NVFP4 quality drift on the trained tiny MMoE at the
+matching compression fraction).
+
+CSV: model,workload,strategy,speedup,moe_layer_ms,fp4_token_frac,
+     delta_acc_proxy,logit_kl
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import acc_proxy
+from benchmarks import costmodel as cm
+from benchmarks import traces as tr
+from repro.configs import ReaLBConfig
+
+MAIN_WORKLOADS = ("MMMU", "MathVista", "DynaMath")
+EXT_WORKLOADS = ("AI2D", "InfoVQA", "TextVQA", "MMBench")
+MODELS = {"Kimi-VL": cm.KIMI_VL, "Qwen3-VL": cm.QWEN3_VL}
+
+
+def strategies(g, rcfg):
+    return [
+        ("Baseline", lambda c: cm.sim_baseline(c, g)),
+        ("EPLB", lambda c: cm.sim_eplb(c, g)),
+        ("Async_EPLB", lambda c: cm.sim_eplb(c, g, async_transfer=True,
+                                             name="Async_EPLB")),
+        ("FP4-All", lambda c: cm.sim_fp4_all(c, g)),
+        ("ReaLB-m1", lambda c: cm.sim_realb(c, g, rcfg, name="ReaLB-m1",
+                                            m_fixed=0.0)),
+        ("ReaLB-m2", lambda c: cm.sim_realb(c, g, rcfg, name="ReaLB-m2",
+                                            m_fixed=0.7)),
+        ("ReaLB-seq", lambda c: cm.sim_realb(c, g, rcfg, name="ReaLB-seq",
+                                             overlap=False)),
+        ("ReaLB", lambda c: cm.sim_realb(c, g, rcfg)),
+    ]
+
+
+def run(suite: str = "main", iters: int = 400, quality: bool = True
+        ) -> List[Dict]:
+    rows: List[Dict] = []
+    names = MAIN_WORKLOADS if suite == "main" else EXT_WORKLOADS
+    rcfg = ReaLBConfig()
+    qcache: Dict[float, Dict[str, float]] = {}
+    params = cfg_t = None
+    if quality:
+        cfg_t, params = acc_proxy.get_trained_model()
+    for mname, g in MODELS.items():
+        for wname in names:
+            cfg = tr.workload(wname, iters=iters,
+                              n_experts=g.n_experts, top_k=g.top_k)
+            base = cm.sim_baseline(cfg, g)
+            for sname, fn in strategies(g, rcfg):
+                r = fn(cfg)
+                q = {"delta_acc_proxy": 0.0, "logit_kl": 0.0}
+                if quality and r.fp4_token_frac > 0:
+                    frac = round(float(np.mean(r.extra["fp4_ranks"]))
+                                 / cfg.ep, 2)
+                    if frac not in qcache:
+                        qcache[frac] = acc_proxy.measure_quality(
+                            frac, ep=cfg.ep, params=params, cfg=cfg_t)
+                    q = qcache[frac]
+                rows.append(dict(
+                    model=mname, workload=wname, strategy=sname,
+                    speedup=round(r.e2e_speedup(base, g), 3),
+                    moe_layer_ms=round(r.mean_layer_ms, 4),
+                    fp4_token_frac=round(r.fp4_token_frac, 3),
+                    delta_acc_proxy=round(q["delta_acc_proxy"], 3),
+                    logit_kl=round(q["logit_kl"], 5)))
+    return rows
+
+
+def main(suite: str = "main"):
+    rows = run(suite)
+    cols = list(rows[0])
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "main")

@@ -1,0 +1,10 @@
+"""Serving example: batched multimodal requests through the
+continuous-batching engine with ReaLB active.
+
+    PYTHONPATH=src python examples/serve_mmoe.py
+"""
+from repro.launch import serve as serve_mod
+
+if __name__ == "__main__":
+    serve_mod.main(["--arch", "moonshot-v1-16b-a3b", "--preset", "tiny",
+                    "--requests", "10", "--max-new", "6", "--slots", "4"])

@@ -1,0 +1,2 @@
+"""repro: ReaLB (real-time load balancing for multimodal MoE inference) on TPU/JAX."""
+__version__ = "0.1.0"

@@ -1,0 +1,189 @@
+"""Sharded checkpointing: atomic, async, restart- and reshard-safe.
+
+Format: one ``.npz`` per top-level state group (params / opt_state /
+extras) holding flattened ``path -> array`` entries, plus a ``meta.json``
+with step and tree structure.  Writes go to a temp dir + atomic rename so
+a crash mid-save never corrupts the latest checkpoint; ``keep`` old steps
+are retained for rollback (the fault-tolerance loop restores the newest
+intact one).
+
+``save_async`` snapshots to host memory synchronously (cheap) and writes
+in a background thread — the train loop never blocks on disk.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+Tree = Any
+_SEP = "|"
+_DT_SUFFIX = "::dt"
+# dtypes numpy's savez cannot represent natively -> stored as raw uint views
+_EXT_DTYPES = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _flatten(tree: Tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_key_str(k) for k in path)
+        arr = np.asarray(jax.device_get(leaf))
+        name = getattr(arr.dtype, "name", str(arr.dtype))
+        if name in _EXT_DTYPES:
+            _, raw = _EXT_DTYPES[name]
+            flat[key] = arr.view(raw)
+            flat[key + _DT_SUFFIX] = np.array(name)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def _decode_flat(flat: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    out = {}
+    for key, arr in flat.items():
+        if key.endswith(_DT_SUFFIX):
+            continue
+        meta = flat.get(key + _DT_SUFFIX)
+        if meta is not None:
+            ext, _ = _EXT_DTYPES[str(meta)]
+            arr = arr.view(ext)
+        out[key] = arr
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def _unflatten_into(template: Tree, flat: Dict[str, np.ndarray]) -> Tree:
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = _SEP.join(_key_str(k) for k in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef.treedef if hasattr(
+        treedef, "treedef") else treedef, leaves)
+
+
+def save(ckpt_dir: str, step: int, state: Dict[str, Tree],
+         keep: int = 3) -> str:
+    """Synchronous atomic save. state: {"params": tree, "opt": tree, ...}."""
+    root = pathlib.Path(ckpt_dir)
+    root.mkdir(parents=True, exist_ok=True)
+    tmp = root / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    meta = {"step": step, "groups": sorted(state)}
+    for group, tree in state.items():
+        flat = _flatten(tree)
+        np.savez(tmp / f"{group}.npz", **flat)
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    final = root / f"step_{step:08d}"
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    _gc(root, keep)
+    return str(final)
+
+
+def _gc(root: pathlib.Path, keep: int):
+    steps = sorted(p for p in root.iterdir() if p.name.startswith("step_"))
+    for p in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    root = pathlib.Path(ckpt_dir)
+    if not root.exists():
+        return None
+    steps = sorted(p for p in root.iterdir()
+                   if p.name.startswith("step_") and (p / "meta.json").exists())
+    if not steps:
+        return None
+    return int(json.loads((steps[-1] / "meta.json").read_text())["step"])
+
+
+def restore(ckpt_dir: str, templates: Dict[str, Tree],
+            step: Optional[int] = None, shardings: Optional[Dict] = None
+            ) -> Tuple[int, Dict[str, Tree]]:
+    """Restore onto `templates` structure; `shardings` (same structure)
+    re-distributes onto a (possibly different) mesh — elastic restart."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    out = {}
+    for group, tmpl in templates.items():
+        with np.load(d / f"{group}.npz") as z:
+            flat = _decode_flat({k: z[k] for k in z.files})
+        tree = _unflatten_into(tmpl, flat)
+        if shardings and group in shardings:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings[group])
+        else:
+            tree = jax.tree.map(jax.numpy.asarray, tree)
+        out[group] = tree
+    return step, out
+
+
+class AsyncCheckpointer:
+    """Snapshot-now, write-later. One in-flight save at a time."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir, self.keep = ckpt_dir, keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def save(self, step: int, state: Dict[str, Tree]):
+        self.wait()
+        snapshot = {g: _flatten(t) for g, t in state.items()}  # host copy
+
+        def _write():
+            try:
+                root = pathlib.Path(self.ckpt_dir)
+                root.mkdir(parents=True, exist_ok=True)
+                tmp = root / f".tmp_step_{step:08d}"
+                if tmp.exists():
+                    shutil.rmtree(tmp)
+                tmp.mkdir()
+                for group, flat in snapshot.items():
+                    np.savez(tmp / f"{group}.npz", **flat)
+                (tmp / "meta.json").write_text(
+                    json.dumps({"step": step, "groups": sorted(snapshot)}))
+                final = root / f"step_{step:08d}"
+                if final.exists():
+                    shutil.rmtree(final)
+                tmp.rename(final)
+                _gc(root, self.keep)
+            except BaseException as e:  # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err

@@ -1,0 +1,19 @@
+"""command-r-35b — GQA, no-bias. [hf:CohereForAI/c4ai-command-r-v01; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-35b",
+    family="dense",
+    n_layers=40,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=22528,
+    vocab_size=256000,
+    layer_pattern="attn",
+    activation="swiglu",
+    qkv_bias=False,
+    tie_embeddings=True,
+    rope_theta=8000000.0,
+)

@@ -1,0 +1,8 @@
+"""ReaLB core: the paper's contribution (policy, quantization, EP MoE)."""
+from repro.core.ep_moe import (AUX_SCALARS, ep_moe_forward, moe_spec,
+                               moe_state_shape)
+from repro.core.policy import (PolicyDecision, init_m_state, lb_gate,
+                               realb_policy)
+from repro.core.quant import (QTensor, dequantize_fp4, e4m3_round, fp4_round,
+                              fp4_sim, matmul_w4a16, matmul_w4a4, quant_error,
+                              quantize_fp4)

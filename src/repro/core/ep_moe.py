@@ -1,0 +1,470 @@
+"""Expert-parallel MoE layer with ReaLB runtime load balancing.
+
+This is the paper's contribution as a composable JAX module.  The MoE layer
+runs under a fully-manual ``jax.shard_map`` over the whole mesh; the EP
+group is the "model" axis (each (pod, data) row of model-ranks forms an
+independent EP group, mirroring the paper's DP-attention + EP-MoE
+deployment generalized to a 2/3-D mesh).
+
+Two execution paths:
+
+* ``dispatch`` (train / prefill, large token counts): capacity-packed
+  ``all_to_all`` token exchange over the EP axis, local re-sort by expert,
+  grouped GEMM via ``lax.ragged_dot`` (per-rank time scales with the true
+  received load — straggler dynamics are preserved on TPU), ``all_to_all``
+  combine.  ReaLB's metadata collection (psum of routing counts) and the
+  conditional BF16→FP4 weight transformation have **no data dependency on
+  the dispatch all_to_all**, so XLA's latency-hiding scheduler overlaps
+  them with communication — the paper's pipeline orchestration (§4.3),
+  expressed structurally.  ``overlap=False`` (ReaLB-seq) inserts an
+  artificial dependency to serialise, for the ablation.
+
+* ``broadcast`` (decode, small token counts): tokens are replicated over
+  the EP axis; each rank computes only its local experts' contributions and
+  a ``psum`` combines.  This is the standard small-batch EP regime where
+  the paper's LB gate keeps ReaLB off.
+
+The per-rank precision decision is a *traced* ``lax.cond`` whose predicate
+is rank-local — SPMD HLO ``conditional``, each EP rank dynamically takes
+the FP4 or BF16 branch with zero host round-trips.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.configs.base import ModelConfig, MoEConfig, ReaLBConfig
+from repro.core import quant
+from repro.core.policy import realb_policy
+from repro.models.common import P, current_mesh, resolve_spec
+
+Params = Dict[str, jax.Array]
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# parameter declaration
+# --------------------------------------------------------------------------
+def moe_spec(cfg: ModelConfig) -> Dict[str, P]:
+    e = cfg.moe
+    d = cfg.d_model
+    return {
+        "router": P((d, e.num_experts), (None, None), dtype="float32"),
+        "w_gate": P((e.num_experts, d, e.d_ff), ("expert", "embed", "ffn")),
+        "w_up": P((e.num_experts, d, e.d_ff), ("expert", "embed", "ffn")),
+        "w_down": P((e.num_experts, e.d_ff, d), ("expert", None, "embed")),
+    }
+
+
+# --------------------------------------------------------------------------
+# communication abstraction (lets the same math run without a mesh)
+# --------------------------------------------------------------------------
+class Comm(NamedTuple):
+    ep: int
+    my_rank: Any                                   # traced int or 0
+    psum_model: Callable[[jax.Array], jax.Array]
+    all_gather_model: Callable[[jax.Array], jax.Array]   # adds leading ep dim
+    a2a: Callable[[jax.Array], jax.Array]                # over leading ep dim
+    fsdp_gather: Callable[[jax.Array, int], jax.Array]   # all-gather 'data'
+
+
+def _dist_comm(ep: int, fsdp: bool) -> Comm:
+    return Comm(
+        ep=ep,
+        my_rank=jax.lax.axis_index("model"),
+        psum_model=lambda x: jax.lax.psum(x, "model"),
+        all_gather_model=lambda x: jax.lax.all_gather(x, "model"),
+        a2a=lambda x: jax.lax.all_to_all(x, "model", 0, 0, tiled=True),
+        fsdp_gather=(lambda x, ax: jax.lax.all_gather(
+            x, "data", axis=ax, tiled=True)) if fsdp
+        else (lambda x, ax: x),
+    )
+
+
+def _local_comm() -> Comm:
+    return Comm(ep=1, my_rank=0,
+                psum_model=lambda x: x,
+                all_gather_model=lambda x: x[None],
+                a2a=lambda x: x,
+                fsdp_gather=lambda x, ax: x)
+
+
+def _gather_weights(p: Params, comm: Comm) -> Dict[str, jax.Array]:
+    """FSDP all-gather of the locally-owned expert slab (ZeRO layout)."""
+    return {"w_gate": comm.fsdp_gather(p["w_gate"], 1),
+            "w_up": comm.fsdp_gather(p["w_up"], 1),
+            "w_down": comm.fsdp_gather(p["w_down"], 2)}
+
+
+# --------------------------------------------------------------------------
+# routing
+# --------------------------------------------------------------------------
+def _route(router_w: jax.Array, x_t: jax.Array, e_cfg: MoEConfig
+           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """returns (gates [t,K] f32, eidx [t,K] i32, probs [t,E] f32)."""
+    logits = x_t.astype(F32) @ router_w.astype(F32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, e_cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, eidx.astype(jnp.int32), probs
+
+
+def _aux_losses(probs: jax.Array, counts_global: jax.Array,
+                group_tokens: jax.Array, e_cfg: MoEConfig,
+                psum: Callable) -> Dict[str, jax.Array]:
+    """GShard-style load-balance + router z losses (per EP group)."""
+    e = e_cfg.num_experts
+    f = counts_global / jnp.maximum(group_tokens * e_cfg.top_k, 1.0)
+    p_mean = psum(probs.sum(0)) / jnp.maximum(group_tokens, 1.0)
+    lb = e * jnp.sum(f * p_mean)
+    lse = jax.scipy.special.logsumexp(
+        jnp.log(jnp.maximum(probs, 1e-20)), axis=-1)
+    z = psum(jnp.sum(lse ** 2)) / jnp.maximum(group_tokens, 1.0)
+    return {"lb_loss": lb, "z_loss": z}
+
+
+# --------------------------------------------------------------------------
+# grouped expert compute (bf16 / fp4 branches)
+# --------------------------------------------------------------------------
+def _rdot(lhs, rhs, gs):
+    return jax.lax.ragged_dot(lhs, rhs, gs,
+                              preferred_element_type=F32).astype(lhs.dtype)
+
+
+def _grouped_ffn(xs, gs, w_gate, w_up, w_down, act):
+    """xs [m,D] sorted by group; gs [G]; w_* [G,.,.] (contraction on dim 1)."""
+    g = _rdot(xs, w_gate.astype(xs.dtype), gs)
+    u = _rdot(xs, w_up.astype(xs.dtype), gs)
+    h = act(g.astype(F32)).astype(xs.dtype) * u
+    return _rdot(h, w_down.astype(xs.dtype), gs)
+
+
+def _dq_t(q: quant.QTensor, dtype) -> jax.Array:
+    """Dequantize a [G,N,K]-layout QTensor to [G,K,N] for ragged_dot."""
+    return quant.dequantize_fp4(q, F32).swapaxes(-1, -2).astype(dtype)
+
+
+def _grouped_ffn_fp4(xs, gs, wq: Dict[str, quant.QTensor],
+                     rcfg: ReaLBConfig, act):
+    """NVFP4 W4A4 grouped FFN (jnp numerics oracle; swapped for the Pallas
+    ``fp4_matmul`` kernel on real TPU backends — see kernels/ops.py)."""
+    xq = quant.fp4_sim(xs, rcfg.group_size)
+    g = _rdot(xq, _dq_t(wq["w_gate"], xs.dtype), gs)
+    u = _rdot(xq, _dq_t(wq["w_up"], xs.dtype), gs)
+    h = act(g.astype(F32)).astype(xs.dtype) * u
+    hq = quant.fp4_sim(h, rcfg.group_size)
+    return _rdot(hq, _dq_t(wq["w_down"], xs.dtype), gs)
+
+
+def _quantize_experts(w: Dict[str, jax.Array], use_fp4: jax.Array,
+                      rcfg: ReaLBConfig,
+                      overlap_token: Optional[jax.Array]) -> Dict[str, Any]:
+    """③ on-the-fly BF16→FP4 transformation, conditional on the plan.
+
+    Consumes only resident weights plus the routing-metadata predicate, so
+    the HLO has no dependency path from the dispatch all_to_all into these
+    ops — XLA overlaps them with communication.  ``overlap_token``
+    (ReaLB-seq ablation) injects a fake dependency on the a2a output to
+    serialise the transformation after dispatch.
+    """
+
+    def do_quant(ws):
+        out = {}
+        for name, wt in ws.items():
+            wt_t = wt.swapaxes(-1, -2)  # [G, N, K]: quantize along K
+            if overlap_token is not None:
+                wt_t = wt_t + overlap_token.astype(wt_t.dtype)
+            out[name] = quant.quantize_fp4(wt_t, rcfg.group_size)
+        return out
+
+    def no_quant(ws):
+        # zeros derived from the weights so the varying-manual-axes (VMA)
+        # type matches the quantizing branch under shard_map
+        out = {}
+        for name, wt in ws.items():
+            wt_t = wt.swapaxes(-1, -2)
+            out[name] = quant.QTensor(
+                (wt_t[..., ::2] * 0).astype(jnp.uint8),
+                (wt_t[..., ::rcfg.group_size] * 0).astype(F32),
+                (wt_t.reshape(-1)[0] * 0 + 1).astype(F32))
+        return out
+
+    return jax.lax.cond(use_fp4, do_quant, no_quant, w)
+
+
+# --------------------------------------------------------------------------
+# dispatch path (train / prefill)
+# --------------------------------------------------------------------------
+def _moe_dispatch(x_t, mod_t, p, m_vec, cfg, rcfg, comm, act, train):
+    """x_t [t,D] local tokens; mod_t [t] vision flags; m_vec [ep] AIMD."""
+    e_cfg = cfg.moe
+    ep, e = comm.ep, cfg.moe.num_experts
+    e_loc = e // ep
+    t, d = x_t.shape
+    k = e_cfg.top_k
+
+    # ① routing + metadata (the lightweight "S" collection) ---------------
+    gates, eidx, probs = _route(p["router"], x_t, e_cfg)
+    flat_e = eidx.reshape(t * k)
+    counts_i = jnp.bincount(flat_e, length=e).astype(jnp.int32)
+    vis_local = jnp.bincount(flat_e, weights=jnp.repeat(
+        mod_t.astype(F32), k), length=e)
+    counts_global = comm.psum_model(counts_i.astype(F32))     # [E]
+    vis_global = comm.psum_model(vis_local)
+    load_d = counts_global.reshape(ep, e_loc).sum(-1)         # [ep]
+    vis_d = vis_global.reshape(ep, e_loc).sum(-1)
+
+    # ② modality-aware LB scheduling (AIMD policy) -------------------------
+    dec = realb_policy(load_d, vis_d, m_vec, rcfg)
+    use_fp4_me = jnp.asarray(False) if train else dec.use_fp4[comm.my_rank]
+
+    w = _gather_weights(p, comm)
+
+    # ③ conditional on-the-fly quantization (overlaps with a2a below) ------
+    wq = None
+    if not train and rcfg.overlap:
+        wq = _quantize_experts(w, use_fp4_me, rcfg, None)
+
+    # dispatch --------------------------------------------------------------
+    dest = flat_e // e_loc
+    order = jnp.argsort(dest, stable=True)
+    dest_s = dest[order]
+    send_counts = counts_i.reshape(ep, e_loc).sum(-1)          # [ep] int
+    offsets = jnp.cumsum(send_counts) - send_counts
+    pos_in_rank = jnp.arange(t * k, dtype=jnp.int32) - offsets[dest_s]
+    cap = max(8, -(-math.ceil(t * k / ep * e_cfg.capacity_factor) // 8) * 8)
+    big = ep * cap + 7                       # OOB -> dropped (mode="drop")
+    slot_s = jnp.where(pos_in_rank < cap, dest_s * cap + pos_in_rank, big)
+
+    tok_idx_s = (order // k).astype(jnp.int32)
+    vals_s = jnp.take(x_t, tok_idx_s, axis=0)
+    leid_s = (flat_e % e_loc)[order]
+    send = jnp.zeros((ep * cap, d), x_t.dtype).at[slot_s].set(
+        vals_s, mode="drop")
+    eid_send = jnp.full((ep * cap,), e_loc, jnp.int32).at[slot_s].set(
+        leid_s, mode="drop")
+    slot_flat = jnp.full((t * k,), big, jnp.int32).at[order].set(
+        slot_s.astype(jnp.int32))
+
+    recv = comm.a2a(send.reshape(ep, cap, d)).reshape(ep * cap, d)
+    eid_recv = comm.a2a(eid_send.reshape(ep, cap)).reshape(ep * cap)
+
+    if not train and wq is None:   # ReaLB-seq: serialise T after dispatch
+        token = (recv.sum() * 0.0).astype(F32)
+        wq = _quantize_experts(w, use_fp4_me, rcfg, token)
+
+    # ④ balanced local expert compute ---------------------------------------
+    order2 = jnp.argsort(eid_recv, stable=True)
+    xs = jnp.take(recv, order2, axis=0)
+    gs = jnp.bincount(eid_recv, length=e_loc + 1).astype(jnp.int32)
+    pad_row = lambda a: jnp.concatenate([a, a[:1]], axis=0)
+    w_pad = {n: pad_row(v) for n, v in w.items()}
+    if train:
+        ys = _grouped_ffn(xs, gs, w_pad["w_gate"], w_pad["w_up"],
+                          w_pad["w_down"], act)
+    else:
+        wq_pad = {n: quant.QTensor(pad_row(v.packed), pad_row(v.scales),
+                                   v.global_scale) for n, v in wq.items()}
+        ys = jax.lax.cond(
+            use_fp4_me,
+            lambda o: _grouped_ffn_fp4(o[0], gs, o[2], rcfg, act),
+            lambda o: _grouped_ffn(o[0], gs, o[1]["w_gate"], o[1]["w_up"],
+                                   o[1]["w_down"], act),
+            (xs, w_pad, wq_pad))
+    y_buf = jnp.zeros_like(ys).at[order2].set(ys)
+
+    ret = comm.a2a(y_buf.reshape(ep, cap, d)).reshape(ep * cap, d)
+    y_flat = jnp.take(ret, slot_flat, axis=0, mode="fill", fill_value=0)
+    y_flat = jnp.where((slot_flat < big)[:, None], y_flat, 0)
+    out = jnp.sum(y_flat.reshape(t, k, d)
+                  * gates[..., None].astype(y_flat.dtype), axis=1)
+
+    # diagnostics ------------------------------------------------------------
+    total = jnp.sum(load_d)
+    dropped = comm.psum_model(
+        jnp.sum((slot_flat >= big).astype(F32)))
+    aux = _aux_losses(probs, counts_global, total / max(k, 1), e_cfg,
+                      comm.psum_model)
+    aux.update(drop_frac=dropped / jnp.maximum(total, 1.0),
+               ib_global=dec.ib_global,
+               fp4_ranks=jnp.sum(dec.use_fp4.astype(F32)),
+               load_d=load_d, vis_d=vis_d,
+               gate_open=dec.gate_open.astype(F32))
+    return out.astype(x_t.dtype), dec.m_new, aux
+
+
+# --------------------------------------------------------------------------
+# broadcast path (decode)
+# --------------------------------------------------------------------------
+def _moe_broadcast(x_t, mod_t, p, m_vec, cfg, rcfg, comm, act):
+    """Decode-regime MoE: tokens replicated over the EP axis."""
+    e_cfg = cfg.moe
+    ep, e = comm.ep, e_cfg.num_experts
+    e_loc = e // ep
+    t = x_t.shape[0]
+    k = e_cfg.top_k
+
+    gates, eidx, probs = _route(p["router"], x_t, e_cfg)
+    flat_e = eidx.reshape(t * k)
+    counts = jnp.bincount(flat_e, length=e).astype(F32)        # row totals
+    vis = jnp.bincount(flat_e, weights=jnp.repeat(
+        mod_t.astype(F32), k), length=e)
+    load_d = counts.reshape(ep, e_loc).sum(-1)
+    vis_d = vis.reshape(ep, e_loc).sum(-1)
+    dec = realb_policy(load_d, vis_d, m_vec, rcfg)
+    use_fp4_me = dec.use_fp4[comm.my_rank]
+
+    w = _gather_weights(p, comm)
+    wq = _quantize_experts(w, use_fp4_me, rcfg, None)
+
+    my0 = comm.my_rank * e_loc
+    sel = (eidx >= my0) & (eidx < my0 + e_loc)                 # [t,K]
+    local_gate = jnp.where(sel, gates, 0.0)
+    leid = jnp.clip(eidx - my0, 0, e_loc - 1)
+
+    def per_expert(x_all, wg, wu, wd):
+        g = jnp.einsum("td,edf->etf", x_all, wg.astype(x_all.dtype))
+        u = jnp.einsum("td,edf->etf", x_all, wu.astype(x_all.dtype))
+        h = act(g.astype(F32)).astype(x_all.dtype) * u
+        return jnp.einsum("etf,efd->etd", h, wd.astype(x_all.dtype))
+
+    def bf16_branch(o):
+        x_, w_, _ = o
+        return per_expert(x_, w_["w_gate"], w_["w_up"], w_["w_down"])
+
+    def fp4_branch(o):
+        x_, _, wq_ = o
+        xq = quant.fp4_sim(x_, rcfg.group_size)
+        wd = {n: _dq_t(q, x_.dtype) for n, q in wq_.items()}
+        g = jnp.einsum("td,edf->etf", xq, wd["w_gate"])
+        u = jnp.einsum("td,edf->etf", xq, wd["w_up"])
+        h = act(g.astype(F32)).astype(x_.dtype) * u
+        hq = quant.fp4_sim(h, rcfg.group_size)
+        return jnp.einsum("etf,efd->etd", hq, wd["w_down"])
+
+    y_e = jax.lax.cond(use_fp4_me, fp4_branch, bf16_branch, (x_t, w, wq))
+
+    onehot = jax.nn.one_hot(leid, e_loc, dtype=y_e.dtype)      # [t,K,e_loc]
+    weight_e = jnp.einsum("tk,tke->te", local_gate.astype(y_e.dtype), onehot)
+    y_partial = jnp.einsum("te,etd->td", weight_e, y_e)
+    out = comm.psum_model(y_partial)
+
+    total = jnp.sum(load_d)
+    aux = _aux_losses(probs, counts, total / max(k, 1), e_cfg, lambda v: v)
+    aux.update(drop_frac=jnp.zeros(()), ib_global=dec.ib_global,
+               fp4_ranks=jnp.sum(dec.use_fp4.astype(F32)),
+               load_d=load_d, vis_d=vis_d,
+               gate_open=dec.gate_open.astype(F32))
+    return out.astype(x_t.dtype), dec.m_new, aux
+
+
+# --------------------------------------------------------------------------
+# public entry: shard_map wrapper
+# --------------------------------------------------------------------------
+AUX_SCALARS = ("lb_loss", "z_loss", "drop_frac", "ib_global", "fp4_ranks",
+               "gate_open")
+
+
+def _manual_fn(x, mod, m_state, router, w_gate, w_up, w_down, *, cfg, rcfg,
+               ep, mode, fsdp, train):
+    comm = _dist_comm(ep, fsdp)
+    b, s, d = x.shape
+    x_t = x.reshape(b * s, d)
+    mod_t = mod.reshape(b * s)
+    # every device holds its own scalar M_d; gather the EP-group vector via
+    # psum-of-onehot (provably replicated over 'model' for the VMA checker)
+    m_vec = comm.psum_model(
+        jax.nn.one_hot(comm.my_rank, ep, dtype=F32) * m_state.reshape(()))
+    p = {"router": router, "w_gate": w_gate, "w_up": w_up, "w_down": w_down}
+    act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
+    if mode == "broadcast":
+        y, m_new, aux = _moe_broadcast(x_t, mod_t, p, m_vec, cfg, rcfg,
+                                       comm, act)
+    else:
+        y, m_new, aux = _moe_dispatch(x_t, mod_t, p, m_vec, cfg, rcfg,
+                                      comm, act, train)
+    y = y.reshape(b, s, d)
+    m_out = m_new[comm.my_rank].reshape(m_state.shape)
+    aux_s = jnp.stack([aux[n] for n in AUX_SCALARS]).reshape(1, -1)
+    stats = jnp.stack([aux["load_d"], aux["vis_d"]]).reshape(1, 2, ep)
+    return y, m_out, aux_s, stats
+
+
+def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
+                   rcfg: ReaLBConfig, m_state: jax.Array,
+                   modality: Optional[jax.Array] = None,
+                   mode: str = "dispatch", train: bool = False,
+                   fsdp: bool = False):
+    """MoE layer with ReaLB.  x [B,S,D]; m_state [groups, ep] (see
+    :func:`moe_state_shape`).  Returns (y, new_m_state, aux_dict)."""
+    mesh = current_mesh()
+    if modality is None:
+        modality = jnp.zeros(x.shape[:2], jnp.bool_)
+
+    local = (mesh is None or "model" not in mesh.axis_names or
+             dict(zip(mesh.axis_names, mesh.devices.shape))["model"] == 1)
+    if local:
+        comm = _local_comm()
+        b, s, d = x.shape
+        act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
+        fn = _moe_broadcast if mode == "broadcast" else partial(
+            _moe_dispatch, train=train)
+        y, m_new, aux = fn(x.reshape(b * s, d), modality.reshape(b * s),
+                           p, m_state.reshape(-1), cfg, rcfg, comm, act)
+        return (y.reshape(b, s, d), m_new.reshape(m_state.shape), aux)
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ep = sizes["model"]
+    row_axes = tuple(a for a in mesh.axis_names if a != "model")
+    row_entry = row_axes if len(row_axes) > 1 else row_axes[0]
+    single_group = m_state.shape[0] == 1
+
+    x_axes = ("batch", "seq", None) if mode == "dispatch" \
+        else ("batch", None, None)
+    x_spec = resolve_spec(x.shape, x_axes, mesh)
+    mod_spec = PartitionSpec(*x_spec[:2])
+    m_spec = PartitionSpec(None if single_group else row_entry, "model")
+    r_spec = PartitionSpec(None, None)
+    wg_spec = resolve_spec(p["w_gate"].shape,
+                           ("expert", "embed" if fsdp else None, None), mesh)
+    wd_spec = resolve_spec(p["w_down"].shape,
+                           ("expert", None, "embed" if fsdp else None), mesh)
+    aux_spec = PartitionSpec(None if single_group else row_entry, None)
+    stats_spec = PartitionSpec(None if single_group else row_entry,
+                               None, None)
+
+    fn = partial(_manual_fn, cfg=cfg, rcfg=rcfg, ep=ep, mode=mode,
+                 fsdp=fsdp, train=train)
+    y, m_new, aux_s, stats = jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(x_spec, mod_spec, m_spec, r_spec, wg_spec, wg_spec,
+                  wd_spec),
+        out_specs=(x_spec, m_spec, aux_spec, stats_spec),
+    )(x, modality, m_state, p["router"], p["w_gate"], p["w_up"],
+      p["w_down"])
+
+    aux_mean = aux_s.mean(0)
+    aux = {n: aux_mean[i] for i, n in enumerate(AUX_SCALARS)}
+    aux["load_d"] = stats[:, 0, :]
+    aux["vis_d"] = stats[:, 1, :]
+    return y, m_new, aux
+
+
+def moe_state_shape(mesh, global_batch: int) -> Tuple[int, int]:
+    """AIMD M-state shape [n_groups, ep] for a given mesh & batch."""
+    if mesh is None:
+        return (1, 1)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ep = sizes.get("model", 1)
+    rows = 1
+    for a in mesh.axis_names:
+        if a != "model":
+            rows *= sizes[a]
+    if global_batch % max(rows, 1) != 0:
+        rows = 1  # batch not shardable over rows -> single replicated group
+    return (rows, ep)

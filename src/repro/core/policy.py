@@ -1,0 +1,67 @@
+"""ReaLB control policy (paper §4.2): hotspot detection + modality
+threshold + AIMD adaptation + LB gate.
+
+Everything is expressed as pure jnp on per-EP-rank vectors so the policy
+runs *inside* the traced MoE layer (zero host round-trips — the "real-time,
+zero scheduling overhead" property).  The same functions drive the
+benchmark simulator on host numpy arrays.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ReaLBConfig
+
+
+class PolicyDecision(NamedTuple):
+    use_fp4: jax.Array     # bool [R] — rank executes its experts in FP4
+    hotspots: jax.Array    # bool [R]
+    ib_d: jax.Array        # f32 [R] per-rank imbalance Load_d / Ideal
+    ib_global: jax.Array   # f32 scalar max_d IB_d
+    r_v: jax.Array         # f32 [R] vision token ratio per rank
+    gate_open: jax.Array   # bool scalar — LB gate (Γ)
+    m_new: jax.Array       # f32 [R] updated AIMD thresholds
+
+
+def lb_gate(total_tokens: jax.Array, cfg: ReaLBConfig) -> jax.Array:
+    """Γ gate: activate only in the GEMM-dominated (large-batch) regime."""
+    return total_tokens > cfg.gate_gamma
+
+
+def realb_policy(load_d: jax.Array, vis_d: jax.Array, m_d: jax.Array,
+                 cfg: ReaLBConfig) -> PolicyDecision:
+    """One synchronous control step for an EP group.
+
+    load_d: f32 [R] tokens routed to each rank's experts this layer.
+    vis_d:  f32 [R] vision tokens among them.
+    m_d:    f32 [R] current AIMD modality thresholds.
+    """
+    load_d = load_d.astype(jnp.float32)
+    total = jnp.sum(load_d)
+    ideal = total / load_d.shape[0]
+    ib_d = load_d / jnp.maximum(ideal, 1.0)
+    ib_global = jnp.max(ib_d)
+    hot = ib_d > cfg.capacity_c
+    r_v = vis_d.astype(jnp.float32) / jnp.maximum(load_d, 1.0)
+    gate = lb_gate(total, cfg)
+
+    compress = hot & (r_v > m_d) & gate & cfg.enabled
+
+    if cfg.adaptive:
+        m_up = jnp.minimum(1.0, m_d + cfg.md_add)
+        m_down = jnp.maximum(cfg.md_min, m_d * cfg.md_mult)
+        m_new = jnp.where(ib_global > cfg.tau, m_down, m_up)
+        # only adapt while the balancer is live (gate open); else hold.
+        m_new = jnp.where(gate, m_new, m_d)
+    else:
+        m_new = m_d
+
+    return PolicyDecision(compress, hot, ib_d, ib_global, r_v, gate, m_new)
+
+
+def init_m_state(n_groups: int, ep: int, cfg: ReaLBConfig) -> jax.Array:
+    """AIMD state M_d: one threshold per (EP group row, EP rank)."""
+    return jnp.full((n_groups, ep), cfg.md_init, jnp.float32)

@@ -1,0 +1,163 @@
+"""NVFP4 quantization recipe (paper Appendix E), pure-jnp reference.
+
+Weights & activations in FP4 E2M1 ({0,±0.5,±1,±1.5,±2,±3,±4,±6}), symmetric
+min-max per group of 16 along the contraction dim; local scale = amax/6
+stored in FP8 E4M3; one global FP32 scale per tensor aligns magnitudes so
+local scales fit E4M3 range.  These functions are the numerical oracle for
+the Pallas kernels in ``repro/kernels`` and the accuracy-measurement path
+of the benchmarks (the simulated dequantized values are bit-identical to
+what an NVFP4 GEMM consumes).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+FP4_LEVELS = jnp.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], jnp.float32)
+# decision boundaries between consecutive levels (round-to-nearest)
+FP4_MIDPOINTS = jnp.array([0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0], jnp.float32)
+FP4_MAX = 6.0
+INV_FP4_MAX = float(jnp.float32(1.0) / jnp.float32(6.0))
+E4M3_MAX = 448.0
+GROUP = 16
+
+
+def fp4_round(x: jax.Array) -> jax.Array:
+    """Round to the nearest E2M1-representable value. Any shape, f32 math."""
+    xf = x.astype(jnp.float32)
+    mag = jnp.abs(xf)
+    idx = jnp.zeros(xf.shape, jnp.int32)
+    for mid in [0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0]:
+        idx = idx + (mag > mid).astype(jnp.int32)
+    lev = FP4_LEVELS[idx]
+    return jnp.sign(xf) * lev
+
+
+def fp4_code(x: jax.Array) -> jax.Array:
+    """4-bit code: bit3 = sign, bits0..2 = level index. uint8 in [0,15]."""
+    xf = x.astype(jnp.float32)
+    mag = jnp.abs(xf)
+    idx = jnp.zeros(xf.shape, jnp.int32)
+    for mid in [0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0]:
+        idx = idx + (mag > mid).astype(jnp.int32)
+    sign = (xf < 0).astype(jnp.int32)
+    return (sign * 8 + idx).astype(jnp.uint8)
+
+
+def fp4_decode(code: jax.Array) -> jax.Array:
+    """Inverse of :func:`fp4_code`."""
+    idx = (code & 7).astype(jnp.int32)
+    sign = jnp.where((code & 8) > 0, -1.0, 1.0)
+    return sign * FP4_LEVELS[idx]
+
+
+def e4m3_round(x: jax.Array) -> jax.Array:
+    """Round-to-nearest-even onto FP8 E4M3 (±448, denormals at 2^-9)."""
+    xf = x.astype(jnp.float32)
+    mag = jnp.clip(jnp.abs(xf), 0.0, E4M3_MAX)
+    # exponent of the representation bucket; denormal floor at 2^-6
+    e = jnp.floor(jnp.log2(jnp.maximum(mag, 1e-38)))
+    e = jnp.clip(e, -6.0, 8.0)
+    ulp = jnp.exp2(e - 3.0)                    # 3 mantissa bits
+    q = jnp.round(mag / ulp) * ulp
+    # rounding up may bump the exponent (e.g. 1.9375 -> 2.0): representable.
+    q = jnp.where(mag == 0.0, 0.0, jnp.minimum(q, E4M3_MAX))
+    return jnp.sign(xf) * q
+
+
+def pack_u4(codes: jax.Array) -> jax.Array:
+    """Pack uint8 4-bit codes pairwise along the last dim -> uint8 [... , K/2]."""
+    lo = codes[..., 0::2].astype(jnp.uint8)
+    hi = codes[..., 1::2].astype(jnp.uint8)
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_u4(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_u4` -> uint8 [..., K]."""
+    lo = (packed & 0x0F).astype(jnp.uint8)
+    hi = ((packed >> 4) & 0x0F).astype(jnp.uint8)
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1],
+                                                packed.shape[-1] * 2)
+
+
+class QTensor(NamedTuple):
+    """Group-quantized NVFP4 tensor (packed along the last axis)."""
+
+    packed: jax.Array        # uint8 [..., K/2]
+    scales: jax.Array        # f32 (e4m3-valued) [..., K/GROUP]
+    global_scale: jax.Array  # f32 scalar
+
+    @property
+    def k(self) -> int:
+        return self.packed.shape[-1] * 2
+
+
+def global_scale_for(w: jax.Array) -> jax.Array:
+    """Per-tensor scale aligning group amaxes into E4M3 range (precomputed
+    at PTQ calibration time in the paper; an input to the runtime kernel)."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)))
+    return jnp.maximum(amax / (FP4_MAX * E4M3_MAX), 1e-20).astype(jnp.float32)
+
+
+def quantize_fp4(w: jax.Array, group: int = GROUP,
+                 global_scale: jax.Array | None = None) -> QTensor:
+    """NVFP4 group quantization along the last axis (must divide by group)."""
+    *lead, k = w.shape
+    assert k % group == 0, (k, group)
+    wf = w.astype(jnp.float32).reshape(*lead, k // group, group)
+    amax = jnp.max(jnp.abs(wf), axis=-1)                      # [..., K/g]
+    gscale = global_scale_for(w) if global_scale is None \
+        else jnp.asarray(global_scale, jnp.float32)
+    # multiply by the f32 reciprocal (not /6.0): keeps the expression
+    # bit-identical between the jitted oracle and the Pallas kernel (XLA
+    # rewrites constant divisions to reciprocal multiplies)
+    s_local = e4m3_round(amax * INV_FP4_MAX / gscale)
+    s_local = jnp.maximum(s_local, 2.0 ** -9)                 # avoid /0
+    codes = fp4_code(wf / (s_local * gscale)[..., None])
+    packed = pack_u4(codes.reshape(*lead, k))
+    return QTensor(packed, s_local, gscale.astype(jnp.float32))
+
+
+def dequantize_fp4(q: QTensor, dtype=jnp.float32) -> jax.Array:
+    vals = fp4_decode(unpack_u4(q.packed))                    # [..., K]
+    *lead, k = vals.shape
+    g = k // q.scales.shape[-1]
+    vals = vals.reshape(*lead, k // g, g) * q.scales[..., None] * q.global_scale
+    return vals.reshape(*lead, k).astype(dtype)
+
+
+def fp4_sim(x: jax.Array, group: int = GROUP) -> jax.Array:
+    """Fake-quantize (quantize+dequantize) along the last axis, same dtype.
+
+    Gradient-transparent (straight-through) so it can sit in train graphs.
+    """
+    q = quantize_fp4(jax.lax.stop_gradient(x), group)
+    dq = dequantize_fp4(q, jnp.float32)
+    xf = x.astype(jnp.float32)
+    return (xf + jax.lax.stop_gradient(dq - xf)).astype(x.dtype)
+
+
+def quant_error(w: jax.Array, group: int = GROUP) -> jax.Array:
+    """Relative Frobenius error of the NVFP4 round-trip (accuracy proxy)."""
+    wf = w.astype(jnp.float32)
+    dq = dequantize_fp4(quantize_fp4(wf, group))
+    return jnp.linalg.norm(dq - wf) / jnp.maximum(jnp.linalg.norm(wf), 1e-20)
+
+
+# --------------------------------------------------------------------------
+# quantized matmul references (the numerics the kernels must match)
+# --------------------------------------------------------------------------
+def matmul_w4a16(x: jax.Array, qw: QTensor) -> jax.Array:
+    """x [M,K] @ dequant(qw) [K,N] with qw quantized along K (stored [N,K])."""
+    w = dequantize_fp4(qw, jnp.float32)                       # [N,K]
+    return (x.astype(jnp.float32) @ w.T).astype(x.dtype)
+
+
+def matmul_w4a4(x: jax.Array, qw: QTensor, group: int = GROUP) -> jax.Array:
+    """NVFP4 W4A4 GEMM simulation: both operands fake-quantized per group-K."""
+    xq = fp4_sim(x.astype(jnp.float32), group)
+    w = dequantize_fp4(qw, jnp.float32)
+    return (xq @ w.T).astype(x.dtype)

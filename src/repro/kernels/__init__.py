@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (NVFP4 quantize +
+W4A4 GEMM) with jnp oracles in ref.py and jit wrappers in ops.py."""

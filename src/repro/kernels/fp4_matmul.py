@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: W4(A4) GEMM with in-VMEM NVFP4 dequantization.
+
+The paper's FP4 GEMM runs on Blackwell FP4 tensor cores.  TPU v5e has no
+FP4 MXU mode, so the TPU-native adaptation keeps FP4 as a *storage* format:
+packed 4-bit weights (+ group-16 E4M3 scales) are streamed HBM→VMEM at
+4.25 bits/weight — a 3.76× reduction in weight traffic vs BF16 — then
+dequantized inside VMEM with pure vector ops (compare-select level decode,
+no gathers) and fed to the MXU as bf16.  In the memory-bound expert-GEMM
+regimes (decode, skinny per-expert batches) this converts directly into
+the latency win the paper obtains from FP4 flops.
+
+Grid (m, n, k), k innermost as the reduction dimension; a VMEM f32
+accumulator tile is zeroed at k==0 and flushed at the final k step.
+Default tiles (128, 256, 512):
+  x tile 128·512·2 = 128 KiB, w tile 256·512/2 = 64 KiB (+16 KiB scales),
+  acc 128·256·4 = 128 KiB — comfortably inside the ~16 MiB VMEM with
+  double buffering, MXU dims all multiples of 128.
+
+``a4=True`` additionally fake-quantizes the activation tile to the E2M1
+grid per group-16 (W4A4 — numerics identical to the paper's NVFP4 GEMM;
+the accuracy benchmarks run through this path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+GROUP = 16
+FP4_MAX = 6.0
+E4M3_MAX = 448.0
+
+
+def _decode_level(code):
+    """E2M1 magnitude from a 4-bit code (bit3=sign, bits0..2=index)."""
+    idx = (code & 7).astype(jnp.float32)
+    # levels: [0, .5, 1, 1.5, 2, 3, 4, 6] == idx/2 for idx<4 else idx-2 (7->6 ok? 7-2=5 != 6)
+    hi = jnp.where(idx == 7.0, 6.0, idx - 2.0)
+    mag = jnp.where(idx < 4.0, 0.5 * idx, hi)
+    sign = 1.0 - 2.0 * ((code >> 3) & 1).astype(jnp.float32)
+    return sign * mag
+
+
+def _fake_quant_a4(x, group):
+    """In-kernel activation NVFP4 fake-quant along K (vector ops only)."""
+    bm, bk = x.shape
+    xg = x.reshape(bm, bk // group, group)
+    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    gs = jnp.maximum(amax / FP4_MAX, 1e-20)       # dynamic per-group scale
+    y = xg / gs
+    mag = jnp.abs(y)
+    idx = jnp.zeros(y.shape, jnp.int32)
+    for mid in (0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0):
+        idx = idx + (mag > mid).astype(jnp.int32)
+    idxf = idx.astype(jnp.float32)
+    lev = jnp.where(idxf < 4.0, 0.5 * idxf,
+                    jnp.where(idxf == 7.0, 6.0, idxf - 2.0))
+    q = jnp.sign(y) * lev * gs
+    return q.reshape(bm, bk)
+
+
+def _matmul_kernel(gscale_ref, x_ref, w_ref, s_ref, o_ref, acc_ref, *,
+                   group: int, a4: bool, n_k: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)               # [bm, bk]
+    if a4:
+        x = _fake_quant_a4(x, group)
+    packed = w_ref[...]                              # [bn, bk/2] u8
+    bn, bk2 = packed.shape
+    lo = _decode_level(packed & 0x0F)                # [bn, bk/2]
+    hi = _decode_level((packed >> 4) & 0x0F)
+    codes = jnp.stack([lo, hi], axis=-1).reshape(bn, bk2 * 2)
+    scales = s_ref[...] * gscale_ref[0, 0]           # [bn, bk/group]
+    w = (codes.reshape(bn, bk2 * 2 // group, group)
+         * scales[..., None]).reshape(bn, bk2 * 2)   # dequant [bn, bk]
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("group", "a4", "block_m", "block_n",
+                                    "block_k", "interpret", "out_dtype"))
+def fp4_matmul_kernel(x: jax.Array, packed: jax.Array, scales: jax.Array,
+                      global_scale: jax.Array, *, group: int = GROUP,
+                      a4: bool = False, block_m: int = 128,
+                      block_n: int = 256, block_k: int = 512,
+                      interpret: bool = False, out_dtype=jnp.float32):
+    """x [M,K] @ dequant(packed,scales) [N,K]^T -> [M,N].
+
+    packed u8 [N,K/2], scales f32(E4M3-valued) [N,K/group], global f32.
+    """
+    m, k = x.shape
+    n = packed.shape[0]
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    assert block_k % (2 * group) == 0
+    grid = (m // block_m, n // block_n, k // block_k)
+    kernel = functools.partial(_matmul_kernel, group=group, a4=a4,
+                               n_k=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_n, block_k // 2), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((block_n, block_k // group),
+                         lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(jnp.asarray(global_scale, jnp.float32).reshape(1, 1), x, packed,
+      scales)

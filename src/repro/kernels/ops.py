@@ -1,0 +1,61 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On TPU backends the kernels compile natively; on CPU (this container) they
+execute in ``interpret=True`` mode, which runs the kernel body in Python —
+the correctness tests sweep shapes/dtypes against :mod:`repro.kernels.ref`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import global_scale_for
+from repro.kernels.fp4_matmul import fp4_matmul_kernel
+from repro.kernels.quantize_fp4 import quantize_fp4_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quantize_fp4(w: jax.Array, global_scale: jax.Array | None = None, *,
+                 group: int = 16, block_n: int = 256, block_k: int = 512,
+                 interpret: bool | None = None
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """NVFP4-quantize ``w [N,K]`` along K. Returns (packed, scales, gscale)."""
+    if global_scale is None:
+        global_scale = global_scale_for(w)
+    interpret = _interpret_default() if interpret is None else interpret
+    packed, scales = quantize_fp4_kernel(
+        w, global_scale, group=group, block_n=block_n, block_k=block_k,
+        interpret=interpret)
+    return packed, scales, jnp.asarray(global_scale, jnp.float32)
+
+
+def fp4_matmul(x: jax.Array, packed: jax.Array, scales: jax.Array,
+               global_scale: jax.Array, *, group: int = 16,
+               a4: bool = False, out_dtype=jnp.float32,
+               block_m: int = 128, block_n: int = 256, block_k: int = 512,
+               interpret: bool | None = None) -> jax.Array:
+    """``x [M,K] @ W^T`` with W stored as packed NVFP4 ``[N,K/2]``."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return fp4_matmul_kernel(
+        x, packed, scales, global_scale, group=group, a4=a4,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret, out_dtype=out_dtype)
+
+
+def fp4_linear(x: jax.Array, w: jax.Array, *, a4: bool = False,
+               group: int = 16, interpret: bool | None = None) -> jax.Array:
+    """Convenience: quantize-then-matmul (the full on-the-fly T + GEMM path).
+
+    x [M,K] bf16 @ w [K,N] bf16 → [M,N] f32 with NVFP4 weight (and
+    optionally activation) numerics.
+    """
+    packed, scales, gs = quantize_fp4(w.swapaxes(0, 1), group=group,
+                                      interpret=interpret)
+    return fp4_matmul(x, packed, scales, gs, group=group, a4=a4,
+                      interpret=interpret)

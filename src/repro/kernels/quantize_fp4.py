@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: on-the-fly NVFP4 (E2M1 + E4M3 group scales) quantization.
+
+This is the paper's "Precision Transformation (T)" stage (§4.3) as a TPU
+kernel: BF16 expert weights resident in HBM are streamed through VMEM in
+``(block_n, block_k)`` tiles, quantized per group of 16 along the
+contraction axis, and written back as packed 4-bit codes + FP8-E4M3-valued
+scales — 4.25 bits/weight of HBM traffic on the way out.  The per-tensor
+``global_scale`` is precomputed at PTQ-calibration time (an input, exactly
+as the paper stores "precomputed scaling factors").
+
+Layout: ``w [N, K]`` (contraction on K) → ``packed u8 [N, K/2]``,
+``scales f32 [N, K/16]``.  Tile sizes default to (256, 512): the tile +
+outputs occupy 256·512·(2+0.5+0.25) ≈ 360 KiB of VMEM, and K blocks are
+multiples of the 128-lane register width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GROUP = 16
+FP4_MAX = 6.0
+INV_FP4_MAX = float(jnp.float32(1.0) / jnp.float32(6.0))
+E4M3_MAX = 448.0
+
+
+def _e4m3_round(x):
+    """RNE onto E4M3 (vector math, no gathers)."""
+    mag = jnp.clip(jnp.abs(x), 0.0, E4M3_MAX)
+    e = jnp.floor(jnp.log2(jnp.maximum(mag, 1e-38)))
+    e = jnp.clip(e, -6.0, 8.0)
+    ulp = jnp.exp2(e - 3.0)
+    q = jnp.round(mag / ulp) * ulp
+    q = jnp.where(mag == 0.0, 0.0, jnp.minimum(q, E4M3_MAX))
+    return jnp.sign(x) * q
+
+
+def _fp4_code(x):
+    """sign·level-index code (uint8 in [0,15]) on the E2M1 grid."""
+    mag = jnp.abs(x)
+    idx = jnp.zeros(x.shape, jnp.int32)
+    for mid in (0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0):
+        idx = idx + (mag > mid).astype(jnp.int32)
+    sign = (x < 0).astype(jnp.int32)
+    return (sign * 8 + idx).astype(jnp.uint8)
+
+
+def _quantize_kernel(gscale_ref, w_ref, packed_ref, scales_ref, *,
+                     group: int):
+    w = w_ref[...].astype(jnp.float32)              # [bn, bk]
+    bn, bk = w.shape
+    gs = gscale_ref[0, 0]
+    wg = w.reshape(bn, bk // group, group)
+    amax = jnp.max(jnp.abs(wg), axis=-1)            # [bn, bk/g]
+    s_local = _e4m3_round(amax * INV_FP4_MAX / gs)  # see core/quant.py note
+    s_local = jnp.maximum(s_local, 2.0 ** -9)
+    codes = _fp4_code(wg / (s_local * gs)[..., None])
+    codes = codes.reshape(bn, bk)
+    pair = codes.reshape(bn, bk // 2, 2)
+    packed_ref[...] = (pair[..., 0] | (pair[..., 1] << 4)).astype(jnp.uint8)
+    scales_ref[...] = s_local
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("group", "block_n", "block_k",
+                                    "interpret"))
+def quantize_fp4_kernel(w: jax.Array, global_scale: jax.Array, *,
+                        group: int = GROUP, block_n: int = 256,
+                        block_k: int = 512, interpret: bool = False):
+    """w [N,K] bf16/f32 → (packed u8 [N,K/2], scales f32 [N,K/group])."""
+    n, k = w.shape
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    assert n % block_n == 0 and k % block_k == 0, (w.shape, block_n, block_k)
+    assert block_k % (2 * group) == 0
+    grid = (n // block_n, k // block_k)
+    kernel = functools.partial(_quantize_kernel, group=group)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_n, block_k), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, block_k // 2), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n, block_k // group), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k // 2), jnp.uint8),
+            jax.ShapeDtypeStruct((n, k // group), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(global_scale, jnp.float32).reshape(1, 1), w)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-exact NVFP4 numerics).
+
+These delegate to :mod:`repro.core.quant` — the same functions that define
+the paper's quantization recipe — so the kernels, the EP-MoE jnp
+simulation path and the accuracy benchmarks all share one numerical
+ground truth.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+def quantize_fp4_ref(w: jax.Array, global_scale: jax.Array,
+                     group: int = 16) -> Tuple[jax.Array, jax.Array]:
+    """w [N,K] -> (packed u8 [N,K/2], scales f32 [N,K/group])."""
+    q = quant.quantize_fp4(w, group, global_scale=global_scale)
+    return q.packed, q.scales
+
+
+def fp4_matmul_ref(x: jax.Array, packed: jax.Array, scales: jax.Array,
+                   global_scale: jax.Array, group: int = 16,
+                   a4: bool = False, out_dtype=jnp.float32) -> jax.Array:
+    """x [M,K] @ dequant(packed [N,K/2], scales [N,K/g])^T -> [M,N]."""
+    q = quant.QTensor(packed, scales, jnp.asarray(global_scale, jnp.float32))
+    w = quant.dequantize_fp4(q, jnp.float32)                  # [N,K]
+    xf = x.astype(jnp.float32)
+    if a4:
+        # dynamic per-group activation fake-quant (amax/6 scale, E2M1 grid)
+        m, k = xf.shape
+        xg = xf.reshape(m, k // group, group)
+        amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+        gs = jnp.maximum(amax / quant.FP4_MAX, 1e-20)
+        xf = (quant.fp4_round(xg / gs) * gs).reshape(m, k)
+    return (xf @ w.T).astype(out_dtype)
+
+
+def dequantize_ref(packed, scales, global_scale, dtype=jnp.float32):
+    q = quant.QTensor(packed, scales, jnp.asarray(global_scale, jnp.float32))
+    return quant.dequantize_fp4(q, dtype)

@@ -1,0 +1,351 @@
+"""HLO-text cost analyzer for the dry-run roofline.
+
+XLA:CPU's ``compiled.cost_analysis()`` visits each ``while`` body once and
+does not scale by trip count, so a scan-over-layers model under-reports
+flops/bytes by ~n_layers.  This analyzer walks the post-optimization HLO
+call graph (the compiled per-device module, SPMD-partitioned shapes),
+multiplying loop bodies by ``known_trip_count`` from the scheduler's
+backend_config, and accounts:
+
+* **flops** — every ``dot`` (2 · prod(out) · prod(contracting dims)),
+  including dots inside fusions / nested loops / conditional branches,
+* **traffic** — per-instruction HBM proxy: output bytes + operand bytes
+  for every materialising op (fusions count boundary IO only; bitcasts,
+  tuples and GTEs are free),
+* **collective bytes** — output-shape bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (per-device shapes),
+  with a per-kind breakdown.
+
+``conditional`` branches take the elementwise max (conservative: the
+ReaLB precision branches have compute ≤ the BF16 branch).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+_OP_RE = re.compile(r" ([a-z][a-z0-9\-]*)\(")
+
+_SKIP_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while",
+    "conditional", "call", "opt-barrier", "domain", "custom-call",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    out_bytes: int
+    out_elems: int
+    out_dims: Tuple[int, ...]
+    operands: List[str]
+    attrs: str
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    traffic: float = 0.0
+    coll: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.traffic += o.traffic
+        self.coll += o.coll
+        for k, v in o.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(self.flops * m, self.traffic * m, self.coll * m,
+                    {k: v * m for k, v in self.coll_by_kind.items()})
+
+    def emax(self, o: "Cost") -> "Cost":
+        kinds = set(self.coll_by_kind) | set(o.coll_by_kind)
+        return Cost(max(self.flops, o.flops), max(self.traffic, o.traffic),
+                    max(self.coll, o.coll),
+                    {k: max(self.coll_by_kind.get(k, 0.0),
+                            o.coll_by_kind.get(k, 0.0)) for k in kinds})
+
+
+def _shape_info(text: str) -> Tuple[int, int, Tuple[int, ...]]:
+    """(bytes, elems, dims-of-first-shape) of all shapes in `text`."""
+    total_b = 0
+    total_e = 0
+    first_dims: Tuple[int, ...] = ()
+    for i, m in enumerate(_SHAPE_RE.finditer(text)):
+        dims = tuple(int(d) for d in m.group(2).split(",")) \
+            if m.group(2) else ()
+        n = 1
+        for d in dims:
+            n *= d
+        total_b += n * _DTYPE_BYTES[m.group(1)]
+        total_e += n
+        if i == 0:
+            first_dims = dims
+    return total_b, total_e, first_dims
+
+
+def _balanced(s: str, start: int) -> Tuple[str, int]:
+    """Return the contents of the paren group starting at s[start]=='('."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return s[start + 1:i], i + 1
+    return s[start + 1:], len(s)
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Dict[str, Instr]], str]:
+    """-> ({computation: {instr_name: Instr}}, entry_name)."""
+    comps: Dict[str, Dict[str, Instr]] = {}
+    order: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry = ""
+    for raw in hlo.splitlines():
+        if not raw:
+            continue
+        if not raw[0].isspace():
+            m = re.match(r"(ENTRY\s+)?%([\w.\-]+)\s*\(.*\{\s*$", raw)
+            if m:
+                cur = m.group(2)
+                comps[cur] = {}
+                order[cur] = []
+                if m.group(1):
+                    entry = cur
+            elif raw.startswith("}"):
+                cur = None
+            continue
+        if cur is None or " = " not in raw:
+            continue
+        s = raw.strip()
+        if s.startswith("ROOT "):
+            s = s[5:]
+        if not s.startswith("%"):
+            continue
+        name, rhs = s.split(" = ", 1)
+        name = name.strip().lstrip("%")
+        om = _OP_RE.search(rhs)
+        if om is None:
+            continue
+        op = om.group(1)
+        shape_txt = rhs[:om.start()]
+        out_b, out_e, out_dims = _shape_info(shape_txt)
+        args, end = _balanced(rhs, om.end() - 1)
+        operands = re.findall(r"%([\w.\-]+)", args)
+        attrs = rhs[end:]
+        comps[cur][name] = Instr(name, op, out_b, out_e, out_dims,
+                                 operands, attrs)
+    return comps, entry
+
+
+def _dot_flops(ins: Instr, defs: Dict[str, Instr]) -> float:
+    out_elems = ins.out_elems
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    k = 1
+    if m and ins.operands:
+        lhs = defs.get(ins.operands[0])
+        if lhs is not None:
+            for d in filter(None, m.group(1).split(",")):
+                di = int(d)
+                if di < len(lhs.out_dims):
+                    k *= lhs.out_dims[di]
+    return 2.0 * out_elems * k
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":\s*\{"n":"(\d+)"\}')
+
+
+def _called(attrs: str, key: str) -> List[str]:
+    m = re.search(key + r"=%([\w.\-]+)", attrs)
+    return [m.group(1)] if m else []
+
+
+def analyze(hlo: str) -> Dict[str, float]:
+    comps, entry = parse_module(hlo)
+    memo: Dict[str, Cost] = {}
+
+    def comp_cost(cname: str) -> Cost:
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = Cost()  # cycle guard
+        defs = comps.get(cname, {})
+        c = Cost()
+        for ins in defs.values():
+            if ins.op == "while":
+                trip = 1
+                tm = _TRIP_RE.search(ins.attrs)
+                if tm:
+                    trip = int(tm.group(1))
+                for key in ("body", "condition"):
+                    for callee in _called(ins.attrs, key):
+                        c += comp_cost(callee).scaled(trip)
+            elif ins.op == "conditional":
+                branches: List[str] = []
+                bm = re.search(r"branch_computations=\{([^}]*)\}", ins.attrs)
+                if bm:
+                    branches = re.findall(r"%([\w.\-]+)", bm.group(1))
+                else:
+                    branches = (_called(ins.attrs, "true_computation")
+                                + _called(ins.attrs, "false_computation"))
+                if branches:
+                    bc = comp_cost(branches[0])
+                    for b in branches[1:]:
+                        bc = bc.emax(comp_cost(b))
+                    c += bc
+            elif ins.op in ("fusion", "call", "custom-call", "map",
+                            "reduce", "reduce-window", "sort", "scatter",
+                            "select-and-scatter"):
+                for callee in (_called(ins.attrs, "calls")
+                               + _called(ins.attrs, "to_apply")):
+                    sub = comp_cost(callee)
+                    c.flops += sub.flops        # dots inside fusions
+                    c.coll += sub.coll
+                    for k, v in sub.coll_by_kind.items():
+                        c.coll_by_kind[k] = c.coll_by_kind.get(k, 0) + v
+                io = ins.out_bytes + sum(
+                    defs[o].out_bytes for o in ins.operands if o in defs)
+                c.traffic += io
+            elif ins.op == "dot":
+                c.flops += _dot_flops(ins, defs)
+                c.traffic += ins.out_bytes + sum(
+                    defs[o].out_bytes for o in ins.operands if o in defs)
+            elif ins.op in ("dynamic-slice", "gather"):
+                # reads only the extracted region (+ writes it)
+                c.traffic += 2 * ins.out_bytes
+            elif ins.op in ("dynamic-update-slice", "scatter"):
+                # XLA updates these in place inside loop bodies (aliased
+                # buffers): traffic = the update region, not the operand
+                upd = (defs[ins.operands[1]].out_bytes
+                       if len(ins.operands) > 1 and ins.operands[1] in defs
+                       else ins.out_bytes)
+                c.traffic += 2 * upd
+            elif any(ins.op.startswith(k) for k in _COLLECTIVES):
+                kind = next(k for k in _COLLECTIVES if ins.op.startswith(k))
+                if ins.op.endswith("-done"):
+                    continue  # counted at -start
+                b = max(ins.out_bytes, sum(
+                    defs[o].out_bytes for o in ins.operands if o in defs))
+                c.coll += b
+                c.coll_by_kind[kind] = c.coll_by_kind.get(kind, 0) + b
+                c.traffic += ins.out_bytes
+            elif ins.op in _SKIP_TRAFFIC:
+                continue
+            else:
+                c.traffic += ins.out_bytes + sum(
+                    defs[o].out_bytes for o in ins.operands if o in defs)
+        memo[cname] = c
+        return c
+
+    total = comp_cost(entry)
+    return {
+        "flops": total.flops,
+        "traffic_bytes": total.traffic,
+        "collective_bytes": total.coll,
+        "collective_by_kind": dict(sorted(total.coll_by_kind.items())),
+    }
+
+
+def top_collectives(hlo: str, n: int = 12) -> List[Dict]:
+    """The n largest collective instructions (with loop multipliers) —
+    the §Perf iteration starts from this list."""
+    comps, entry = parse_module(hlo)
+    # compute multiplier per computation via one pass from entry
+    mult: Dict[str, float] = {entry: 1.0}
+    stack = [entry]
+    while stack:
+        cname = stack.pop()
+        m = mult[cname]
+        for ins in comps.get(cname, {}).values():
+            trip = 1
+            tm = _TRIP_RE.search(ins.attrs)
+            if tm:
+                trip = int(tm.group(1))
+            for key in ("body", "condition", "calls", "to_apply",
+                        "true_computation", "false_computation"):
+                for callee in _called(ins.attrs, key):
+                    factor = m * (trip if ins.op == "while" else 1)
+                    if mult.get(callee, 0) < factor:
+                        mult[callee] = factor
+                        stack.append(callee)
+            bm = re.search(r"branch_computations=\{([^}]*)\}", ins.attrs)
+            if bm:
+                for callee in re.findall(r"%([\w.\-]+)", bm.group(1)):
+                    if mult.get(callee, 0) < m:
+                        mult[callee] = m
+                        stack.append(callee)
+    out = []
+    for cname, defs in comps.items():
+        for ins in defs.values():
+            if any(ins.op.startswith(k) for k in _COLLECTIVES) \
+                    and not ins.op.endswith("-done"):
+                b = max(ins.out_bytes, sum(
+                    defs[o].out_bytes for o in ins.operands if o in defs))
+                meta = re.search(r'op_name="([^"]*)"', ins.attrs)
+                out.append({
+                    "op": ins.op, "bytes": b,
+                    "mult": mult.get(cname, 1.0),
+                    "total": b * mult.get(cname, 1.0),
+                    "where": (meta.group(1) if meta else cname)[:140],
+                })
+    out.sort(key=lambda r: -r["total"])
+    return out[:n]
+
+
+def top_traffic(hlo: str, n: int = 15) -> List[Dict]:
+    """The n largest memory-traffic instructions (with loop multipliers)."""
+    comps, entry = parse_module(hlo)
+    mult: Dict[str, float] = {entry: 1.0}
+    stack = [entry]
+    while stack:
+        cname = stack.pop()
+        m = mult[cname]
+        for ins in comps.get(cname, {}).values():
+            trip = 1
+            tm = _TRIP_RE.search(ins.attrs)
+            if tm:
+                trip = int(tm.group(1))
+            for key in ("body", "condition", "calls", "to_apply",
+                        "true_computation", "false_computation"):
+                for callee in _called(ins.attrs, key):
+                    factor = m * (trip if ins.op == "while" else 1)
+                    if mult.get(callee, 0) < factor:
+                        mult[callee] = factor
+                        stack.append(callee)
+    rows = []
+    for cname, defs in comps.items():
+        for ins in defs.values():
+            if ins.op in _SKIP_TRAFFIC or ins.op == "dot":
+                if ins.op != "dot":
+                    continue
+            io = ins.out_bytes + sum(
+                defs[o].out_bytes for o in ins.operands if o in defs)
+            meta = re.search(r'op_name="([^"]*)"', ins.attrs)
+            rows.append({"op": ins.op, "bytes": io,
+                         "mult": mult.get(cname, 1.0),
+                         "total": io * mult.get(cname, 1.0),
+                         "where": (meta.group(1) if meta else cname)[-130:]})
+    rows.sort(key=lambda r: -r["total"])
+    return rows[:n]

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (not a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+initialisation and only then builds meshes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.configs.base import MeshConfig, MULTI_POD_MESH, SINGLE_POD_MESH
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assignment's production mesh: 16×16 single-pod (256 chips) or
+    2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axis_names)
+
+
+def mesh_for(kind: str):
+    if kind in ("single", "single_pod"):
+        return make_production_mesh(multi_pod=False)
+    if kind in ("multi", "multi_pod"):
+        return make_production_mesh(multi_pod=True)
+    if kind == "host":  # whatever the host actually has (tests/examples)
+        n = len(jax.devices())
+        return jax.make_mesh((1, n), ("data", "model"))
+    raise ValueError(f"unknown mesh kind {kind!r}")
+
+
+def mesh_config_for(kind: str) -> MeshConfig:
+    return MULTI_POD_MESH if kind in ("multi", "multi_pod") \
+        else SINGLE_POD_MESH

@@ -1,0 +1,50 @@
+"""Roofline terms + hardware constants (TPU v5e).
+
+TPU v5e constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.  Terms are reported in seconds-per-step using per-device quantities:
+
+    compute    = flops_per_device / PEAK_FLOPS
+    memory     = bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+
+``collective_bytes`` is not in ``cost_analysis()`` — we parse the
+post-SPMD-partitioning HLO (``compiled.as_text()``, per-device shapes) and
+sum operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute ops.  Ops inside loop bodies (``lax.scan`` over
+layers) are multiplied by the trip count of the enclosing while loop,
+recovered from the loop condition constant.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link (assignment constant)
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> Dict[str, float]:
+    comp = flops_per_dev / PEAK_FLOPS
+    mem = bytes_per_dev / HBM_BW
+    coll = coll_bytes_per_dev / ICI_BW
+    dominant = max(("compute", comp), ("memory", mem),
+                   ("collective", coll), key=lambda kv: kv[1])[0]
+    total = max(comp, mem, coll)
+    return {
+        "compute_s": comp, "memory_s": mem, "collective_s": coll,
+        "dominant": dominant,
+        "bound_s": total,
+        "roofline_fraction": (comp / total) if total > 0 else 0.0,
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D forward(+backward) reference flops (global)."""
+    n = cfg.active_param_count()
+    if shape.kind == "decode":
+        tokens = shape.global_batch          # one token per sequence
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    mult = 3.0 if shape.kind == "train" else 1.0   # fwd + 2x bwd
+    return 2.0 * n * tokens * mult

@@ -1,0 +1,146 @@
+"""Step functions (train / prefill / decode) + abstract input specs.
+
+``input_specs(cfg, shape, mesh)`` returns ShapeDtypeStruct stand-ins for
+every model input — weak-type-correct, sharded, zero device allocation —
+which is what both the multi-pod dry-run and the roofline analysis lower
+against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ModelConfig, ReaLBConfig, ShapeConfig,
+                                TrainConfig)
+from repro.core import ep_moe
+from repro.models import transformer as tf
+from repro.models.common import named_sharding, use_mesh
+from repro.optim import adamw
+
+Tree = Any
+
+
+def _sds(shape, dtype, axes, mesh):
+    sh = named_sharding(shape, axes, mesh) if mesh is not None else None
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype), sharding=sh)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Dict[str, Any]:
+    """Abstract input batch for one (arch × shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        out = {
+            "tokens": _sds((b, 1), "int32", ("batch", None), mesh),
+            "pos": _sds((b,), "int32", ("batch",), mesh),
+            "modality": _sds((b, 1), "bool", ("batch", None), mesh),
+        }
+        return out
+    out = {
+        "tokens": _sds((b, s), "int32", ("batch", "seq"), mesh),
+        "modality": _sds((b, s), "bool", ("batch", "seq"), mesh),
+    }
+    if shape.kind == "train":
+        out["labels"] = _sds((b, s), "int32", ("batch", "seq"), mesh)
+    if cfg.family == "vlm":
+        out["vision_embeds"] = _sds((b, cfg.n_vision_tokens, cfg.d_model),
+                                    cfg.param_dtype, ("batch", None, None),
+                                    mesh)
+    if cfg.is_encdec:
+        out["enc_embeds"] = _sds((b, cfg.enc_seq_len, cfg.d_model),
+                                 cfg.param_dtype, ("batch", None, None),
+                                 mesh)
+    return out
+
+
+def m_state_spec(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    groups, ep = ep_moe.moe_state_shape(mesh, shape.global_batch)
+    axes = (None, "model") if groups == 1 else ("batch", "model")
+    return _sds((groups, ep), "float32", axes, mesh)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Dict[str, Any]:
+    """All abstract inputs for the cell's step function."""
+    with use_mesh(mesh):
+        specs: Dict[str, Any] = {
+            "params": tf.abstract_model(cfg),
+            "m_state": m_state_spec(cfg, shape, mesh),
+            "batch": batch_specs(cfg, shape, mesh),
+        }
+        if shape.kind == "decode":
+            specs["cache"] = tf.abstract_cache(cfg, shape.global_batch,
+                                               shape.seq_len)
+        if shape.kind == "train":
+            specs["opt_state"] = adamw.abstract_opt_state(
+                specs["params"], TrainConfig())
+    return specs
+
+
+# --------------------------------------------------------------------------
+# step functions (pure; cfg/rcfg/tcfg closed over statically)
+# --------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, rcfg: ReaLBConfig, tcfg: TrainConfig):
+    def train_step(params, opt_state, m_state, batch):
+        (loss, (m_new, metrics)), grads = jax.value_and_grad(
+            tf.train_loss, has_aux=True)(params, cfg, rcfg, batch, m_state)
+        params, opt_state, opt_metrics = adamw.adamw_update(
+            params, grads, opt_state, tcfg)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return params, opt_state, m_new, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, rcfg: ReaLBConfig,
+                      cache_len: int = 0):
+    def prefill_step(params, m_state, batch):
+        res = tf.prefill_forward(params, cfg, rcfg, batch, m_state,
+                                 cache_len=cache_len)
+        return res.logits, res.cache, res.m_state
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, rcfg: ReaLBConfig):
+    def serve_step(params, cache, m_state, batch):
+        res = tf.decode_forward(params, cfg, rcfg, batch, cache, m_state)
+        return res.logits, res.cache, res.m_state
+
+    return serve_step
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, rcfg: ReaLBConfig,
+               tcfg: Optional[TrainConfig] = None):
+    """(step_fn, example_args_builder) for a cell; args order is fixed."""
+    tcfg = tcfg or TrainConfig()
+    if shape.kind == "train":
+        step = make_train_step(cfg, rcfg, tcfg)
+        arg_names = ("params", "opt_state", "m_state", "batch")
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, rcfg, cache_len=shape.seq_len)
+        arg_names = ("params", "m_state", "batch")
+    else:
+        step = make_serve_step(cfg, rcfg)
+        arg_names = ("params", "cache", "m_state", "batch")
+    return step, arg_names
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               rcfg: Optional[ReaLBConfig] = None,
+               tcfg: Optional[TrainConfig] = None,
+               donate: bool = True):
+    """jit-lower one (arch × shape × mesh) cell against abstract inputs."""
+    rcfg = rcfg or ReaLBConfig()
+    step, arg_names = build_step(cfg, shape, rcfg, tcfg)
+    specs = input_specs(cfg, shape, mesh)
+    args = [specs[n] for n in arg_names]
+    donate_argnums = tuple(i for i, n in enumerate(arg_names)
+                           if donate and n in ("params", "opt_state",
+                                               "cache"))
+    with use_mesh(mesh):
+        jitted = jax.jit(step, donate_argnums=donate_argnums)
+        lowered = jitted.lower(*args)
+    return lowered

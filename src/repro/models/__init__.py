@@ -1,0 +1,5 @@
+"""Model zoo. Import submodules explicitly, e.g.
+``from repro.models import transformer`` — the package init stays empty to
+avoid import cycles with :mod:`repro.core` (whose EP MoE is a layer inside
+the transformer stack).
+"""

@@ -1,0 +1,552 @@
+"""Attention variants: GQA/MQA, MLA (latent), cross-attention; full + cached decode.
+
+All functions are pure; parameters are declared via :class:`repro.models.common.P`
+and applied functionally.  Sharding is guided by ``logical_constraint`` —
+heads over "model" during attention, sequence over "model" in the residual
+stream (Megatron-style SP↔TP transitions inserted by GSPMD).
+
+Long sequences use an online-softmax KV-chunked attention (flash-attention
+recurrence expressed with ``lax.scan``) so score matrices never exceed
+``[B,H,S,chunk]``; the dense path is kept for short sequences where XLA
+fuses it best.
+
+Decode uses a sequence-sharded KV cache ``[B, S, K, D]`` (logical axes
+batch/kv_seq/kv_heads/None): each shard computes partial attention over its
+sequence slice and GSPMD combines the softmax reductions across shards
+(flash-decode style).
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import P, apply_rope, logical_constraint, rms_norm
+
+Params = Dict[str, jax.Array]
+
+_DENSE_MAX_KV = 2048      # kv length above which the chunked path is used
+_KV_CHUNK = 1024
+
+# §Perf A/B switch: REPRO_ATTN_BASELINE=1 restores the paper-faithful-but-
+# naive baseline (f32 attention math, whole-cache select updates, no layout
+# pinning) so before/after roofline terms are measured on one codebase.
+_BASELINE = os.environ.get("REPRO_ATTN_BASELINE") == "1"
+
+
+# --------------------------------------------------------------------------
+# parameter declarations
+# --------------------------------------------------------------------------
+def gqa_spec(cfg: ModelConfig, cross: bool = False) -> Dict[str, P]:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    spec = {
+        "wq": P((d, h, hd), ("embed", "heads", None)),
+        "wk": P((d, k, hd), ("embed", "kv_heads", None)),
+        "wv": P((d, k, hd), ("embed", "kv_heads", None)),
+        "wo": P((h, hd, d), ("heads", None, "embed"),
+                scale=1.0 / (2 * max(cfg.n_layers, 1)) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = P((h, hd), ("heads", None), init="zeros")
+        spec["bk"] = P((k, hd), ("kv_heads", None), init="zeros")
+        spec["bv"] = P((k, hd), ("kv_heads", None), init="zeros")
+    return spec
+
+
+def mla_spec(cfg: ModelConfig) -> Dict[str, P]:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": P((d, m.q_lora_rank), ("embed", "rank")),
+        "q_norm": P((m.q_lora_rank,), ("rank",), init="zeros"),
+        "wq_b": P((m.q_lora_rank, h, qk), ("rank", "heads", None)),
+        "wkv_a": P((d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed", "rank")),
+        "kv_norm": P((m.kv_lora_rank,), ("rank",), init="zeros"),
+        "wk_b": P((m.kv_lora_rank, h, m.qk_nope_head_dim), ("rank", "heads", None)),
+        "wv_b": P((m.kv_lora_rank, h, m.v_head_dim), ("rank", "heads", None)),
+        "wo": P((h, m.v_head_dim, d), ("heads", None, "embed"),
+                scale=1.0 / (2 * max(cfg.n_layers, 1)) ** 0.5),
+    }
+
+
+def attn_spec(cfg: ModelConfig, kind: str = "attn") -> Dict[str, P]:
+    if cfg.mla is not None and kind == "attn":
+        return mla_spec(cfg)
+    return gqa_spec(cfg, cross=(kind == "cross"))
+
+
+# --------------------------------------------------------------------------
+# core attention math
+# --------------------------------------------------------------------------
+def _dense_attention(q, k, v, scale, *, causal, q_offset, kv_valid):
+    """Short-KV attention (train/prefill ≤2k KV, cross-attention).
+
+    Repeated-KV MHA layout (same rationale as the chunked path): one
+    `heads` dim that shards over "model" (fallback: sequence parallelism),
+    bf16 dots with f32 accumulation.
+    """
+    if _BASELINE:
+        return _dense_attention_v0(q, k, v, scale, causal=causal,
+                                   q_offset=q_offset, kv_valid=kv_valid)
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    odt = q.dtype
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qh = q.transpose(0, 2, 1, 3)                           # [B,H,S,D]
+    scores = jnp.einsum("bhsd,bthd->bhst", qh, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = logical_constraint(scores, ("batch", "heads", "seq", None))
+    mask = None
+    if causal:
+        q_pos = jnp.arange(s)[:, None] + q_offset
+        mask = (jnp.arange(t)[None, :] <= q_pos)[None, None]   # [1,1,S,T]
+    if kv_valid is not None:
+        vm = (jnp.arange(t)[None, :] < kv_valid[:, None])      # [B,T]
+        vm = vm[:, None, None, :]
+        mask = vm if mask is None else (mask & vm)
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bhsd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = logical_constraint(out, ("batch", "heads", "seq", None))
+    return out.transpose(0, 2, 1, 3).astype(odt)
+
+
+def _decode_flash(q, k, v, scale, *, kv_valid):
+    """One-token decode against a long sequence-sharded cache: grouped
+    [kh,g] scores stay sharded on the cache's kv_seq axis; GSPMD inserts
+    the tiny per-shard max/sum LSE all-reduces (flash-decode)."""
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qf = q.reshape(b, s, kh, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = logical_constraint(scores,
+                                ("batch", None, None, None, "kv_seq"))
+    if kv_valid is not None:
+        vm = (jnp.arange(t)[None, :] < kv_valid[:, None])
+        scores = jnp.where(vm[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, h, v.shape[-1]).astype(q.dtype)
+
+
+def _dense_attention_v0(q, k, v, scale, *, causal, q_offset, kv_valid):
+    """Baseline (pre-§Perf) dense attention: f32 math, grouped layout."""
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    odt = q.dtype
+    q, k, v = (x.astype(jnp.float32) for x in (q, k, v))
+    qf = q.reshape(b, s, kh, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = None
+    if causal:
+        q_pos = jnp.arange(s)[:, None] + q_offset
+        mask = (jnp.arange(t)[None, :] <= q_pos)[None, None, None]
+    if kv_valid is not None:
+        vm = (jnp.arange(t)[None, :] < kv_valid[:, None])
+        vm = vm[:, None, None, None, :]
+        mask = vm if mask is None else (mask & vm)
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, h, v.shape[-1]).astype(odt)
+
+
+def _chunked_attention(q, k, v, scale, *, causal, q_offset, kv_valid,
+                       chunk=_KV_CHUNK):
+    """Online-softmax attention scanning KV chunks.
+
+    MHA formulation: KV is broadcast to the full head count (cheap at
+    train/prefill sizes) so every per-step tensor carries a single `heads`
+    dim that shards cleanly over "model" for all head counts divisible by
+    the axis; the logical resolver falls back to sequence parallelism for
+    the 20/40-head archs.  One stable layout end-to-end — no GSPMD
+    "involuntary full rematerialization" resharding inside the scan.
+
+    Two scan phases: chunks entirely below the causal diagonal run a
+    mask-free step (no score-sized select), only the diagonal/ragged tail
+    pays for masking; the softmax scale is folded into Q once (q-sized)
+    instead of scaling every score chunk.
+    """
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    odt = q.dtype
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    n_chunks = -(-t // chunk)
+    t_pad = n_chunks * chunk
+    if t_pad != t:
+        pad = [(0, 0), (0, t_pad - t), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    _axes = ("batch", "heads", "seq")
+    _lc = logical_constraint
+    k = _lc(k, ("batch", None, "heads", None))
+    v = _lc(v, ("batch", None, "heads", None))
+    kc = k.reshape(b, n_chunks, chunk, h, -1).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, -1).transpose(1, 0, 3, 2, 4)
+    # fold the softmax scale into q: one [B,H,S,D] multiply instead of a
+    # score-sized multiply per chunk
+    qh = (q.transpose(0, 2, 1, 3).astype(jnp.float32)
+          * jnp.float32(scale)).astype(q.dtype)
+    q_pos = jnp.arange(s)[:, None] + q_offset            # [S,1]
+
+    def make_step(masked: bool):
+        def step(carry, inp):
+            m_prev, l_prev, acc = carry
+            ci, k_i, v_i = inp                            # [B,H,C,D]
+            scores = jnp.einsum("bhsd,bhcd->bhsc", qh, k_i,
+                                preferred_element_type=jnp.float32)
+            scores = _lc(scores, _axes + (None,))
+            if masked:
+                kv_pos = ci * chunk + jnp.arange(chunk)   # [C]
+                mask = (kv_pos[None, :] < t)              # [1,C] padding
+                if causal:
+                    mask = mask & (kv_pos[None, :] <= q_pos)
+                mask = jnp.broadcast_to(mask[None, None],
+                                        scores.shape[:2] + mask.shape[-2:])
+                if kv_valid is not None:
+                    vm = (kv_pos[None, :] < kv_valid[:, None])
+                    mask = mask & vm[:, None, None, :]
+                scores = jnp.where(mask, scores, -1e30)
+            m_cur = jnp.max(scores, axis=-1)              # [B,H,S]
+            m_new = jnp.maximum(m_prev, m_cur)
+            alpha = jnp.exp(m_prev - m_new)
+            # masked lanes sit at -1e30: exp underflows to exactly 0, so no
+            # second mask select is needed (one fewer score-sized pass)
+            p = jnp.exp(scores - m_new[..., None])
+            l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhsc,bhcd->bhsd", p.astype(v_i.dtype), v_i,
+                            preferred_element_type=jnp.float32)
+            acc_new = _lc(acc * alpha[..., None] + pv, _axes + (None,))
+            return (m_new, l_new, acc_new), None
+        return step
+
+    dv = v.shape[-1]
+    m0 = _lc(jnp.full((b, h, s), -jnp.inf, jnp.float32), _axes)
+    l0 = _lc(jnp.zeros((b, h, s), jnp.float32), _axes)
+    a0 = _lc(jnp.zeros((b, h, s, dv), jnp.float32), _axes + (None,))
+    carry = (m0, l0, a0)
+    # phase 1: chunks entirely below the causal diagonal — mask-free
+    n_free = 0
+    if causal and kv_valid is None and t_pad == t:
+        n_free = min(int(q_offset) // chunk, n_chunks)
+    if n_free:
+        carry, _ = jax.lax.scan(
+            make_step(False), carry,
+            (jnp.arange(n_free), kc[:n_free], vc[:n_free]))
+    if n_free < n_chunks:
+        carry, _ = jax.lax.scan(
+            make_step(True), carry,
+            (jnp.arange(n_free, n_chunks), kc[n_free:], vc[n_free:]))
+    m_f, l_f, acc = carry
+    out = acc / jnp.maximum(l_f[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(odt)          # [B,S,H,D]
+
+
+def _chunked_attention_v0(q, k, v, scale, *, causal, q_offset, kv_valid,
+                          chunk=_KV_CHUNK):
+    """Baseline (pre-§Perf) chunked attention: f32 math, grouped [kh,g]
+    score layout, no layout pinning. Kept for the A/B measurements."""
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    odt = q.dtype
+    q, k, v = (x.astype(jnp.float32) for x in (q, k, v))
+    n_chunks = -(-t // chunk)
+    t_pad = n_chunks * chunk
+    if t_pad != t:
+        pad = [(0, 0), (0, t_pad - t), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    kc = k.reshape(b, n_chunks, chunk, kh, -1).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, kh, -1).transpose(1, 0, 2, 3, 4)
+    qf = q.reshape(b, s, kh, g, d)
+    q_pos = jnp.arange(s)[:, None] + q_offset
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        ci, k_i, v_i = inp
+        t0 = ci * chunk
+        scores = jnp.einsum("bskgd,btkd->bkgst", qf, k_i,
+                            preferred_element_type=jnp.float32) * scale
+        kv_pos = t0 + jnp.arange(chunk)
+        mask = (kv_pos[None, :] < t)
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos)
+        mask = jnp.broadcast_to(mask[None, None, None],
+                                scores.shape[:3] + mask.shape[-2:])
+        if kv_valid is not None:
+            vm = (kv_pos[None, :] < kv_valid[:, None])
+            mask = mask & vm[:, None, None, None, :]
+        scores = jnp.where(mask, scores, -1e30)
+        m_cur = jnp.max(scores, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgsc,bckd->bkgsd", p, v_i,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    dv = v.shape[-1]
+    m0 = jnp.full((b, kh, g, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, s, dv), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l_f[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, dv).astype(odt)
+
+
+_Q_BLOCK = 4096
+
+
+def scaled_attention(q, k, v, scale, *, causal=True, q_offset=0,
+                     kv_valid=None):
+    """Dispatch: one-token decode → flash-decode against the seq-sharded
+    cache; short KV → dense; long causal sequences → q-block truncation
+    (each q block attends only its own KV prefix — block-level causal
+    skipping, ~2× less score traffic/flops at 32k) over the chunked
+    online-softmax inner loop."""
+    if q.shape[1] <= 8 and k.shape[1] > _DENSE_MAX_KV and not _BASELINE:
+        return _decode_flash(q, k, v, scale, kv_valid=kv_valid)
+    if k.shape[1] <= _DENSE_MAX_KV:
+        return _dense_attention(q, k, v, scale, causal=causal,
+                                q_offset=q_offset, kv_valid=kv_valid)
+    if _BASELINE:
+        return _chunked_attention_v0(q, k, v, scale, causal=causal,
+                                     q_offset=q_offset, kv_valid=kv_valid)
+    s = q.shape[1]
+    qb = _Q_BLOCK if s % _Q_BLOCK == 0 else (
+        s // 2 if s % 2 == 0 and s > _DENSE_MAX_KV else 0)
+    if causal and s == k.shape[1] and q_offset == 0 and qb and s > qb:
+        outs = []
+        for j in range(s // qb):
+            q_j = q[:, j * qb:(j + 1) * qb]
+            kv_end = (j + 1) * qb
+            if kv_end <= _DENSE_MAX_KV:
+                outs.append(_dense_attention(
+                    q_j, k[:, :kv_end], v[:, :kv_end], scale, causal=True,
+                    q_offset=j * qb, kv_valid=kv_valid))
+            else:
+                outs.append(_chunked_attention(
+                    q_j, k[:, :kv_end], v[:, :kv_end], scale, causal=True,
+                    q_offset=j * qb, kv_valid=kv_valid))
+        return jnp.concatenate(outs, axis=1)
+    return _chunked_attention(q, k, v, scale, causal=causal,
+                              q_offset=q_offset, kv_valid=kv_valid)
+
+
+def _project_qkv(p: Params, x: jax.Array, xkv: jax.Array, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dke->btke", xkv, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dke->btke", xkv, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = logical_constraint(q, ("batch", None, "heads", None))
+    k = logical_constraint(k, ("batch", None, "kv_heads", None))
+    v = logical_constraint(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+# --------------------------------------------------------------------------
+# GQA self-attention
+# --------------------------------------------------------------------------
+def gqa_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                positions: jax.Array, causal: bool = True,
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full (train/prefill) self-attention. Returns (out, kv)."""
+    q, k, v = _project_qkv(p, x, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = scaled_attention(q, k, v, cfg.head_dim ** -0.5, causal=causal)
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+    return logical_constraint(out, ("batch", "seq", None)), {"k": k, "v": v}
+
+
+def gqa_decode(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
+               cfg: ModelConfig, *, pos: jax.Array
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. x:[B,1,D]; cache k/v:[B,S,K,D] seq-sharded; pos:[B]."""
+    q, k_new, v_new = _project_qkv(p, x, x, cfg)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+
+    k_cache = _scatter_kv(cache["k"], k_new, pos)
+    v_cache = _scatter_kv(cache["v"], v_new, pos)
+    out = scaled_attention(q, k_cache, v_cache, cfg.head_dim ** -0.5,
+                           causal=False, kv_valid=pos + 1)
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+    out = logical_constraint(out, ("batch", None, None))
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def _scatter_kv(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write new:[B,1,K,D] into cache:[B,S,K,D] at per-example pos:[B].
+
+    Scatter (not a whole-cache select): with the cache argument donated,
+    XLA updates the B affected rows in place — O(B·K·D) traffic instead of
+    O(B·S·K·D) per layer per step.
+    """
+    if _BASELINE:
+        sel = (jnp.arange(cache.shape[1])[None, :]
+               == pos[:, None])[:, :, None, None]
+        out = jnp.where(sel, new.astype(cache.dtype), cache)
+    else:
+        out = cache.at[jnp.arange(cache.shape[0]), pos].set(
+            new[:, 0].astype(cache.dtype))
+    return logical_constraint(out, ("batch", "kv_seq", "kv_heads", None))
+
+
+# --------------------------------------------------------------------------
+# cross-attention (VLM / enc-dec): kv from a fixed memory
+# --------------------------------------------------------------------------
+def cross_forward(p: Params, x: jax.Array, memory: jax.Array,
+                  cfg: ModelConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    q, k, v = _project_qkv(p, x, memory.astype(x.dtype), cfg)  # no rope
+    out = scaled_attention(q, k, v, cfg.head_dim ** -0.5, causal=False)
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+    return logical_constraint(out, ("batch", "seq", None)), {"k": k, "v": v}
+
+
+def cross_decode(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
+                 cfg: ModelConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Decode-time cross-attention against prefill-cached memory KV."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+    q = logical_constraint(q, ("batch", None, "heads", None))
+    out = scaled_attention(q, cache["k"].astype(x.dtype),
+                           cache["v"].astype(x.dtype),
+                           cfg.head_dim ** -0.5, causal=False)
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+    return logical_constraint(out, ("batch", None, None)), cache
+
+
+# --------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# --------------------------------------------------------------------------
+def _mla_qkv(p: Params, x: jax.Array, latent: jax.Array, k_rope: jax.Array,
+             cfg: ModelConfig, q_positions: jax.Array):
+    """Project q from x and expand k/v from (latent, k_rope)."""
+    m = cfg.mla
+    dtype = x.dtype
+    qa = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(dtype)),
+                  p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhe->bshe", qa, p["wq_b"].astype(dtype))
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, q_positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q = logical_constraint(q, ("batch", None, "heads", None))
+
+    k_nope = jnp.einsum("btr,rhe->bthe", latent, p["wk_b"].astype(dtype))
+    v = jnp.einsum("btr,rhe->bthe", latent, p["wv_b"].astype(dtype))
+    kr = jnp.broadcast_to(k_rope[:, :, None, :].astype(k_nope.dtype),
+                          (*k_nope.shape[:3], m.qk_rope_head_dim))
+    k = jnp.concatenate([k_nope, kr], axis=-1)
+    k = logical_constraint(k, ("batch", None, "heads", None))
+    v = logical_constraint(v, ("batch", None, "heads", None))
+    return q, k, v
+
+
+def mla_forward(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                positions: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    m = cfg.mla
+    kv = jnp.einsum("btd,dr->btr", x, p["wkv_a"].astype(x.dtype))
+    latent, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    latent = rms_norm(latent, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    q, k, v = _mla_qkv(p, x, latent, k_rope, cfg, positions)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    out = scaled_attention(q, k, v, scale, causal=True)
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+    return (logical_constraint(out, ("batch", "seq", None)),
+            {"latent": latent, "k_rope": k_rope})
+
+
+def mla_decode(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
+               cfg: ModelConfig, *, pos: jax.Array
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Latent-cache decode. cache: latent [B,S,r], k_rope [B,S,dr].
+
+    Default path uses **absorbed matmuls** (§Perf bonus iteration): instead
+    of re-expanding K/V = latent·W_kb / latent·W_vb over the whole cache
+    every step (O(S·h·(d_n+d_v)) traffic), the query is absorbed into the
+    latent space (q·W_kb once, O(h·r)) and attention runs directly against
+    the compressed cache — O(S·r) reads, a ~17× traffic cut for MiniCPM3.
+    ``REPRO_ATTN_BASELINE=1`` restores the naive expand-then-attend form.
+    """
+    m = cfg.mla
+    kv = jnp.einsum("btd,dr->btr", x, p["wkv_a"].astype(x.dtype))
+    lat_new, kr_new = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    lat_new = rms_norm(lat_new, p["kv_norm"], cfg.norm_eps)
+    kr_new = apply_rope(kr_new[:, :, None, :], pos[:, None],
+                        cfg.rope_theta)[:, :, 0, :]
+
+    b = cache["latent"].shape[0]
+    s = cache["latent"].shape[1]
+    ar = jnp.arange(b)
+    latent = cache["latent"].at[ar, pos].set(
+        lat_new[:, 0].astype(cache["latent"].dtype))
+    k_rope = cache["k_rope"].at[ar, pos].set(
+        kr_new[:, 0].astype(cache["k_rope"].dtype))
+    latent = logical_constraint(latent, ("batch", "kv_seq", "rank"))
+    k_rope = logical_constraint(k_rope, ("batch", "kv_seq", None))
+    new_cache = {"latent": latent, "k_rope": k_rope}
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+
+    if _BASELINE:
+        q, k, v = _mla_qkv(p, x, latent.astype(x.dtype),
+                           k_rope.astype(x.dtype), cfg, pos[:, None])
+        out = scaled_attention(q, k, v, scale, causal=False,
+                               kv_valid=pos + 1)
+        out = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+        return logical_constraint(out, ("batch", None, None)), new_cache
+
+    # absorbed path
+    qa = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(x.dtype)),
+                  p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhe->bshe", qa, p["wq_b"].astype(x.dtype))
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)
+    q_abs = jnp.einsum("bshe,rhe->bshr", q_nope,
+                       p["wk_b"].astype(x.dtype))          # [B,1,H,r]
+    latf = latent.astype(x.dtype)
+    scores = (jnp.einsum("bshr,btr->bhst", q_abs, latf,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshe,bte->bhst", q_rope,
+                           k_rope.astype(x.dtype),
+                           preferred_element_type=jnp.float32)) * scale
+    scores = logical_constraint(scores, ("batch", "heads", None, "kv_seq"))
+    valid = (jnp.arange(s)[None, :] <= pos[:, None])[:, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)                # [B,H,1,S]
+    ctx = jnp.einsum("bhst,btr->bshr", probs.astype(latf.dtype), latf,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    vh = jnp.einsum("bshr,rhe->bshe", ctx, p["wv_b"].astype(x.dtype))
+    out = jnp.einsum("bshe,hed->bsd", vh, p["wo"].astype(x.dtype))
+    return logical_constraint(out, ("batch", None, None)), new_cache

@@ -1,0 +1,37 @@
+"""Dense feed-forward blocks: SwiGLU / GeGLU / GELU-MLP (Megatron-SP sharded)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import P, activation_fn, logical_constraint
+
+Params = Dict[str, jax.Array]
+
+
+def ffn_spec(d_model: int, d_ff: int, activation: str) -> Dict[str, P]:
+    spec = {
+        "w_up": P((d_model, d_ff), ("embed", "ffn")),
+        "w_down": P((d_ff, d_model), ("ffn", "embed")),
+    }
+    if activation in ("swiglu", "geglu"):
+        spec["w_gate"] = P((d_model, d_ff), ("embed", "ffn"))
+    return spec
+
+
+def ffn_forward(p: Params, x: jax.Array, cfg: ModelConfig,
+                d_ff: int = 0) -> jax.Array:
+    """x: [B, S, D] (seq-sharded in) -> [B, S, D] (seq-sharded out)."""
+    act = activation_fn(cfg.activation)
+    h = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    if "w_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        h = act(g.astype(jnp.float32)).astype(x.dtype) * h
+    else:
+        h = act(h.astype(jnp.float32)).astype(x.dtype)
+    h = logical_constraint(h, ("batch", None, "ffn"))
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+    return logical_constraint(out, ("batch", "seq", None))

@@ -1,0 +1,124 @@
+"""Mamba-1 selective SSM block (falcon-mamba / jamba mamba layers).
+
+The selective scan ``h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t`` is computed
+with ``jax.lax.associative_scan`` over the sequence axis — parallel depth
+O(log S), TPU friendly — with the inner dimension sharded over "model"
+(the scan axis is elementwise in d_inner/d_state so the sharding is free).
+Decode keeps O(1) state: (conv window, ssm state) per layer.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.common import P, logical_constraint
+
+Params = Dict[str, jax.Array]
+
+
+def ssm_spec(cfg: ModelConfig) -> Dict[str, P]:
+    s = cfg.ssm or SSMConfig()
+    d = cfg.d_model
+    d_in = s.expand * d
+    dtr = s.resolved_dt_rank(d)
+    return {
+        "w_in": P((d, 2 * d_in), ("embed", "d_inner")),
+        "conv_w": P((s.d_conv, d_in), (None, "d_inner")),
+        "conv_b": P((d_in,), ("d_inner",), init="zeros"),
+        "w_x": P((d_in, dtr + 2 * s.d_state), ("d_inner", None)),
+        "w_dt": P((dtr, d_in), (None, "d_inner")),
+        "b_dt": P((d_in,), ("d_inner",), init="ones", dtype="float32"),
+        "a_log": P((d_in, s.d_state), ("d_inner", None), init="ones",
+                   dtype="float32"),
+        "d_skip": P((d_in,), ("d_inner",), init="ones", dtype="float32"),
+        "w_out": P((d_in, d), ("d_inner", "embed")),
+    }
+
+
+def _ssm_core(p: Params, xz: jax.Array, conv_state: jax.Array,
+              ssm_state: jax.Array, cfg: ModelConfig, seq_mode: bool
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Shared selective-SSM math.
+
+    xz: [B, S, 2*d_in]; conv_state [B, d_conv-1, d_in] (history);
+    ssm_state [B, d_in, N].  Returns (y [B,S,d_in->d after out proj later],
+    new conv_state, new ssm_state).
+    """
+    s_cfg = cfg.ssm or SSMConfig()
+    n = s_cfg.d_state
+    d_in = xz.shape[-1] // 2
+    x, z = jnp.split(xz, 2, axis=-1)                      # [B,S,d_in]
+
+    # depthwise causal conv1d over seq with carried history
+    hist = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    dc = s_cfg.d_conv
+    x_conv = sum(hist[:, i:i + x.shape[1], :] * p["conv_w"][i].astype(x.dtype)
+                 for i in range(dc))
+    x_conv = x_conv + p["conv_b"].astype(x.dtype)
+    x_conv = jax.nn.silu(x_conv.astype(jnp.float32))      # [B,S,d_in] f32
+    new_conv_state = hist[:, -(dc - 1):, :] if dc > 1 else hist[:, :0, :]
+
+    # input-dependent Δ, B, C
+    dtr = p["w_dt"].shape[0]
+    proj = jnp.einsum("bsd,de->bse", x_conv.astype(x.dtype),
+                      p["w_x"].astype(x.dtype)).astype(jnp.float32)
+    dt, b_mat, c_mat = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jnp.einsum("bsr,rd->bsd", dt.astype(x.dtype),
+                    p["w_dt"].astype(x.dtype)).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["b_dt"])                  # [B,S,d_in]
+    a = -jnp.exp(p["a_log"])                              # [d_in,N]
+
+    da = jnp.exp(dt[..., None] * a)                       # [B,S,d_in,N]
+    dbx = dt[..., None] * b_mat[:, :, None, :] * x_conv[..., None]
+
+    if seq_mode:
+        # prepend carried state as step 0: h_0 absorbed via first element
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+        # include initial state by adding da_0 * ssm_state to b_0
+        dbx = dbx.at[:, 0].add(da[:, 0] * ssm_state[:, None, :, :][:, 0])
+        _, h = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        new_ssm_state = h[:, -1]                          # [B,d_in,N]
+    else:
+        h = (da[:, 0] * ssm_state + dbx[:, 0])[:, None]   # [B,1,d_in,N]
+        new_ssm_state = h[:, 0]
+
+    y = jnp.einsum("bsdn,bsn->bsd", h, c_mat)             # [B,S,d_in]
+    y = y + x_conv * p["d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y.astype(xz.dtype), new_conv_state.astype(xz.dtype), new_ssm_state
+
+
+def ssm_forward(p: Params, x: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence mamba block. x: [B,S,D] -> (out, final states)."""
+    s_cfg = cfg.ssm or SSMConfig()
+    d_in = s_cfg.expand * cfg.d_model
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(x.dtype))
+    xz = logical_constraint(xz, ("batch", None, "d_inner"))
+    b = x.shape[0]
+    conv0 = jnp.zeros((b, s_cfg.d_conv - 1, d_in), x.dtype)
+    ssm0 = jnp.zeros((b, d_in, s_cfg.d_state), jnp.float32)
+    y, conv_st, ssm_st = _ssm_core(p, xz, conv0, ssm0, cfg, seq_mode=True)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    out = logical_constraint(out, ("batch", "seq", None))
+    return out, {"conv": logical_constraint(conv_st, ("batch", None, "d_inner")),
+                 "ssm": logical_constraint(ssm_st, ("batch", "d_inner", None))}
+
+
+def ssm_decode(p: Params, x: jax.Array, state: Dict[str, jax.Array],
+               cfg: ModelConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token step. x: [B,1,D]; state: conv [B,dc-1,d_in], ssm [B,d_in,N]."""
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(x.dtype))
+    xz = logical_constraint(xz, ("batch", None, "d_inner"))
+    y, conv_st, ssm_st = _ssm_core(p, xz, state["conv"],
+                                   state["ssm"], cfg, seq_mode=False)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    out = logical_constraint(out, ("batch", None, None))
+    return out, {"conv": logical_constraint(conv_st, ("batch", None, "d_inner")),
+                 "ssm": logical_constraint(ssm_st, ("batch", "d_inner", None))}

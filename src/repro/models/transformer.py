@@ -1,0 +1,531 @@
+"""Full model assembly for every assigned architecture.
+
+One generic decoder stack covers all 10 architectures through a *block
+layout*: the per-layer (token-mixer, ffn) kinds repeat with a fixed period
+(1 for uniform stacks, 8 for jamba's 1-attn:7-mamba, 5 for llama-vision's
+4-self:1-cross), so the depth dimension is a single ``lax.scan`` over
+stacked block parameters — HLO size is O(1) in depth, which keeps 512-way
+SPMD compiles tractable.
+
+Three entry points (all pure):
+
+* ``train_forward``   — logits + MoE aux losses (no cache).
+* ``prefill_forward`` — logits for the last position + a length-``cache_len``
+  KV/SSM cache.
+* ``decode_forward``  — one-token step against the cache.
+
+The AIMD ``m_state`` of ReaLB threads through the layer scan (each MoE
+layer applies one synchronous control update) and across serve steps.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ReaLBConfig, SSMConfig
+from repro.core import ep_moe
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (P, abstract_params, init_params,
+                                 logical_constraint, rms_norm)
+
+Tree = Any
+
+AUX_KEYS = ep_moe.AUX_SCALARS  # ("lb_loss", "z_loss", "drop_frac", ...)
+
+
+# --------------------------------------------------------------------------
+# block layout
+# --------------------------------------------------------------------------
+def block_structure(cfg: ModelConfig) -> Tuple[Tuple[Tuple[str, str], ...],
+                                               int, int]:
+    """(block_layout, n_blocks, n_prefix). Layout entries: (mix, ffn)."""
+    mixes = list(cfg.layer_kinds())
+    ffns = list(cfg.ffn_kinds())
+    if cfg.is_encdec:
+        mixes = ["dec"] * cfg.n_layers
+    kinds = [(m, "none" if (f == "dense" and cfg.d_ff == 0) else f)
+             for m, f in zip(mixes, ffns)]
+    n_prefix = cfg.n_dense_layers
+    rest = kinds[n_prefix:]
+    period = {"jamba": 8, "cross5": 5}.get(cfg.layer_pattern, 1)
+    assert len(rest) % period == 0, (len(rest), period)
+    layout = tuple(rest[:period])
+    for i in range(0, len(rest), period):
+        assert tuple(rest[i:i + period]) == layout, "non-periodic layer stack"
+    return layout, len(rest) // period, n_prefix
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+def layer_spec(cfg: ModelConfig, mix: str, ffn: str) -> Dict[str, Any]:
+    d = cfg.d_model
+    spec: Dict[str, Any] = {"norm1": P((d,), ("embed",), init="zeros")}
+    if mix in ("attn", "dec"):
+        spec["attn"] = attn.attn_spec(cfg)
+    elif mix == "ssm":
+        spec["ssm"] = ssm_mod.ssm_spec(cfg)
+    elif mix == "cross":
+        spec["cross"] = attn.gqa_spec(cfg, cross=True)
+    if mix == "dec":
+        spec["norm_cross"] = P((d,), ("embed",), init="zeros")
+        spec["cross"] = attn.gqa_spec(cfg, cross=True)
+    if ffn != "none":
+        spec["norm2"] = P((d,), ("embed",), init="zeros")
+    if ffn == "dense":
+        dff = cfg.d_ff or (cfg.moe.d_ff if cfg.moe else 0)
+        spec["ffn"] = ffn_mod.ffn_spec(d, dff, cfg.activation)
+    elif ffn == "moe":
+        spec["moe"] = ep_moe.moe_spec(cfg)
+        if cfg.moe.n_shared_experts:
+            spec["shared"] = ffn_mod.ffn_spec(
+                d, cfg.moe.d_ff * cfg.moe.n_shared_experts, cfg.activation)
+    return spec
+
+
+def model_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    layout, n_blocks, n_prefix = block_structure(cfg)
+    d, v = cfg.d_model, cfg.vocab_size
+    spec: Dict[str, Any] = {
+        "embed": P((v, d), ("vocab", "embed"), init="embed", scale=0.02),
+        "final_norm": P((d,), ("embed",), init="zeros"),
+        "blocks": {f"layer{i}": layer_spec(cfg, m, f)
+                   for i, (m, f) in enumerate(layout)},
+    }
+    if not cfg.tie_embeddings:
+        spec["unembed"] = P((d, v), ("embed", "vocab"))
+    if n_prefix:
+        spec["prefix"] = {str(i): layer_spec(cfg, cfg.layer_kinds()[i],
+                                             "dense")
+                          for i in range(n_prefix)}
+    if cfg.is_encdec:
+        spec["enc_blocks"] = {"layer0": layer_spec(cfg, "attn", "dense")}
+        spec["enc_norm"] = P((d,), ("embed",), init="zeros")
+    return spec
+
+
+def init_model(cfg: ModelConfig, key: jax.Array) -> Tree:
+    spec = model_spec(cfg)
+    _, n_blocks, _ = block_structure(cfg)
+    keys = jax.random.split(key, 4)
+    params = {
+        k: init_params(v, keys[0], cfg.param_dtype)
+        for k, v in spec.items() if k not in ("blocks", "enc_blocks")
+    }
+    params["blocks"] = init_params(spec["blocks"], keys[1], cfg.param_dtype,
+                                   stack=n_blocks)
+    if cfg.is_encdec:
+        params["enc_blocks"] = init_params(
+            spec["enc_blocks"], keys[2], cfg.param_dtype,
+            stack=cfg.n_enc_layers)
+    return params
+
+
+def abstract_model(cfg: ModelConfig) -> Tree:
+    spec = model_spec(cfg)
+    _, n_blocks, _ = block_structure(cfg)
+    out = {k: abstract_params(v, cfg.param_dtype)
+           for k, v in spec.items() if k not in ("blocks", "enc_blocks")}
+    out["blocks"] = abstract_params(spec["blocks"], cfg.param_dtype,
+                                    stack=n_blocks)
+    if cfg.is_encdec:
+        out["enc_blocks"] = abstract_params(spec["enc_blocks"],
+                                            cfg.param_dtype,
+                                            stack=cfg.n_enc_layers)
+    return out
+
+
+# --------------------------------------------------------------------------
+# cache specs
+# --------------------------------------------------------------------------
+def _entry_spec(cfg: ModelConfig, mix: str, ffn: str, b: int, l: int,
+                mem_len: int, dtype: str) -> Dict[str, P]:
+    s_cfg = cfg.ssm or SSMConfig()
+    d_in = s_cfg.expand * cfg.d_model
+    out: Dict[str, P] = {}
+    if mix in ("attn", "dec"):
+        if cfg.mla is not None:
+            out["latent"] = P((b, l, cfg.mla.kv_lora_rank),
+                              ("batch", "kv_seq", "rank"), init="zeros",
+                              dtype=dtype)
+            out["k_rope"] = P((b, l, cfg.mla.qk_rope_head_dim),
+                              ("batch", "kv_seq", None), init="zeros",
+                              dtype=dtype)
+        else:
+            kv = P((b, l, cfg.n_kv_heads, cfg.head_dim),
+                   ("batch", "kv_seq", "kv_heads", None), init="zeros",
+                   dtype=dtype)
+            out["k"], out["v"] = kv, kv
+    elif mix == "ssm":
+        out["conv"] = P((b, s_cfg.d_conv - 1, d_in),
+                        ("batch", None, "d_inner"), init="zeros", dtype=dtype)
+        out["ssm"] = P((b, d_in, s_cfg.d_state),
+                       ("batch", "d_inner", None), init="zeros",
+                       dtype="float32")
+    if mix in ("cross", "dec"):
+        xkv = P((b, mem_len, cfg.n_kv_heads, cfg.head_dim),
+                ("batch", None, "kv_heads", None), init="zeros", dtype=dtype)
+        out["xk"], out["xv"] = xkv, xkv
+    return out
+
+
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int) -> Dict[str, Any]:
+    layout, n_blocks, n_prefix = block_structure(cfg)
+    mem_len = cfg.enc_seq_len if cfg.is_encdec else cfg.n_vision_tokens
+    dtype = cfg.param_dtype
+    spec: Dict[str, Any] = {
+        "blocks": {f"layer{i}": _entry_spec(cfg, m, f, batch, cache_len,
+                                            mem_len, dtype)
+                   for i, (m, f) in enumerate(layout)},
+    }
+    if n_prefix:
+        spec["prefix"] = {str(i): _entry_spec(cfg, cfg.layer_kinds()[i],
+                                              "dense", batch, cache_len,
+                                              mem_len, dtype)
+                          for i in range(n_prefix)}
+    return spec
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> Tree:
+    spec = cache_spec(cfg, batch, cache_len)
+    _, n_blocks, _ = block_structure(cfg)
+    key = jax.random.PRNGKey(0)  # zeros init: key unused
+    out = {"blocks": init_params(spec["blocks"], key, cfg.param_dtype,
+                                 stack=n_blocks)}
+    if "prefix" in spec:
+        out["prefix"] = init_params(spec["prefix"], key, cfg.param_dtype)
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, cache_len: int) -> Tree:
+    spec = cache_spec(cfg, batch, cache_len)
+    _, n_blocks, _ = block_structure(cfg)
+    out = {"blocks": abstract_params(spec["blocks"], cfg.param_dtype,
+                                     stack=n_blocks)}
+    if "prefix" in spec:
+        out["prefix"] = abstract_params(spec["prefix"], cfg.param_dtype)
+    return out
+
+
+# --------------------------------------------------------------------------
+# single layer application
+# --------------------------------------------------------------------------
+def _pad_kv(arr: jax.Array, cache_len: int) -> jax.Array:
+    """Pad a prefill KV [B,S,...] out to [B,cache_len,...]."""
+    s = arr.shape[1]
+    if s == cache_len:
+        return arr
+    pad = [(0, 0), (0, cache_len - s)] + [(0, 0)] * (arr.ndim - 2)
+    return jnp.pad(arr, pad)
+
+
+def apply_layer(lp: Tree, x: jax.Array, cfg: ModelConfig, rcfg: ReaLBConfig,
+                mix: str, ffn: str, *, mode: str, positions, pos,
+                memory, cache_in, m_state, modality, cache_len: int,
+                fsdp: bool):
+    """Returns (x, cache_out, m_state, aux_scalars, stats)."""
+    aux = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+    stats = jnp.zeros((2,) + m_state.shape, jnp.float32)
+    cache_out: Dict[str, jax.Array] = {}
+    decode = mode == "decode"
+
+    # ---- token mixer ----
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    if mix in ("attn", "dec"):
+        if cfg.mla is not None:
+            if decode:
+                o, kv = attn.mla_decode(lp["attn"], h, cache_in, cfg, pos=pos)
+            else:
+                o, kv = attn.mla_forward(lp["attn"], h, cfg,
+                                         positions=positions)
+                if mode == "prefill":
+                    kv = {k: _pad_kv(v, cache_len) for k, v in kv.items()}
+        else:
+            if decode:
+                o, kv = attn.gqa_decode(lp["attn"], h,
+                                        {"k": cache_in["k"],
+                                         "v": cache_in["v"]}, cfg, pos=pos)
+            else:
+                causal = not (cfg.is_encdec and mode == "encode")
+                o, kv = attn.gqa_forward(lp["attn"], h, cfg,
+                                         positions=positions, causal=causal)
+                if mode == "prefill":
+                    kv = {k: _pad_kv(v, cache_len) for k, v in kv.items()}
+        if mode in ("prefill", "decode") and mix in ("attn", "dec"):
+            cache_out.update(kv)
+        if mode == "train":
+            o = jax.ad_checkpoint.checkpoint_name(o, "attn_out")
+        x = x + o
+    elif mix == "ssm":
+        if decode:
+            o, st = ssm_mod.ssm_decode(lp["ssm"], h,
+                                       {"conv": cache_in["conv"],
+                                        "ssm": cache_in["ssm"]}, cfg)
+        else:
+            o, st = ssm_mod.ssm_forward(lp["ssm"], h, cfg)
+        if mode in ("prefill", "decode"):
+            cache_out.update(st)
+        x = x + o
+    if mix in ("cross", "dec"):
+        key = "cross"
+        hn = rms_norm(x, lp.get("norm_cross", lp["norm1"]), cfg.norm_eps)
+        if decode:
+            o, xkv = attn.cross_decode(lp[key], hn,
+                                       {"k": cache_in["xk"],
+                                        "v": cache_in["xv"]}, cfg)
+            xkv = {"xk": xkv["k"], "xv": xkv["v"]}
+        else:
+            o, kv2 = attn.cross_forward(lp[key], hn, memory, cfg)
+            xkv = {"xk": kv2["k"], "xv": kv2["v"]}
+        if mode in ("prefill", "decode"):
+            cache_out.update(xkv)
+        x = x + o
+
+    # ---- ffn / moe ----
+    if ffn == "dense" and "ffn" in lp:
+        h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + ffn_mod.ffn_forward(lp["ffn"], h2, cfg)
+    elif ffn == "moe":
+        h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        y, m_state, moe_aux = ep_moe.ep_moe_forward(
+            lp["moe"], h2, cfg, rcfg, m_state, modality,
+            mode="broadcast" if decode else "dispatch",
+            train=(mode == "train"), fsdp=fsdp)
+        if "shared" in lp:
+            y = y + ffn_mod.ffn_forward(lp["shared"], h2, cfg)
+        x = x + y
+        aux = {k: moe_aux[k].astype(jnp.float32) for k in AUX_KEYS}
+        stats = jnp.stack([
+            jnp.broadcast_to(moe_aux["load_d"].reshape(-1),
+                             (m_state.size,)).reshape(m_state.shape),
+            jnp.broadcast_to(moe_aux["vis_d"].reshape(-1),
+                             (m_state.size,)).reshape(m_state.shape)])
+    return x, cache_out, m_state, aux, stats
+
+
+# --------------------------------------------------------------------------
+# full forward passes
+# --------------------------------------------------------------------------
+class ForwardResult(NamedTuple):
+    logits: jax.Array
+    cache: Optional[Tree]
+    m_state: jax.Array
+    aux: Dict[str, jax.Array]
+
+
+def _embed(params, cfg: ModelConfig, tokens: jax.Array,
+           vision_embeds: Optional[jax.Array], mode: str) -> jax.Array:
+    dtype = jnp.dtype(cfg.param_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    if cfg.embed_scale_sqrt_d:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    if (cfg.family == "vlm" and vision_embeds is not None
+            and mode != "decode"):
+        x = jax.lax.dynamic_update_slice(
+            x, vision_embeds.astype(dtype), (0, 0, 0))
+    axes = ("batch", None, None) if mode == "decode" \
+        else ("batch", "seq", None)
+    return logical_constraint(x, axes)
+
+
+def _unembed(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["unembed"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def _encode(params, cfg: ModelConfig, enc_embeds: jax.Array,
+            rcfg: ReaLBConfig, m_state) -> jax.Array:
+    """Whisper-style encoder: non-causal attention blocks over frames."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    x = enc_embeds.astype(dtype)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(carry, bp):
+        h, m = carry
+        h, _, m, _, _ = apply_layer(
+            bp["layer0"], h, cfg, rcfg, "attn", "dense", mode="encode",
+            positions=positions, pos=None, memory=None, cache_in=None,
+            m_state=m, modality=None, cache_len=0, fsdp=False)
+        return (h, m), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    (x, _), _ = jax.lax.scan(body, (x, m_state), params["enc_blocks"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _run_stack(params, cfg, rcfg, x, *, mode, positions, pos, memory,
+               cache, m_state, modality, cache_len, fsdp):
+    layout, n_blocks, n_prefix = block_structure(cfg)
+    new_cache: Dict[str, Any] = {}
+    aux_acc = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+    with_cache = mode in ("prefill", "decode")
+
+    # unrolled prefix layers (e.g. moonshot's leading dense layer)
+    if n_prefix:
+        new_cache["prefix"] = {}
+        for i in range(n_prefix):
+            ci = cache["prefix"][str(i)] if (cache and "prefix" in cache) \
+                else None
+            x, co, m_state, aux, _ = apply_layer(
+                params["prefix"][str(i)], x, cfg, rcfg,
+                cfg.layer_kinds()[i], "dense", mode=mode,
+                positions=positions, pos=pos, memory=memory, cache_in=ci,
+                m_state=m_state, modality=modality, cache_len=cache_len,
+                fsdp=fsdp)
+            if with_cache:
+                new_cache["prefix"][str(i)] = co
+            aux_acc = {k: aux_acc[k] + aux[k] for k in AUX_KEYS}
+
+    def body(carry, xs):
+        h, m = carry
+        bp, cache_in = xs
+        block_cache = {}
+        aux_b = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+        stats_b = jnp.zeros((2,) + m.shape, jnp.float32)
+        for i, (mix, f) in enumerate(layout):
+            ci = cache_in[f"layer{i}"] if cache_in is not None else None
+            h, co, m, aux, stats = apply_layer(
+                bp[f"layer{i}"], h, cfg, rcfg, mix, f, mode=mode,
+                positions=positions, pos=pos, memory=memory, cache_in=ci,
+                m_state=m, modality=modality, cache_len=cache_len,
+                fsdp=fsdp)
+            if with_cache:
+                block_cache[f"layer{i}"] = co
+            aux_b = {k: aux_b[k] + aux[k] for k in AUX_KEYS}
+            stats_b = stats_b + stats
+        outs = (block_cache, aux_b, stats_b) if with_cache \
+            else (aux_b, stats_b)
+        return (h, m), outs
+
+    if mode == "train" and cfg.remat == "full":
+        body = jax.checkpoint(body)
+    elif mode == "train" and cfg.remat == "attn_out":
+        # rematerialise everything except the attention outputs: the
+        # online-softmax KV scan is the most recompute-expensive part of
+        # the block, and its output is only [B,S,D] bf16 per layer
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.save_only_these_names(
+                "attn_out"))
+
+    xs = (params["blocks"], cache["blocks"] if with_cache and cache else None)
+    (x, m_state), ys = jax.lax.scan(body, (x, m_state), xs)
+    if with_cache:
+        new_cache["blocks"], aux_blocks, stats_blocks = ys
+    else:
+        aux_blocks, stats_blocks = ys
+    aux_total = {k: aux_acc[k] + aux_blocks[k].sum() for k in AUX_KEYS}
+    aux_total["moe_stats"] = stats_blocks          # [n_blocks, 2, groups, ep]
+    return x, (new_cache if with_cache else None), m_state, aux_total
+
+
+def _prepare_inputs(cfg, batch, mode):
+    tokens = batch["tokens"]
+    modality = batch.get("modality")
+    if modality is None:
+        b, s = tokens.shape
+        if cfg.family == "vlm" and mode != "decode":
+            modality = (jnp.arange(s)[None, :] < cfg.n_vision_tokens)
+            modality = jnp.broadcast_to(modality, (b, s))
+        else:
+            modality = jnp.zeros((b, s), jnp.bool_)
+    return tokens, modality
+
+
+def train_forward(params, cfg: ModelConfig, rcfg: ReaLBConfig, batch,
+                  m_state) -> ForwardResult:
+    tokens, modality = _prepare_inputs(cfg, batch, "train")
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    memory = None
+    if cfg.is_encdec:
+        memory = _encode(params, cfg, batch["enc_embeds"], rcfg, m_state)
+    elif cfg.family == "vlm":
+        memory = batch["vision_embeds"]
+    x = _embed(params, cfg, tokens, batch.get("vision_embeds"), "train")
+    x, _, m_state, aux = _run_stack(
+        params, cfg, rcfg, x, mode="train", positions=positions, pos=None,
+        memory=memory, cache=None, m_state=m_state, modality=modality,
+        cache_len=0, fsdp=True)
+    logits = _unembed(params, cfg, x)
+    return ForwardResult(logits, None, m_state, aux)
+
+
+def prefill_forward(params, cfg: ModelConfig, rcfg: ReaLBConfig, batch,
+                    m_state, cache_len: int = 0) -> ForwardResult:
+    tokens, modality = _prepare_inputs(cfg, batch, "prefill")
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    memory = None
+    if cfg.is_encdec:
+        memory = _encode(params, cfg, batch["enc_embeds"], rcfg, m_state)
+    elif cfg.family == "vlm":
+        memory = batch["vision_embeds"]
+    x = _embed(params, cfg, tokens, batch.get("vision_embeds"), "prefill")
+    x, cache, m_state, aux = _run_stack(
+        params, cfg, rcfg, x, mode="prefill", positions=positions, pos=None,
+        memory=memory, cache=None, m_state=m_state, modality=modality,
+        cache_len=cache_len, fsdp=False)
+    logits = _unembed(params, cfg, x[:, -1:, :])
+    return ForwardResult(logits[:, 0], cache, m_state, aux)
+
+
+def decode_forward(params, cfg: ModelConfig, rcfg: ReaLBConfig, batch,
+                   cache, m_state) -> ForwardResult:
+    """batch: tokens [B,1], pos [B], modality [B,1] (vision flag of the
+    *new* token; usually False during generation)."""
+    tokens = batch["tokens"]
+    pos = batch["pos"]
+    modality = batch.get("modality")
+    if modality is None:
+        modality = jnp.zeros(tokens.shape, jnp.bool_)
+    x = _embed(params, cfg, tokens, None, "decode")
+    x, cache, m_state, aux = _run_stack(
+        params, cfg, rcfg, x, mode="decode", positions=None, pos=pos,
+        memory=None, cache=cache, m_state=m_state, modality=modality,
+        cache_len=0, fsdp=False)
+    logits = _unembed(params, cfg, x)
+    return ForwardResult(logits[:, 0], cache, m_state, aux)
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token CE. logits [B,S,V] f32, labels [B,S] int32 (-1 = pad)."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - ll) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def train_loss(params, cfg: ModelConfig, rcfg: ReaLBConfig, batch,
+               m_state) -> Tuple[jax.Array, Tuple[jax.Array, Dict]]:
+    res = train_forward(params, cfg, rcfg, batch, m_state)
+    ce = cross_entropy(res.logits, batch["labels"])
+    loss = ce
+    if cfg.moe is not None:
+        loss = (loss + cfg.moe.aux_loss_coef * res.aux["lb_loss"]
+                + cfg.moe.router_z_coef * res.aux["z_loss"])
+    metrics = {"ce": ce, **{k: res.aux[k] for k in AUX_KEYS}}
+    return loss, (res.m_state, metrics)

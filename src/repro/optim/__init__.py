@@ -1,0 +1,4 @@
+"""Optimizer substrate: AdamW (from scratch) + distributed grad utilities."""
+from repro.optim.adamw import (OptState, abstract_opt_state, adamw_update,
+                               clip_by_global_norm, global_norm,
+                               init_opt_state, lr_schedule)

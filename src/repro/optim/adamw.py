@@ -1,0 +1,91 @@
+"""AdamW from scratch (no optax), with warmup-cosine schedule.
+
+Optimizer state mirrors the parameter tree (same shardings → ZeRO-style
+sharding comes for free from the FSDP parameter specs), with f32 moments
+regardless of the bf16 parameter dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+Tree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array     # i32 scalar
+    mu: Tree            # first moments (f32)
+    nu: Tree            # second moments (f32)
+
+
+def init_opt_state(params: Tree, cfg: TrainConfig) -> OptState:
+    dt = jnp.dtype(cfg.opt_state_dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(jnp.zeros((), jnp.int32),
+                    jax.tree.map(z, params), jax.tree.map(z, params))
+
+
+def abstract_opt_state(abstract_params: Tree, cfg: TrainConfig) -> OptState:
+    dt = jnp.dtype(cfg.opt_state_dtype)
+
+    def mk(p):
+        sh = getattr(p, "sharding", None)
+        return jax.ShapeDtypeStruct(p.shape, dt, sharding=sh)
+
+    return OptState(jax.ShapeDtypeStruct((), jnp.int32),
+                    jax.tree.map(mk, abstract_params),
+                    jax.tree.map(mk, abstract_params))
+
+
+def lr_schedule(step: jax.Array, cfg: TrainConfig) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree: Tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Tree, max_norm: float
+                        ) -> Tuple[Tree, jax.Array]:
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), grads), g
+
+
+def adamw_update(params: Tree, grads: Tree, state: OptState,
+                 cfg: TrainConfig) -> Tuple[Tree, OptState, Dict]:
+    step = state.step + 1
+    lr = lr_schedule(step, cfg)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    b1, b2, eps = cfg.b1, cfg.b2, cfg.eps
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * jnp.square(gf)
+        mhat = m2 / c1
+        vhat = v2 / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, OptState(step, new_m, new_v), {"lr": lr, "grad_norm": gnorm}

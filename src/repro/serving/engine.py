@@ -1,0 +1,170 @@
+"""Batched serving engine: prefill + decode with ReaLB active.
+
+The engine holds one device-resident cache of ``max_slots`` sequences and
+drives the scheduler loop: admit → per-request prefill into the slot →
+batched decode step across all active slots.  The AIMD ``m_state`` of
+ReaLB persists across iterations, exactly like the controller in the
+paper's serving deployment; per-iteration routing/imbalance stats are
+recorded for the benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ReaLBConfig
+from repro.core import ep_moe
+from repro.models import transformer as tf
+from repro.models.common import current_mesh
+from repro.serving.scheduler import Request, Scheduler
+
+
+@dataclasses.dataclass
+class IterStats:
+    """Per-iteration routing/balance diagnostics (benchmark input)."""
+    n_active: int
+    tokens: int
+    ib_global: float
+    fp4_ranks: float
+    gate_open: float
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, rcfg: ReaLBConfig,
+                 max_slots: int = 8, max_len: int = 256,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg, self.params, self.rcfg = cfg, params, rcfg
+        self.max_slots, self.max_len = max_slots, max_len
+        self.temperature = temperature
+        self.scheduler = Scheduler(max_slots)
+        self.cache = tf.init_cache(cfg, max_slots, max_len)
+        groups, ep = ep_moe.moe_state_shape(current_mesh(), max_slots)
+        self.m_state = jnp.full((groups, ep), rcfg.md_init, jnp.float32)
+        self.pos = np.zeros(max_slots, np.int32)      # next write position
+        self.last_tok = np.zeros(max_slots, np.int32)
+        self.active_mask = np.zeros(max_slots, bool)
+        self.stats: List[IterStats] = []
+        self.key = jax.random.PRNGKey(seed)
+        self._build()
+
+    # -- jitted steps -------------------------------------------------------
+    def _build(self):
+        cfg, rcfg = self.cfg, self.rcfg
+
+        @jax.jit
+        def prefill_one(params, m_state, batch):
+            res = tf.prefill_forward(params, cfg, rcfg, batch, m_state,
+                                     cache_len=self.max_len)
+            return res.logits, res.cache, res.m_state
+
+        @jax.jit
+        def decode(params, cache, m_state, tokens, pos, modality):
+            batch = {"tokens": tokens, "pos": pos, "modality": modality}
+            res = tf.decode_forward(params, cfg, rcfg, batch, cache, m_state)
+            return res.logits, res.cache, res.m_state, res.aux
+
+        self._prefill_one = prefill_one
+        self._decode = decode
+
+    # -- cache slot insertion ----------------------------------------------
+    def _insert_cache(self, slot: int, new_cache):
+        """Copy a batch-1 prefill cache into slot `slot` of the engine cache.
+
+        Stacked block entries are [n_blocks, B, ...] (batch axis 1); prefix
+        entries are [B, ...] (axis 0).
+        """
+        def set_slot(axis):
+            def f(dst, src):
+                idx = [slice(None)] * dst.ndim
+                idx[axis] = slice(slot, slot + 1)
+                return dst.at[tuple(idx)].set(src.astype(dst.dtype))
+            return f
+
+        self.cache["blocks"] = jax.tree.map(set_slot(1),
+                                            self.cache["blocks"],
+                                            new_cache["blocks"])
+        if "prefix" in self.cache:
+            self.cache["prefix"] = jax.tree.map(set_slot(0),
+                                                self.cache["prefix"],
+                                                new_cache["prefix"])
+
+    # -- public API ----------------------------------------------------------
+    def submit(self, req: Request):
+        assert req.prompt_len + req.max_new_tokens <= self.max_len, \
+            (req.prompt_len, req.max_new_tokens, self.max_len)
+        self.scheduler.submit(req)
+
+    def _sample(self, logits: jax.Array) -> np.ndarray:
+        if self.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.key, sub = jax.random.split(self.key)
+        return np.asarray(jax.random.categorical(
+            sub, logits / self.temperature, axis=-1), np.int32)
+
+    def step(self) -> int:
+        """One continuous-batching iteration. Returns #active sequences."""
+        # 1) admit + prefill new requests (slot-local, batch of 1)
+        for req in self.scheduler.admit():
+            batch = {
+                "tokens": jnp.asarray(req.tokens, jnp.int32)[None],
+                "modality": jnp.asarray(req.modality, bool)[None],
+            }
+            if req.vision_embeds is not None:
+                batch["vision_embeds"] = jnp.asarray(
+                    req.vision_embeds, jnp.dtype(self.cfg.param_dtype))[None]
+            if self.cfg.is_encdec:
+                batch["enc_embeds"] = jnp.asarray(
+                    req.vision_embeds if req.vision_embeds is not None
+                    else np.zeros((self.cfg.enc_seq_len, self.cfg.d_model),
+                                  np.float32),
+                    jnp.dtype(self.cfg.param_dtype))[None]
+            logits, new_cache, self.m_state = self._prefill_one(
+                self.params, self.m_state, batch)
+            self._insert_cache(req.slot, new_cache)
+            tok = self._sample(logits)[0]
+            req.generated.append(int(tok))
+            self.pos[req.slot] = req.prompt_len
+            self.last_tok[req.slot] = int(tok)
+            self.active_mask[req.slot] = True
+
+        self.scheduler.retire()
+        for s in range(self.max_slots):
+            self.active_mask[s] = s in self.scheduler.active
+
+        if not self.scheduler.active:
+            return 0
+
+        # 2) batched decode over all slots (inactive slots run dummies)
+        tokens = jnp.asarray(self.last_tok[:, None], jnp.int32)
+        pos = jnp.asarray(np.where(self.active_mask, self.pos, 0), jnp.int32)
+        modality = jnp.zeros((self.max_slots, 1), bool)
+        logits, self.cache, self.m_state, aux = self._decode(
+            self.params, self.cache, self.m_state, tokens, pos, modality)
+        toks = self._sample(logits)
+        n_active = 0
+        for slot, req in list(self.scheduler.active.items()):
+            if not req.done:
+                req.generated.append(int(toks[slot]))
+                self.last_tok[slot] = int(toks[slot])
+                self.pos[slot] += 1
+                n_active += 1
+        self.stats.append(IterStats(
+            n_active=n_active,
+            tokens=n_active,
+            ib_global=float(aux["ib_global"]),
+            fp4_ranks=float(aux["fp4_ranks"]),
+            gate_open=float(aux["gate_open"])))
+        self.scheduler.retire()
+        return n_active
+
+    def run(self, max_iters: int = 10_000) -> List[Request]:
+        it = 0
+        while not self.scheduler.idle and it < max_iters:
+            self.step()
+            it += 1
+        return self.scheduler.finished

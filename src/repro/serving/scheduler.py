@@ -1,0 +1,74 @@
+"""Continuous-batching request scheduler (vLLM-style, PD-colocated).
+
+Fixed-slot design: the engine owns ``max_slots`` cache slots; the scheduler
+admits queued requests into free slots (prefill) and steps every active
+slot each iteration (decode) — one "iteration" = one forward batch, the
+paper's unit of routing dynamics.  Requests carry modality masks so ReaLB
+sees the true vision/text composition.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: np.ndarray               # [S] int32 prompt (incl. vision slots)
+    modality: np.ndarray             # [S] bool, True = vision token
+    max_new_tokens: int = 16
+    vision_embeds: Optional[np.ndarray] = None   # [Nv, D] stub frontend out
+
+    # runtime state
+    generated: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class Scheduler:
+    def __init__(self, max_slots: int):
+        self.max_slots = max_slots
+        self.queue: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}     # slot -> request
+        self.finished: List[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.max_slots) if s not in self.active]
+
+    def admit(self) -> List[Request]:
+        """Move queued requests into free slots; returns newly admitted."""
+        admitted = []
+        for slot in self.free_slots():
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            req.slot = slot
+            self.active[slot] = req
+            admitted.append(req)
+        return admitted
+
+    def retire(self) -> List[Request]:
+        """Remove finished requests; returns them."""
+        done = [r for r in self.active.values() if r.done]
+        for r in done:
+            del self.active[r.slot]
+            self.finished.append(r)
+        return done
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.active

@@ -1,0 +1,17 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
+real single CPU device; multi-device tests spawn subprocesses.
+
+The repo root is added to sys.path so ``PYTHONPATH=src pytest tests/``
+resolves the ``benchmarks`` package too."""
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,51 @@
+"""The HLO analyzer must multiply loop bodies by trip count and count dot
+flops correctly (validated on a known program)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_analysis as ha
+
+
+def test_scan_flops_trip_multiplied():
+    n, steps = 128, 7
+
+    def f(x, ws):
+        def body(c, w):
+            return jnp.dot(c, w, precision="highest"), None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    x = jnp.ones((n, n), jnp.float32)
+    ws = jnp.ones((steps, n, n), jnp.float32)
+    hlo = jax.jit(f).lower(x, ws).compile().as_text()
+    res = ha.analyze(hlo)
+    expect = 2.0 * n * n * n * steps
+    assert abs(res["flops"] - expect) / expect < 0.05, (res["flops"], expect)
+
+
+def test_single_dot_flops():
+    m, k, n = 64, 256, 32
+    f = jax.jit(lambda a, b: a @ b)
+    hlo = f.lower(jnp.ones((m, k)), jnp.ones((k, n))).compile().as_text()
+    res = ha.analyze(hlo)
+    expect = 2.0 * m * k * n
+    assert abs(res["flops"] - expect) / expect < 0.01
+
+
+def test_traffic_nonzero_and_sane():
+    f = jax.jit(lambda a: (a * 2 + 1).sum())
+    hlo = f.lower(jnp.ones((1024, 1024))).compile().as_text()
+    res = ha.analyze(hlo)
+    # at least one read of the input
+    assert res["traffic_bytes"] >= 4 * 1024 * 1024
+    assert res["collective_bytes"] == 0
+
+
+def test_parse_module_structure():
+    f = jax.jit(lambda a: jax.lax.scan(lambda c, x: (c + x, c), a,
+                                       jnp.ones((5, 4)))[0])
+    hlo = f.lower(jnp.ones((4,))).compile().as_text()
+    comps, entry = ha.parse_module(hlo)
+    assert entry in comps
+    assert len(comps) >= 2            # entry + loop body/cond

@@ -1,0 +1,95 @@
+"""Per-architecture smoke tests: every assigned arch, reduced config —
+one train step + prefill + decode on CPU, asserting shapes and finiteness;
+plus prefill/decode consistency for representative families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, ReaLBConfig, get_config, reduced
+from repro.core import init_m_state
+from repro.models import transformer as tf
+
+RCFG = ReaLBConfig(gate_gamma=4)
+
+
+def _batch(cfg, rng, b=2, s=16):
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.is_encdec:
+        batch["enc_embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (b, cfg.enc_seq_len, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (b, cfg.n_vision_tokens, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke(arch, rng):
+    cfg = reduced(get_config(arch))
+    params = tf.init_model(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 16
+    batch = _batch(cfg, rng, b, s)
+    m = init_m_state(1, 1, RCFG)
+
+    loss, (m2, metrics) = tf.train_loss(params, cfg, RCFG, batch, m)
+    assert np.isfinite(float(loss)), arch
+    assert float(loss) > 0
+
+    res = tf.prefill_forward(params, cfg, RCFG, batch, m, cache_len=s + 4)
+    assert res.logits.shape == (b, cfg.vocab_size)
+    assert bool(jnp.isfinite(res.logits).all())
+
+    db = {"tokens": batch["tokens"][:, :1],
+          "pos": jnp.full((b,), s, jnp.int32)}
+    res2 = tf.decode_forward(params, cfg, RCFG, db, res.cache, res.m_state)
+    assert res2.logits.shape == (b, cfg.vocab_size)
+    assert bool(jnp.isfinite(res2.logits).all())
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "minicpm3-4b",
+                                  "falcon-mamba-7b", "olmoe-1b-7b",
+                                  "jamba-1.5-large-398b"])
+def test_prefill_decode_consistency(arch, rng):
+    """decode(token s | cache of s tokens) == prefill(s+1 tokens) logits."""
+    cfg = reduced(get_config(arch))
+    params = tf.init_model(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 12
+    full = _batch(cfg, rng, b, s + 1)
+    m = init_m_state(1, 1, RCFG)
+
+    ref = tf.prefill_forward(params, cfg, RCFG, full, m, cache_len=s + 1)
+
+    pre_batch = {k: (v[:, :s] if k in ("tokens", "labels") else v)
+                 for k, v in full.items()}
+    res = tf.prefill_forward(params, cfg, RCFG, pre_batch, m,
+                             cache_len=s + 1)
+    db = {"tokens": full["tokens"][:, s:s + 1],
+          "pos": jnp.full((b,), s, jnp.int32)}
+    dec = tf.decode_forward(params, cfg, RCFG, db, res.cache, res.m_state)
+
+    np.testing.assert_allclose(np.asarray(dec.logits),
+                               np.asarray(ref.logits), rtol=2e-3, atol=2e-3)
+
+
+def test_vlm_modality_default_mask(rng):
+    cfg = reduced(get_config("llama-3.2-vision-90b"))
+    tokens = jnp.zeros((2, 16), jnp.int32)
+    _, mod = tf._prepare_inputs(cfg, {"tokens": tokens}, "train")
+    assert bool(mod[:, :cfg.n_vision_tokens].all())
+    assert not bool(mod[:, cfg.n_vision_tokens:].any())
+
+
+def test_param_counts_match_declared():
+    """init_model parameter count ≈ config.param_count() (embeddings and
+    stacked blocks included; small structural deltas like norms allowed)."""
+    for arch in ("qwen1.5-0.5b", "olmoe-1b-7b", "gemma-7b"):
+        cfg = get_config(arch)
+        spec_n = cfg.param_count()
+        abstract = tf.abstract_model(cfg)
+        real_n = sum(int(np.prod(x.shape))
+                     for x in jax.tree.leaves(abstract))
+        assert abs(real_n - spec_n) / spec_n < 0.03, (arch, real_n, spec_n)

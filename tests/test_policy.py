@@ -1,0 +1,88 @@
+"""ReaLB control policy invariants (hypothesis property tests)."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ReaLBConfig
+from repro.core.policy import lb_gate, realb_policy
+
+loads = hnp.arrays(np.float64, (8,),
+                   elements=st.floats(0, 1e6, allow_nan=False))
+ms = hnp.arrays(np.float64, (8,), elements=st.floats(0, 1))
+
+
+@hypothesis.given(loads, st.data())
+@hypothesis.settings(deadline=None, max_examples=200)
+def test_policy_invariants(load, data):
+    vis_frac = data.draw(hnp.arrays(np.float64, (8,),
+                                    elements=st.floats(0, 1)))
+    m = data.draw(ms)
+    vis = load * vis_frac
+    cfg = ReaLBConfig()
+    dec = realb_policy(jnp.asarray(load), jnp.asarray(vis), jnp.asarray(m),
+                       cfg)
+    m_new = np.asarray(dec.m_new)
+    use = np.asarray(dec.use_fp4)
+    hot = np.asarray(dec.hotspots)
+    ib = np.asarray(dec.ib_d)
+
+    # M_d stays in [md_min, 1]
+    assert np.all(m_new >= cfg.md_min - 1e-9)
+    assert np.all(m_new <= 1.0 + 1e-9)
+    # compression only on hotspots, and hotspots match the definition
+    assert not np.any(use & ~hot)
+    np.testing.assert_array_equal(hot, ib > cfg.capacity_c)
+    # gate: no compression when total tokens below Γ
+    if load.sum() <= cfg.gate_gamma:
+        assert not np.any(use)
+        np.testing.assert_allclose(m_new, np.asarray(m, np.float32),
+                                   atol=1e-7)  # held
+    # IB_global is the max of per-rank imbalance
+    assert abs(float(dec.ib_global) - ib.max()) < 1e-5
+
+
+@hypothesis.given(hnp.arrays(np.float64, (8,),
+                             elements=st.floats(1, 1e6)))  # token counts
+@hypothesis.settings(deadline=None, max_examples=100)
+def test_aimd_direction(load):
+    """congested ⇒ every M_d halves; calm ⇒ every M_d rises by md_add."""
+    load = np.round(load)
+    cfg = ReaLBConfig(gate_gamma=0)
+    m = jnp.full((8,), 0.8)
+    vis = jnp.asarray(load)
+    dec = realb_policy(jnp.asarray(load), vis, m, cfg)
+    if load.sum() == 0:
+        return
+    m_new = np.asarray(dec.m_new)
+    if float(dec.ib_global) > cfg.tau:
+        np.testing.assert_allclose(m_new, 0.4, atol=1e-6)
+    else:
+        np.testing.assert_allclose(m_new, 0.9, atol=1e-6)
+
+
+def test_monotone_in_modality_threshold():
+    """Lower M_d ⇒ (weakly) more ranks compressed."""
+    load = jnp.asarray([4000.0, 1000, 1000, 1000, 900, 900, 900, 900])
+    vis = load * jnp.asarray([0.8, 0.1, 0.2, 0.9, 0.5, 0.5, 0.5, 0.5])
+    cfg = ReaLBConfig(gate_gamma=0, adaptive=False)
+    prev = -1
+    for m_val in (1.0, 0.9, 0.5, 0.1, 0.0):
+        dec = realb_policy(load, vis, jnp.full((8,), m_val), cfg)
+        n = int(np.asarray(dec.use_fp4).sum())
+        assert n >= prev
+        prev = n
+
+
+def test_disabled_never_compresses():
+    cfg = ReaLBConfig(enabled=False, gate_gamma=0)
+    load = jnp.asarray([1e5, 1.0, 1.0, 1.0])
+    dec = realb_policy(load, load, jnp.zeros(4), cfg)
+    assert not np.any(np.asarray(dec.use_fp4))
+
+
+def test_gate_threshold():
+    cfg = ReaLBConfig(gate_gamma=2048)
+    assert not bool(lb_gate(jnp.asarray(2048.0), cfg))
+    assert bool(lb_gate(jnp.asarray(2049.0), cfg))

@@ -1,0 +1,114 @@
+"""End-to-end behaviour tests: training drives loss down on the learnable
+synthetic stream; serving produces tokens; benchmarks yield paper-shaped
+results; configs cover the assignment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (ALL_SHAPES, ARCH_IDS, ReaLBConfig, TrainConfig,
+                           all_cells, get_config, reduced)
+from repro.core import init_m_state
+from repro.data.pipeline import DataConfig, DataLoader
+from repro.models import transformer as tf
+from repro.optim import adamw
+
+
+def test_assignment_coverage():
+    cells = all_cells()
+    assert len(ARCH_IDS) == 10
+    assert len(cells) == 40
+    skipped = [(a, s) for a, s, ok, _ in cells if not ok]
+    # long_500k runs only for the SSM and hybrid archs
+    assert all(s == "long_500k" for _, s in skipped)
+    runs_long = {a for a, s, ok, _ in cells if s == "long_500k" and ok}
+    assert runs_long == {"falcon-mamba-7b", "jamba-1.5-large-398b"}
+
+
+def test_training_reduces_loss():
+    """~100 steps on the Markov LM stream must clearly reduce CE."""
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=2, vocab_size=128)
+    rcfg = ReaLBConfig(enabled=False)
+    tcfg = TrainConfig(lr=3e-3, warmup_steps=10, total_steps=100)
+    params = tf.init_model(cfg, jax.random.PRNGKey(0))
+    opt = adamw.init_opt_state(params, tcfg)
+    m = init_m_state(1, 1, rcfg)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
+    data = DataLoader(dc)
+
+    @jax.jit
+    def step(params, opt, m, batch):
+        (loss, (m2, _)), g = jax.value_and_grad(
+            tf.train_loss, has_aux=True)(params, cfg, rcfg, batch, m)
+        params, opt, _ = adamw.adamw_update(params, g, opt, tcfg)
+        return params, opt, m2, loss
+
+    losses = []
+    for _ in range(100):
+        b = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt, m, loss = step(params, opt, m, b)
+        losses.append(float(loss))
+    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+    assert last < first - 0.5, (first, last)
+
+
+def test_benchmark_modules_produce_paper_shaped_results():
+    from benchmarks import costmodel as cm
+    from benchmarks import traces as tr
+    from repro.configs import ReaLBConfig as RC
+
+    g = cm.KIMI_VL
+    cfg = tr.workload("MMMU", iters=120)
+    base = cm.sim_baseline(cfg, g)
+    fp4 = cm.sim_fp4_all(cfg, g)
+    realb = cm.sim_realb(cfg, g, RC())
+    seq = cm.sim_realb(cfg, g, RC(), name="seq", overlap=False)
+    eplb = cm.sim_eplb(cfg, g)
+    s = {r.name: r.e2e_speedup(base, g) for r in (fp4, realb, seq, eplb)}
+    # paper-shaped ordering: FP4-All >= ReaLB > ReaLB-seq > EPLB ~ 1
+    assert s["FP4-All"] >= s["ReaLB"] - 0.02
+    assert s["ReaLB"] > s["seq"]
+    assert s["ReaLB"] > s["EPLB"]
+    assert 0.9 < s["EPLB"] < 1.1
+    assert 0.0 < realb.fp4_token_frac < 1.0
+
+
+def test_trace_dynamics_match_paper():
+    from benchmarks import traces as tr
+    s = tr.trace_stats(tr.workload("MMMU", iters=200))
+    assert 2.0 <= s["expert_imb_mean"] <= 14.0       # paper: 2–12×
+    assert 1.3 <= s["device_imb_mean"] <= 3.5        # paper: 2–3× peaks
+    assert s["vision_ratio_max_mean"] > 0.8          # >90% vision devices
+    assert s["hot_device_flips_per_100it"] > 1.0     # hot spots move
+
+
+def test_aimd_sawtooth():
+    """Congestion halves M; calm raises it by 0.1 — visible sawtooth."""
+    from repro.core.policy import realb_policy
+    rcfg = ReaLBConfig(gate_gamma=0)
+    m = jnp.full((4,), 0.9)
+    hot = jnp.asarray([4000.0, 100.0, 100.0, 100.0])
+    calm = jnp.asarray([1000.0, 1000.0, 1000.0, 1000.0])
+    m = realb_policy(hot, hot, m, rcfg).m_new
+    assert float(m[0]) == pytest.approx(0.45)
+    for _ in range(3):
+        m = realb_policy(calm, calm, m, rcfg).m_new
+    assert float(m[0]) == pytest.approx(0.75)
+
+
+def test_dryrun_artifacts_if_present():
+    """If the sweep has run, every non-skipped cell must be ok on both
+    meshes (the repo ships with the artifacts)."""
+    import json
+    import pathlib
+    d = pathlib.Path("experiments/dryrun")
+    if not d.exists() or not list(d.glob("*.json")):
+        pytest.skip("dry-run artifacts not generated yet")
+    bad = []
+    for f in d.glob("*.json"):
+        if ".opt" in f.name or ".base" in f.name:
+            continue  # perf-iteration variants are tracked in EXPERIMENTS.md
+        r = json.loads(f.read_text())
+        if r["status"] not in ("ok", "skipped"):
+            bad.append((f.name, r.get("error", "")[:100]))
+    assert not bad, bad
