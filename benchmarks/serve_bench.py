@@ -1,0 +1,224 @@
+"""End-to-end open-loop serving benchmark: workload → engine → percentiles.
+
+Drives the full request path (arrival process → multimodal prompt
+synthesis → modality-aware admission → chunked batched prefill → decode)
+with ReaLB live, and reports the paper's serving quantities: TTFT / TPOT
+percentiles (overall and split by modality), ``ib_global`` distribution,
+and LB-gate / FP4 duty cycles split by phase — batched prefill is where
+the gate opens, which the v1 per-request prefill loop never reached.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py \
+        --workload MMMU --arrivals bursty
+
+Runs in *virtual time* by default: a seeded arrival stream plus a linear
+per-iteration cost model make every latency number reproducible across
+hosts (use ``--wall-time`` for real clocks).  ``--record``/``--replay``
+pin the exact request stream for policy A/Bs:
+
+    python benchmarks/serve_bench.py --workload MMMU --arrivals bursty \
+        --record /tmp/mmmu.jsonl
+    python benchmarks/serve_bench.py --replay /tmp/mmmu.jsonl --policy off
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.configs import ReaLBConfig, get_config, reduced
+from repro.models import transformer as tf
+from repro.serving.engine import Engine
+from repro.serving.telemetry import Telemetry
+from repro.workloads import (ArrivalConfig, ClosedLoop, IterationCostModel,
+                             VirtualClock, arrival_times, load_stream,
+                             make_stream, profile, save_stream, stream_stats)
+from repro.workloads.multimodal import RequestSpec, synth_request
+from repro.workloads.profiles import WORKLOADS
+
+# ReaLBConfig overrides per ablation arm
+POLICIES = {
+    "realb": {},
+    "realb-seq": {"overlap": False},     # serialise quantize after dispatch
+    "off": {"enabled": False},           # never compress
+}
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--workload", default="MMMU", choices=sorted(WORKLOADS))
+    ap.add_argument("--arrivals", default="poisson",
+                    choices=["poisson", "bursty", "diurnal", "closed"])
+    ap.add_argument("--policy", default="realb", choices=sorted(POLICIES))
+    ap.add_argument("--arch", default="moonshot-v1-16b-a3b")
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "full"])
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--rate", type=float, default=12.0,
+                    help="mean arrivals per (virtual) second")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--prefill-budget", type=int, default=1024)
+    ap.add_argument("--gate-gamma", type=int, default=512,
+                    help="LB gate Γ on *real* routed tokens; sized so "
+                         "multi-request prefill chunks cross it while "
+                         "decode batches stay far below")
+    ap.add_argument("--text-reserve", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--wall-time", action="store_true",
+                    help="use wall clocks instead of the virtual clock")
+    ap.add_argument("--record", default=None, metavar="PATH",
+                    help="save the realized request stream to JSONL")
+    ap.add_argument("--replay", default=None, metavar="PATH",
+                    help="replay a recorded JSONL stream (overrides "
+                         "--workload/--arrivals/--requests)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit one machine-readable JSON summary line")
+    return ap.parse_args(argv)
+
+
+def build_stream(args, vocab_size: int, max_prompt: int
+                 ) -> List[RequestSpec]:
+    prof = profile(args.workload)
+    acfg = ArrivalConfig(kind=args.arrivals, rate=args.rate,
+                         n_requests=args.requests, seed=args.seed,
+                         concurrency=min(args.slots, args.requests))
+    return make_stream(prof, arrival_times(acfg), vocab_size,
+                       seed=args.seed + 1, max_prompt=max_prompt)
+
+
+def serve(args, cfg, params, specs: List[RequestSpec]):
+    """Run the open-loop experiment; returns (telemetry, engine, realized
+    specs, wall seconds)."""
+    rcfg = ReaLBConfig(gate_gamma=args.gate_gamma, **POLICIES[args.policy])
+    telemetry = Telemetry()
+    if args.wall_time:
+        # zero the wall clock at run start so it is comparable with the
+        # stream's arrival times (seconds from 0) and paces the open loop
+        t_start = time.monotonic()
+        clock = lambda: time.monotonic() - t_start  # noqa: E731
+    else:
+        clock = VirtualClock()
+    cost = IterationCostModel() if not args.wall_time else None
+    eng = Engine(cfg, params, rcfg, max_slots=args.slots,
+                 max_len=args.max_len, prefill_budget=args.prefill_budget,
+                 text_reserve=args.text_reserve, clock=clock,
+                 telemetry=telemetry, cost_model=cost)
+
+    closed = None
+    prof = profile(args.workload)
+    spec_rng = np.random.default_rng(args.seed + 2)
+    next_uid = len(specs)
+    if args.arrivals == "closed" and args.replay is None:
+        closed = ClosedLoop(ArrivalConfig(
+            kind="closed", rate=args.rate, n_requests=args.requests,
+            seed=args.seed, concurrency=min(args.slots, args.requests)))
+
+    pending = sorted(specs, key=lambda s: s.arrival)
+    realized: List[RequestSpec] = []
+    n_total = args.requests if closed else len(pending)
+    n_finished_seen = 0
+    t0 = time.monotonic()
+    max_prompt = args.max_len - prof.max_new_max - 1
+    iters = 0
+    while len(eng.scheduler.finished) < n_total:
+        iters += 1
+        assert iters < 200_000, "serve loop failed to converge"
+        if eng.scheduler.idle and not pending:
+            break                     # nothing left to do (replay shorter?)
+        now = clock()
+        while pending and pending[0].arrival <= now:
+            spec = pending.pop(0)
+            realized.append(spec)
+            eng.submit(spec.to_request(d_model=cfg.d_model))
+        if eng.scheduler.idle and pending:
+            # idle gap: jump the event clock to the next arrival
+            if isinstance(clock, VirtualClock):
+                clock.advance(pending[0].arrival - now)
+            else:
+                time.sleep(max(pending[0].arrival - now, 0.0))
+            continue
+        eng.step()   # the engine advances the virtual clock per forward
+        if closed is not None:
+            # every completion re-arms one user after a think time
+            for req in eng.scheduler.finished[n_finished_seen:]:
+                nxt = closed.next_arrival(req.finish_time)
+                if nxt is not None:
+                    spec = synth_request(prof, next_uid, nxt, spec_rng,
+                                         cfg.vocab_size,
+                                         max_prompt=max_prompt)
+                    next_uid += 1
+                    pending.append(spec)
+            pending.sort(key=lambda s: s.arrival)
+            n_finished_seen = len(eng.scheduler.finished)
+    return telemetry, eng, realized, time.monotonic() - t0
+
+
+def main(argv=None) -> int:
+    import jax
+
+    args = parse_args(argv)
+    cfg = get_config(args.arch)
+    if args.preset == "tiny":
+        cfg = reduced(cfg)
+    prof = profile(args.workload)
+    max_prompt = args.max_len - prof.max_new_max - 1
+
+    if args.replay:
+        meta, specs = load_stream(args.replay)
+        args.requests = len(specs)
+        if args.arrivals == "closed":
+            args.arrivals = meta.get("arrivals", "poisson")
+        print(f"replaying {len(specs)} requests from {args.replay} "
+              f"(meta: {meta})")
+    else:
+        specs = build_stream(args, cfg.vocab_size, max_prompt)
+
+    print(f"workload={args.workload} arrivals={args.arrivals} "
+          f"policy={args.policy} arch={cfg.name} "
+          f"slots={args.slots} budget={args.prefill_budget} "
+          f"gate_gamma={args.gate_gamma}")
+    print(f"stream: {stream_stats(specs)}")
+
+    params = tf.init_model(cfg, jax.random.PRNGKey(args.seed))
+    telemetry, eng, realized, wall = serve(args, cfg, params, specs)
+
+    if args.record:
+        save_stream(args.record, realized,
+                    meta=dict(workload=args.workload,
+                              arrivals=args.arrivals, seed=args.seed,
+                              policy=args.policy))
+        print(f"recorded {len(realized)} requests -> {args.record}")
+
+    done = eng.scheduler.finished
+    out_toks = sum(len(r.generated) for r in done)
+    in_toks = sum(r.prompt_len for r in done)
+    s = telemetry.summary()
+    s["throughput_tok_per_s"] = (in_toks + out_toks) / max(wall, 1e-9)
+    s["wall_s"] = wall
+    if args.json:
+        print(json.dumps(s, default=float))
+        return 0
+
+    def fmt(d):
+        return " ".join(f"{k}={v:.4f}" for k, v in d.items()) or "(none)"
+
+    print(f"served {len(done)} requests, {in_toks} prompt + {out_toks} "
+          f"generated tokens in {wall:.1f}s wall "
+          f"({(in_toks + out_toks) / max(wall, 1e-9):.0f} tok/s), "
+          f"{s['n_iters']} iterations")
+    print(f"TTFT        {fmt(s['ttft'])}")
+    print(f"TTFT vision {fmt(s['ttft_vision'])}")
+    print(f"TTFT text   {fmt(s['ttft_text'])}")
+    print(f"TPOT        {fmt(s['tpot'])}")
+    print(f"IB_global   {fmt(s['ib_global'])}")
+    print(f"gate duty: prefill={s['gate_duty_prefill']:.2f} "
+          f"decode={s['gate_duty_decode']:.2f}; "
+          f"fp4 duty: all={s['fp4_duty']:.2f} "
+          f"prefill={s['fp4_duty_prefill']:.2f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

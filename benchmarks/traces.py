@@ -37,23 +37,12 @@ class TraceConfig:
     seed: int = 0
 
 
-# per-benchmark workload profiles (modality mix & dynamics differ)
-WORKLOADS: Dict[str, Dict] = {
-    "MMMU":      dict(vision_frac_mean=0.72, vision_frac_std=0.15,
-                      zipf_a=1.18, jump_every=220),
-    "MathVista": dict(vision_frac_mean=0.55, vision_frac_std=0.18,
-                      zipf_a=1.12, jump_every=300),
-    "DynaMath":  dict(vision_frac_mean=0.62, vision_frac_std=0.25,
-                      zipf_a=1.2, jump_every=160),
-    "AI2D":      dict(vision_frac_mean=0.5, vision_frac_std=0.12,
-                      zipf_a=1.1, jump_every=350),
-    "InfoVQA":   dict(vision_frac_mean=0.66, vision_frac_std=0.14,
-                      zipf_a=1.15, jump_every=280),
-    "TextVQA":   dict(vision_frac_mean=0.45, vision_frac_std=0.12,
-                      zipf_a=1.08, jump_every=320),
-    "MMBench":   dict(vision_frac_mean=0.55, vision_frac_std=0.15,
-                      zipf_a=1.12, jump_every=260),
-}
+# per-benchmark workload profiles (modality mix & dynamics differ) — the
+# calibration lives in repro.workloads.profiles, shared with the
+# request-level generator so trace-driven simulations and end-to-end
+# serving runs of one named workload agree; re-exported here for the
+# existing benchmark scripts.
+from repro.workloads.profiles import WORKLOADS  # noqa: E402
 
 
 def workload(name: str, **overrides) -> TraceConfig:

@@ -1,5 +1,10 @@
-"""Serving example: batched multimodal requests through the
-continuous-batching engine with ReaLB active.
+"""Serving example: a multimodal workload stream through the
+chunked-prefill continuous-batching engine with ReaLB active.
+
+Requests come from the MMMU workload profile (vision-heavy prompts) via
+the repro.workloads generators; prefill is batched and token-budgeted, so
+even this tiny run drives the MoE into the large-batch regime where the
+LB gate opens.
 
     PYTHONPATH=src python examples/serve_mmoe.py
 """
@@ -7,4 +12,6 @@ from repro.launch import serve as serve_mod
 
 if __name__ == "__main__":
     serve_mod.main(["--arch", "moonshot-v1-16b-a3b", "--preset", "tiny",
-                    "--requests", "10", "--max-new", "6", "--slots", "4"])
+                    "--workload", "MMMU", "--requests", "10",
+                    "--max-new", "6", "--slots", "4",
+                    "--prefill-budget", "128"])

@@ -41,7 +41,7 @@ from jax.sharding import PartitionSpec
 from repro.configs.base import ModelConfig, MoEConfig, ReaLBConfig
 from repro.core import quant
 from repro.core.policy import realb_policy
-from repro.models.common import P, current_mesh, resolve_spec
+from repro.models.common import P, current_mesh, resolve_spec, shard_map
 
 Params = Dict[str, jax.Array]
 F32 = jnp.float32
@@ -200,8 +200,9 @@ def _quantize_experts(w: Dict[str, jax.Array], use_fp4: jax.Array,
 # --------------------------------------------------------------------------
 # dispatch path (train / prefill)
 # --------------------------------------------------------------------------
-def _moe_dispatch(x_t, mod_t, p, m_vec, cfg, rcfg, comm, act, train):
-    """x_t [t,D] local tokens; mod_t [t] vision flags; m_vec [ep] AIMD."""
+def _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, train):
+    """x_t [t,D] local tokens; mod_t [t] vision flags; val_t [t] real-token
+    flags (False = batch padding); m_vec [ep] AIMD."""
     e_cfg = cfg.moe
     ep, e = comm.ep, cfg.moe.num_experts
     e_loc = e // ep
@@ -211,10 +212,14 @@ def _moe_dispatch(x_t, mod_t, p, m_vec, cfg, rcfg, comm, act, train):
     # ① routing + metadata (the lightweight "S" collection) ---------------
     gates, eidx, probs = _route(p["router"], x_t, e_cfg)
     flat_e = eidx.reshape(t * k)
-    counts_i = jnp.bincount(flat_e, length=e).astype(jnp.int32)
+    # counts are valid-weighted so the LB gate, IB_d, the AIMD update and
+    # the dispatch packing all see only real tokens — chunk-bucket padding
+    # neither moves the policy nor claims expert capacity
+    w_val = jnp.repeat(val_t.astype(F32), k)
+    counts_stat = jnp.bincount(flat_e, weights=w_val, length=e)
     vis_local = jnp.bincount(flat_e, weights=jnp.repeat(
-        mod_t.astype(F32), k), length=e)
-    counts_global = comm.psum_model(counts_i.astype(F32))     # [E]
+        (mod_t & val_t).astype(F32), k), length=e)
+    counts_global = comm.psum_model(counts_stat)              # [E]
     vis_global = comm.psum_model(vis_local)
     load_d = counts_global.reshape(ep, e_loc).sum(-1)         # [ep]
     vis_d = vis_global.reshape(ep, e_loc).sum(-1)
@@ -231,15 +236,23 @@ def _moe_dispatch(x_t, mod_t, p, m_vec, cfg, rcfg, comm, act, train):
         wq = _quantize_experts(w, use_fp4_me, rcfg, None)
 
     # dispatch --------------------------------------------------------------
+    # padding tokens are sorted to the back and never claim a capacity
+    # slot, so they cannot crowd real tokens out of the per-rank cap (the
+    # cap itself is provisioned from the static t, which over- rather than
+    # under-provisions when chunks underfill the bucket)
     dest = flat_e // e_loc
-    order = jnp.argsort(dest, stable=True)
+    valid_flat = jnp.repeat(val_t.astype(bool), k)
+    order = jnp.argsort(jnp.where(valid_flat, dest, ep), stable=True)
     dest_s = dest[order]
-    send_counts = counts_i.reshape(ep, e_loc).sum(-1)          # [ep] int
+    valid_s = valid_flat[order]
+    send_counts = counts_stat.astype(jnp.int32) \
+        .reshape(ep, e_loc).sum(-1)                            # [ep] valid
     offsets = jnp.cumsum(send_counts) - send_counts
     pos_in_rank = jnp.arange(t * k, dtype=jnp.int32) - offsets[dest_s]
     cap = max(8, -(-math.ceil(t * k / ep * e_cfg.capacity_factor) // 8) * 8)
     big = ep * cap + 7                       # OOB -> dropped (mode="drop")
-    slot_s = jnp.where(pos_in_rank < cap, dest_s * cap + pos_in_rank, big)
+    slot_s = jnp.where(valid_s & (pos_in_rank < cap),
+                       dest_s * cap + pos_in_rank, big)
 
     tok_idx_s = (order // k).astype(jnp.int32)
     vals_s = jnp.take(x_t, tok_idx_s, axis=0)
@@ -287,7 +300,7 @@ def _moe_dispatch(x_t, mod_t, p, m_vec, cfg, rcfg, comm, act, train):
     # diagnostics ------------------------------------------------------------
     total = jnp.sum(load_d)
     dropped = comm.psum_model(
-        jnp.sum((slot_flat >= big).astype(F32)))
+        jnp.sum((slot_flat >= big).astype(F32) * w_val))
     aux = _aux_losses(probs, counts_global, total / max(k, 1), e_cfg,
                       comm.psum_model)
     aux.update(drop_frac=dropped / jnp.maximum(total, 1.0),
@@ -301,7 +314,7 @@ def _moe_dispatch(x_t, mod_t, p, m_vec, cfg, rcfg, comm, act, train):
 # --------------------------------------------------------------------------
 # broadcast path (decode)
 # --------------------------------------------------------------------------
-def _moe_broadcast(x_t, mod_t, p, m_vec, cfg, rcfg, comm, act):
+def _moe_broadcast(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act):
     """Decode-regime MoE: tokens replicated over the EP axis."""
     e_cfg = cfg.moe
     ep, e = comm.ep, e_cfg.num_experts
@@ -311,9 +324,11 @@ def _moe_broadcast(x_t, mod_t, p, m_vec, cfg, rcfg, comm, act):
 
     gates, eidx, probs = _route(p["router"], x_t, e_cfg)
     flat_e = eidx.reshape(t * k)
-    counts = jnp.bincount(flat_e, length=e).astype(F32)        # row totals
+    # valid-weighted: dummy decode rows (inactive slots) don't count
+    w_val = jnp.repeat(val_t.astype(F32), k)
+    counts = jnp.bincount(flat_e, weights=w_val, length=e)     # row totals
     vis = jnp.bincount(flat_e, weights=jnp.repeat(
-        mod_t.astype(F32), k), length=e)
+        (mod_t & val_t).astype(F32), k), length=e)
     load_d = counts.reshape(ep, e_loc).sum(-1)
     vis_d = vis.reshape(ep, e_loc).sum(-1)
     dec = realb_policy(load_d, vis_d, m_vec, rcfg)
@@ -370,12 +385,13 @@ AUX_SCALARS = ("lb_loss", "z_loss", "drop_frac", "ib_global", "fp4_ranks",
                "gate_open")
 
 
-def _manual_fn(x, mod, m_state, router, w_gate, w_up, w_down, *, cfg, rcfg,
-               ep, mode, fsdp, train):
+def _manual_fn(x, mod, val, m_state, router, w_gate, w_up, w_down, *, cfg,
+               rcfg, ep, mode, fsdp, train):
     comm = _dist_comm(ep, fsdp)
     b, s, d = x.shape
     x_t = x.reshape(b * s, d)
     mod_t = mod.reshape(b * s)
+    val_t = val.reshape(b * s)
     # every device holds its own scalar M_d; gather the EP-group vector via
     # psum-of-onehot (provably replicated over 'model' for the VMA checker)
     m_vec = comm.psum_model(
@@ -383,11 +399,11 @@ def _manual_fn(x, mod, m_state, router, w_gate, w_up, w_down, *, cfg, rcfg,
     p = {"router": router, "w_gate": w_gate, "w_up": w_up, "w_down": w_down}
     act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
     if mode == "broadcast":
-        y, m_new, aux = _moe_broadcast(x_t, mod_t, p, m_vec, cfg, rcfg,
-                                       comm, act)
+        y, m_new, aux = _moe_broadcast(x_t, mod_t, val_t, p, m_vec, cfg,
+                                       rcfg, comm, act)
     else:
-        y, m_new, aux = _moe_dispatch(x_t, mod_t, p, m_vec, cfg, rcfg,
-                                      comm, act, train)
+        y, m_new, aux = _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg,
+                                      rcfg, comm, act, train)
     y = y.reshape(b, s, d)
     m_out = m_new[comm.my_rank].reshape(m_state.shape)
     aux_s = jnp.stack([aux[n] for n in AUX_SCALARS]).reshape(1, -1)
@@ -399,12 +415,17 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
                    rcfg: ReaLBConfig, m_state: jax.Array,
                    modality: Optional[jax.Array] = None,
                    mode: str = "dispatch", train: bool = False,
-                   fsdp: bool = False):
+                   fsdp: bool = False,
+                   valid: Optional[jax.Array] = None):
     """MoE layer with ReaLB.  x [B,S,D]; m_state [groups, ep] (see
-    :func:`moe_state_shape`).  Returns (y, new_m_state, aux_dict)."""
+    :func:`moe_state_shape`); valid [B,S] marks real tokens (None = all) —
+    padding still computes but is excluded from the routing stats the
+    policy consumes.  Returns (y, new_m_state, aux_dict)."""
     mesh = current_mesh()
     if modality is None:
         modality = jnp.zeros(x.shape[:2], jnp.bool_)
+    if valid is None:
+        valid = jnp.ones(x.shape[:2], jnp.bool_)
 
     local = (mesh is None or "model" not in mesh.axis_names or
              dict(zip(mesh.axis_names, mesh.devices.shape))["model"] == 1)
@@ -415,7 +436,8 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
         fn = _moe_broadcast if mode == "broadcast" else partial(
             _moe_dispatch, train=train)
         y, m_new, aux = fn(x.reshape(b * s, d), modality.reshape(b * s),
-                           p, m_state.reshape(-1), cfg, rcfg, comm, act)
+                           valid.reshape(b * s), p, m_state.reshape(-1),
+                           cfg, rcfg, comm, act)
         return (y.reshape(b, s, d), m_new.reshape(m_state.shape), aux)
 
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -440,12 +462,12 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
 
     fn = partial(_manual_fn, cfg=cfg, rcfg=rcfg, ep=ep, mode=mode,
                  fsdp=fsdp, train=train)
-    y, m_new, aux_s, stats = jax.shard_map(
+    y, m_new, aux_s, stats = shard_map(
         fn, mesh=mesh,
-        in_specs=(x_spec, mod_spec, m_spec, r_spec, wg_spec, wg_spec,
-                  wd_spec),
+        in_specs=(x_spec, mod_spec, mod_spec, m_spec, r_spec, wg_spec,
+                  wg_spec, wd_spec),
         out_specs=(x_spec, m_spec, aux_spec, stats_spec),
-    )(x, modality, m_state, p["router"], p["w_gate"], p["w_up"],
+    )(x, modality, valid, m_state, p["router"], p["w_gate"], p["w_up"],
       p["w_down"])
 
     aux_mean = aux_s.mean(0)

@@ -421,6 +421,70 @@ def _scatter_kv(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
     return logical_constraint(out, ("batch", "kv_seq", "kv_heads", None))
 
 
+def _chunk_attention(q, k, v, scale, q_pos):
+    """Chunk-prefill attention: queries [B,S,H,D] at absolute positions
+    ``q_pos`` [B,S] against a full cache k/v [B,L,K,D].  Per-row causal mask
+    ``kv_pos <= q_pos`` — everything at or before a query's position was
+    written by this request's own chunks, so stale KV from a previous slot
+    occupant (only ever at later positions) is masked out structurally.
+    """
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    odt = q.dtype
+    k = k.astype(q.dtype)
+    v = v.astype(q.dtype)
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qh = q.transpose(0, 2, 1, 3)                           # [B,H,S,D]
+    scores = jnp.einsum("bhsd,bthd->bhst", qh, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = logical_constraint(scores, ("batch", "heads", "seq", None))
+    mask = jnp.arange(t)[None, None, None, :] <= q_pos[:, None, :, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bhsd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.transpose(0, 2, 1, 3).astype(odt)
+
+
+def gqa_chunk(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
+              cfg: ModelConfig, *, positions: jax.Array,
+              chunk_len: jax.Array
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Cached multi-token prefill continuation (chunked prefill).
+
+    x: [B,S,D] one prompt chunk per row; cache k/v: [B,L,K,D];
+    positions: [B,S] absolute position of every chunk column;
+    chunk_len: [B] valid tokens per row (0 = idle row: nothing is written
+    and the row's output is garbage the caller discards).
+    """
+    b, s, _ = x.shape
+    t = cache["k"].shape[1]
+    q, k_new, v_new = _project_qkv(p, x, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    # scatter valid chunk KV into the cache; padding columns and idle rows
+    # get an out-of-bounds index, which scatter drops
+    idx = jnp.where(jnp.arange(s)[None, :] < chunk_len[:, None],
+                    positions, t)
+    bidx = jnp.broadcast_to(jnp.arange(b)[:, None], (b, s))
+    k_cache = cache["k"].at[bidx, idx].set(
+        k_new.astype(cache["k"].dtype), mode="drop")
+    v_cache = cache["v"].at[bidx, idx].set(
+        v_new.astype(cache["v"].dtype), mode="drop")
+    k_cache = logical_constraint(k_cache,
+                                 ("batch", "kv_seq", "kv_heads", None))
+    v_cache = logical_constraint(v_cache,
+                                 ("batch", "kv_seq", "kv_heads", None))
+    out = _chunk_attention(q, k_cache, v_cache, cfg.head_dim ** -0.5,
+                           positions)
+    out = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+    return (logical_constraint(out, ("batch", "seq", None)),
+            {"k": k_cache, "v": v_cache})
+
+
 # --------------------------------------------------------------------------
 # cross-attention (VLM / enc-dec): kv from a fixed memory
 # --------------------------------------------------------------------------

@@ -229,17 +229,25 @@ def _pad_kv(arr: jax.Array, cache_len: int) -> jax.Array:
 def apply_layer(lp: Tree, x: jax.Array, cfg: ModelConfig, rcfg: ReaLBConfig,
                 mix: str, ffn: str, *, mode: str, positions, pos,
                 memory, cache_in, m_state, modality, cache_len: int,
-                fsdp: bool):
+                fsdp: bool, chunk_len=None, valid=None):
     """Returns (x, cache_out, m_state, aux_scalars, stats)."""
     aux = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
     stats = jnp.zeros((2,) + m_state.shape, jnp.float32)
     cache_out: Dict[str, jax.Array] = {}
     decode = mode == "decode"
+    with_cache = mode in ("prefill", "decode", "chunk")
 
     # ---- token mixer ----
     h = rms_norm(x, lp["norm1"], cfg.norm_eps)
     if mix in ("attn", "dec"):
-        if cfg.mla is not None:
+        if mode == "chunk":
+            # cached multi-token prefill continuation (plain GQA/MQA only;
+            # callers gate on cfg — see chunk_forward)
+            o, kv = attn.gqa_chunk(lp["attn"], h,
+                                   {"k": cache_in["k"], "v": cache_in["v"]},
+                                   cfg, positions=positions,
+                                   chunk_len=chunk_len)
+        elif cfg.mla is not None:
             if decode:
                 o, kv = attn.mla_decode(lp["attn"], h, cache_in, cfg, pos=pos)
             else:
@@ -258,7 +266,7 @@ def apply_layer(lp: Tree, x: jax.Array, cfg: ModelConfig, rcfg: ReaLBConfig,
                                          positions=positions, causal=causal)
                 if mode == "prefill":
                     kv = {k: _pad_kv(v, cache_len) for k, v in kv.items()}
-        if mode in ("prefill", "decode") and mix in ("attn", "dec"):
+        if with_cache and mix in ("attn", "dec"):
             cache_out.update(kv)
         if mode == "train":
             o = jax.ad_checkpoint.checkpoint_name(o, "attn_out")
@@ -297,7 +305,7 @@ def apply_layer(lp: Tree, x: jax.Array, cfg: ModelConfig, rcfg: ReaLBConfig,
         y, m_state, moe_aux = ep_moe.ep_moe_forward(
             lp["moe"], h2, cfg, rcfg, m_state, modality,
             mode="broadcast" if decode else "dispatch",
-            train=(mode == "train"), fsdp=fsdp)
+            train=(mode == "train"), fsdp=fsdp, valid=valid)
         if "shared" in lp:
             y = y + ffn_mod.ffn_forward(lp["shared"], h2, cfg)
         x = x + y
@@ -372,11 +380,12 @@ def _encode(params, cfg: ModelConfig, enc_embeds: jax.Array,
 
 
 def _run_stack(params, cfg, rcfg, x, *, mode, positions, pos, memory,
-               cache, m_state, modality, cache_len, fsdp):
+               cache, m_state, modality, cache_len, fsdp, chunk_len=None,
+               valid=None):
     layout, n_blocks, n_prefix = block_structure(cfg)
     new_cache: Dict[str, Any] = {}
     aux_acc = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
-    with_cache = mode in ("prefill", "decode")
+    with_cache = mode in ("prefill", "decode", "chunk")
 
     # unrolled prefix layers (e.g. moonshot's leading dense layer)
     if n_prefix:
@@ -389,7 +398,7 @@ def _run_stack(params, cfg, rcfg, x, *, mode, positions, pos, memory,
                 cfg.layer_kinds()[i], "dense", mode=mode,
                 positions=positions, pos=pos, memory=memory, cache_in=ci,
                 m_state=m_state, modality=modality, cache_len=cache_len,
-                fsdp=fsdp)
+                fsdp=fsdp, chunk_len=chunk_len, valid=valid)
             if with_cache:
                 new_cache["prefix"][str(i)] = co
             aux_acc = {k: aux_acc[k] + aux[k] for k in AUX_KEYS}
@@ -406,7 +415,7 @@ def _run_stack(params, cfg, rcfg, x, *, mode, positions, pos, memory,
                 bp[f"layer{i}"], h, cfg, rcfg, mix, f, mode=mode,
                 positions=positions, pos=pos, memory=memory, cache_in=ci,
                 m_state=m, modality=modality, cache_len=cache_len,
-                fsdp=fsdp)
+                fsdp=fsdp, chunk_len=chunk_len, valid=valid)
             if with_cache:
                 block_cache[f"layer{i}"] = co
             aux_b = {k: aux_b[k] + aux[k] for k in AUX_KEYS}
@@ -488,10 +497,49 @@ def prefill_forward(params, cfg: ModelConfig, rcfg: ReaLBConfig, batch,
     return ForwardResult(logits[:, 0], cache, m_state, aux)
 
 
+def chunk_forward(params, cfg: ModelConfig, rcfg: ReaLBConfig, batch,
+                  cache, m_state) -> ForwardResult:
+    """Chunked-prefill continuation step against a partially-filled cache.
+
+    batch: tokens [B,S] (one prompt chunk per row), start [B] (absolute
+    position of each row's first chunk token), chunk_len [B] (valid tokens
+    per row; 0 = idle row), modality [B,S].  Each row writes its chunk's KV
+    into the cache at [start, start+chunk_len) and attends causally to its
+    own prefix; padding columns and idle rows never touch the cache.
+    Returns logits at every row's last *valid* chunk position (only rows
+    that just finished their prompt should be sampled from).
+
+    Only uniform GQA/MQA decoder stacks support chunk continuation (no MLA
+    latent re-expansion, no SSM state threading, no enc-dec memory).
+    """
+    assert (cfg.mla is None and cfg.ssm is None and not cfg.is_encdec
+            and cfg.layer_pattern == "attn"), \
+        "chunked prefill supports plain-attention stacks only"
+    tokens = batch["tokens"]
+    start = batch["start"]
+    chunk_len = batch["chunk_len"]
+    b, s = tokens.shape
+    modality = batch.get("modality")
+    if modality is None:
+        modality = jnp.zeros((b, s), jnp.bool_)
+    positions = start[:, None] + jnp.arange(s)[None, :]
+    valid = jnp.arange(s)[None, :] < chunk_len[:, None]
+    x = _embed(params, cfg, tokens, None, "chunk")
+    x, cache, m_state, aux = _run_stack(
+        params, cfg, rcfg, x, mode="chunk", positions=positions, pos=start,
+        memory=None, cache=cache, m_state=m_state, modality=modality,
+        cache_len=0, fsdp=False, chunk_len=chunk_len, valid=valid)
+    last = jnp.clip(chunk_len - 1, 0, s - 1)
+    x_last = x[jnp.arange(b), last][:, None, :]
+    logits = _unembed(params, cfg, x_last)
+    return ForwardResult(logits[:, 0], cache, m_state, aux)
+
+
 def decode_forward(params, cfg: ModelConfig, rcfg: ReaLBConfig, batch,
                    cache, m_state) -> ForwardResult:
     """batch: tokens [B,1], pos [B], modality [B,1] (vision flag of the
-    *new* token; usually False during generation)."""
+    *new* token; usually False during generation), valid [B,1] (False =
+    dummy slot excluded from routing stats)."""
     tokens = batch["tokens"]
     pos = batch["pos"]
     modality = batch.get("modality")
@@ -501,7 +549,7 @@ def decode_forward(params, cfg: ModelConfig, rcfg: ReaLBConfig, batch,
     x, cache, m_state, aux = _run_stack(
         params, cfg, rcfg, x, mode="decode", positions=None, pos=pos,
         memory=None, cache=cache, m_state=m_state, modality=modality,
-        cache_len=0, fsdp=False)
+        cache_len=0, fsdp=False, valid=batch.get("valid"))
     logits = _unembed(params, cfg, x)
     return ForwardResult(logits[:, 0], cache, m_state, aux)
 

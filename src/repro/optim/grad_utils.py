@@ -14,6 +14,9 @@ from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.models.common import shard_map
 
 Tree = Any
 
@@ -59,6 +62,23 @@ def compressed_grad_psum(grads: Tree, err: Tree, axis_name: str
     new_err = jax.tree.map(lambda t: t[1], out,
                            is_leaf=lambda t: isinstance(t, tuple))
     return red, new_err
+
+
+def compressed_all_reduce(stacked_grads: Tree, stacked_err: Tree, mesh,
+                          axis_name: str = "data") -> Tuple[Tree, Tree]:
+    """Host-level entry: reduce per-rank gradient shards stacked on a
+    leading ``axis_name``-sized dim via :func:`compressed_grad_psum` inside
+    a manual ``shard_map`` region.  Every leaf must be ``[R, ...]`` with
+    ``R == mesh size along axis_name``; the returned reduced tree carries
+    the (identical) reduction in every row, the error-feedback tree stays
+    per-rank."""
+    spec = PartitionSpec(axis_name)
+
+    def fn(g, e):
+        return compressed_grad_psum(g, e, axis_name)
+
+    return shard_map(fn, mesh=mesh, in_specs=(spec, spec),
+                     out_specs=(spec, spec))(stacked_grads, stacked_err)
 
 
 def accumulate_grads(loss_fn: Callable, params: Tree, batches,

@@ -1,17 +1,30 @@
-"""Batched serving engine: prefill + decode with ReaLB active.
+"""Batched serving engine v2: chunked token-budgeted prefill + decode with
+ReaLB active.
 
 The engine holds one device-resident cache of ``max_slots`` sequences and
-drives the scheduler loop: admit → per-request prefill into the slot →
-batched decode step across all active slots.  The AIMD ``m_state`` of
-ReaLB persists across iterations, exactly like the controller in the
-paper's serving deployment; per-iteration routing/imbalance stats are
-recorded for the benchmarks.
+drives the scheduler loop.  Prefill is *chunked and batched*: each
+iteration packs up to ``prefill_budget`` prompt tokens across every slot
+with pending prefill work into one rectangular forward (per-slot chunk
+continuation state), so prefill batches reach the large-token regime where
+ReaLB's LB gate opens — instead of the v1 per-request batch-1 loop that
+never crossed ``gate_gamma``.  Decode remains one batched step across all
+decode-ready slots.  The AIMD ``m_state`` of ReaLB persists across both
+kinds of iteration, exactly like the controller in the paper's serving
+deployment; per-iteration routing/imbalance stats — prefill iterations
+included — are recorded for the benchmarks and streamed to an optional
+:class:`~repro.serving.telemetry.Telemetry` collector.
+
+Architectures whose caches cannot be continued mid-prompt (MLA latent,
+SSM state, enc-dec memory, VLM embed injection) fall back to the v1
+one-shot batch-1 prefill per request; everything downstream (timing,
+telemetry, modality-aware decode) is shared.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,32 +35,69 @@ from repro.core import ep_moe
 from repro.models import transformer as tf
 from repro.models.common import current_mesh
 from repro.serving.scheduler import Request, Scheduler
+from repro.serving.telemetry import Telemetry
 
 
 @dataclasses.dataclass
 class IterStats:
     """Per-iteration routing/balance diagnostics (benchmark input)."""
     n_active: int
-    tokens: int
+    tokens: int                  # real (non-padding) tokens this iteration
     ib_global: float
     fp4_ranks: float
     gate_open: float
+    phase: str = "decode"        # "prefill" | "decode"
+    t_wall: float = 0.0          # engine clock at record time
+    batch_tokens: int = 0        # tokens the MoE actually saw (incl. pad)
+    vis_frac: float = 0.0        # vision fraction of routed assignments
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    """Round a chunk length up to a power of two (bounds jit recompiles)."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, rcfg: ReaLBConfig,
                  max_slots: int = 8, max_len: int = 256,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 prefill_budget: int = 256, text_reserve: int = 1,
+                 clock: Callable[[], float] = time.monotonic,
+                 telemetry: Optional[Telemetry] = None,
+                 cost_model=None):
         self.cfg, self.params, self.rcfg = cfg, params, rcfg
         self.max_slots, self.max_len = max_slots, max_len
         self.temperature = temperature
-        self.scheduler = Scheduler(max_slots)
+        self.prefill_budget = prefill_budget
+        # chunk continuation needs a pure GQA/MQA decoder stack
+        self.chunked = (prefill_budget > 0 and cfg.mla is None
+                        and cfg.ssm is None and not cfg.is_encdec
+                        and cfg.layer_pattern == "attn"
+                        and cfg.family != "vlm")
+        self.scheduler = Scheduler(max_slots, text_reserve=text_reserve)
+        self.clock = clock
+        self.telemetry = telemetry
+        # virtual-time mode: an object with .cost(batch_tokens) -> seconds,
+        # paired with a clock exposing .advance(dt).  The clock is advanced
+        # right after each forward, *before* first-token/finish timestamps
+        # are stamped, so TTFT includes the iteration that produced the
+        # token — not just queueing delay.
+        self.cost_model = cost_model
         self.cache = tf.init_cache(cfg, max_slots, max_len)
         groups, ep = ep_moe.moe_state_shape(current_mesh(), max_slots)
         self.m_state = jnp.full((groups, ep), rcfg.md_init, jnp.float32)
         self.pos = np.zeros(max_slots, np.int32)      # next write position
         self.last_tok = np.zeros(max_slots, np.int32)
         self.active_mask = np.zeros(max_slots, bool)
+        self.decode_ready = np.zeros(max_slots, bool)
+        self.mod_state = np.zeros(max_slots, bool)    # decode-token modality
+        self._prefill_fifo: List[int] = []            # slots mid-prefill
+        # aux scalars come back summed over the layer scan; normalize to
+        # per-MoE-layer means so duty cycles / IB read as true fractions
+        self._n_moe = max(sum(1 for f in cfg.ffn_kinds() if f == "moe"), 1)
         self.stats: List[IterStats] = []
         self.key = jax.random.PRNGKey(seed)
         self._build()
@@ -60,15 +110,25 @@ class Engine:
         def prefill_one(params, m_state, batch):
             res = tf.prefill_forward(params, cfg, rcfg, batch, m_state,
                                      cache_len=self.max_len)
-            return res.logits, res.cache, res.m_state
+            return res.logits, res.cache, res.m_state, res.aux
 
         @jax.jit
-        def decode(params, cache, m_state, tokens, pos, modality):
-            batch = {"tokens": tokens, "pos": pos, "modality": modality}
+        def chunk_step(params, cache, m_state, tokens, start, chunk_len,
+                       modality):
+            batch = {"tokens": tokens, "start": start,
+                     "chunk_len": chunk_len, "modality": modality}
+            res = tf.chunk_forward(params, cfg, rcfg, batch, cache, m_state)
+            return res.logits, res.cache, res.m_state, res.aux
+
+        @jax.jit
+        def decode(params, cache, m_state, tokens, pos, modality, valid):
+            batch = {"tokens": tokens, "pos": pos, "modality": modality,
+                     "valid": valid}
             res = tf.decode_forward(params, cfg, rcfg, batch, cache, m_state)
             return res.logits, res.cache, res.m_state, res.aux
 
         self._prefill_one = prefill_one
+        self._chunk = chunk_step
         self._decode = decode
 
     # -- cache slot insertion ----------------------------------------------
@@ -97,6 +157,8 @@ class Engine:
     def submit(self, req: Request):
         assert req.prompt_len + req.max_new_tokens <= self.max_len, \
             (req.prompt_len, req.max_new_tokens, self.max_len)
+        if req.arrival_time is None:
+            req.arrival_time = self.clock()
         self.scheduler.submit(req)
 
     def _sample(self, logits: jax.Array) -> np.ndarray:
@@ -106,61 +168,178 @@ class Engine:
         return np.asarray(jax.random.categorical(
             sub, logits / self.temperature, axis=-1), np.int32)
 
+    def _tick(self, batch_tokens: int):
+        """Advance a virtual clock by the modeled cost of one forward."""
+        if self.cost_model is not None and hasattr(self.clock, "advance"):
+            self.clock.advance(self.cost_model.cost(batch_tokens))
+
+    def _record(self, *, phase: str, n_active: int, tokens: int,
+                batch_tokens: int, aux: Dict[str, Any]):
+        # moe_stats: [n_blocks, 2, groups, ep] stacked (load_d, vis_d) rows
+        ms = np.asarray(aux["moe_stats"], np.float64)
+        load_sum, vis_sum = float(ms[:, 0].sum()), float(ms[:, 1].sum())
+        stat = IterStats(
+            n_active=n_active, tokens=tokens,
+            ib_global=float(aux["ib_global"]) / self._n_moe,
+            fp4_ranks=float(aux["fp4_ranks"]) / self._n_moe,
+            gate_open=float(aux["gate_open"]) / self._n_moe,
+            phase=phase, t_wall=self.clock(), batch_tokens=batch_tokens,
+            vis_frac=vis_sum / max(load_sum, 1.0))
+        self.stats.append(stat)
+        if self.telemetry is not None:
+            self.telemetry.record_iter(stat)
+
+    def _finish(self, req: Request):
+        req.finish_time = self.clock()
+        if self.telemetry is not None:
+            self.telemetry.record_request(req)
+
+    # -- prefill paths -------------------------------------------------------
+    def _first_token(self, req: Request, tok: int):
+        req.generated.append(tok)
+        req.first_token_time = self.clock()
+        self.pos[req.slot] = req.prompt_len
+        self.last_tok[req.slot] = tok
+        self.decode_ready[req.slot] = True
+        if req.done:
+            self._finish(req)
+
+    def _prefill_oneshot(self, req: Request):
+        """v1 path: whole prompt, batch of 1, full-row cache insert."""
+        batch = {
+            "tokens": jnp.asarray(req.tokens, jnp.int32)[None],
+            "modality": jnp.asarray(req.modality, bool)[None],
+        }
+        if req.vision_embeds is not None:
+            batch["vision_embeds"] = jnp.asarray(
+                req.vision_embeds, jnp.dtype(self.cfg.param_dtype))[None]
+        if self.cfg.is_encdec:
+            batch["enc_embeds"] = jnp.asarray(
+                req.vision_embeds if req.vision_embeds is not None
+                else np.zeros((self.cfg.enc_seq_len, self.cfg.d_model),
+                              np.float32),
+                jnp.dtype(self.cfg.param_dtype))[None]
+        logits, new_cache, self.m_state, aux = self._prefill_one(
+            self.params, self.m_state, batch)
+        self._tick(req.prompt_len)
+        self._insert_cache(req.slot, new_cache)
+        req.prefill_pos = req.prompt_len
+        self._first_token(req, int(self._sample(logits)[0]))
+        self._record(phase="prefill", n_active=1, tokens=req.prompt_len,
+                     batch_tokens=req.prompt_len, aux=aux)
+
+    def _plan_chunks(self) -> List:
+        """Allocate the token budget over slots with pending prefill work,
+        oldest admission first; at most one partial chunk per iteration."""
+        budget = self.prefill_budget
+        plan = []
+        for slot in self._prefill_fifo:
+            if budget <= 0:
+                break
+            req = self.scheduler.active[slot]
+            take = min(req.prompt_len - req.prefill_pos, budget)
+            plan.append((slot, take))
+            budget -= take
+        return plan
+
+    def _chunk_prefill_step(self) -> int:
+        plan = self._plan_chunks()
+        if not plan:
+            return 0
+        s_bucket = _bucket(max(take for _, take in plan))
+        b = self.max_slots
+        tokens = np.zeros((b, s_bucket), np.int32)
+        modality = np.zeros((b, s_bucket), bool)
+        start = np.zeros(b, np.int32)
+        chunk_len = np.zeros(b, np.int32)
+        for slot, take in plan:
+            req = self.scheduler.active[slot]
+            p0 = req.prefill_pos
+            tokens[slot, :take] = req.tokens[p0:p0 + take]
+            modality[slot, :take] = req.modality[p0:p0 + take]
+            start[slot] = p0
+            chunk_len[slot] = take
+        logits, self.cache, self.m_state, aux = self._chunk(
+            self.params, self.cache, self.m_state, jnp.asarray(tokens),
+            jnp.asarray(start), jnp.asarray(chunk_len),
+            jnp.asarray(modality))
+        self._tick(b * s_bucket)
+        completing = [slot for slot, take in plan
+                      if self.scheduler.active[slot].prefill_pos + take
+                      >= self.scheduler.active[slot].prompt_len]
+        toks = self._sample(logits) if completing else None
+        n_tok = 0
+        for slot, take in plan:
+            req = self.scheduler.active[slot]
+            req.prefill_pos += take
+            n_tok += take
+            if req.prefill_pos >= req.prompt_len:
+                self._prefill_fifo.remove(slot)
+                self._first_token(req, int(toks[slot]))
+        self._record(phase="prefill", n_active=len(plan), tokens=n_tok,
+                     batch_tokens=b * s_bucket, aux=aux)
+        return n_tok
+
+    # -- the iteration --------------------------------------------------------
     def step(self) -> int:
         """One continuous-batching iteration. Returns #active sequences."""
-        # 1) admit + prefill new requests (slot-local, batch of 1)
+        # 0) purge slots freed by a mid-prefill retirement (e.g. a
+        # max_new_tokens=0 request) before they can be re-admitted
+        if self._prefill_fifo:
+            self._prefill_fifo = [s for s in self._prefill_fifo
+                                  if s in self.scheduler.active]
+        # 1) admit new requests; route each to the chunked or one-shot path
         for req in self.scheduler.admit():
-            batch = {
-                "tokens": jnp.asarray(req.tokens, jnp.int32)[None],
-                "modality": jnp.asarray(req.modality, bool)[None],
-            }
-            if req.vision_embeds is not None:
-                batch["vision_embeds"] = jnp.asarray(
-                    req.vision_embeds, jnp.dtype(self.cfg.param_dtype))[None]
-            if self.cfg.is_encdec:
-                batch["enc_embeds"] = jnp.asarray(
-                    req.vision_embeds if req.vision_embeds is not None
-                    else np.zeros((self.cfg.enc_seq_len, self.cfg.d_model),
-                                  np.float32),
-                    jnp.dtype(self.cfg.param_dtype))[None]
-            logits, new_cache, self.m_state = self._prefill_one(
-                self.params, self.m_state, batch)
-            self._insert_cache(req.slot, new_cache)
-            tok = self._sample(logits)[0]
-            req.generated.append(int(tok))
-            self.pos[req.slot] = req.prompt_len
-            self.last_tok[req.slot] = int(tok)
             self.active_mask[req.slot] = True
+            self.decode_ready[req.slot] = False
+            self.mod_state[req.slot] = req.decode_modality
+            if self.chunked and req.vision_embeds is None:
+                req.prefill_pos = 0
+                self._prefill_fifo.append(req.slot)
+            else:
+                self._prefill_oneshot(req)
+
+        # 2) one batched chunk of prefill work across all pending slots
+        if self._prefill_fifo:
+            self._chunk_prefill_step()
 
         self.scheduler.retire()
         for s in range(self.max_slots):
             self.active_mask[s] = s in self.scheduler.active
+            if not self.active_mask[s]:
+                self.decode_ready[s] = False
 
         if not self.scheduler.active:
             return 0
 
-        # 2) batched decode over all slots (inactive slots run dummies)
-        tokens = jnp.asarray(self.last_tok[:, None], jnp.int32)
-        pos = jnp.asarray(np.where(self.active_mask, self.pos, 0), jnp.int32)
-        modality = jnp.zeros((self.max_slots, 1), bool)
-        logits, self.cache, self.m_state, aux = self._decode(
-            self.params, self.cache, self.m_state, tokens, pos, modality)
-        toks = self._sample(logits)
+        # 3) batched decode over decode-ready slots (others run dummies whose
+        # cache writes land out of bounds and are dropped — a mid-prefill
+        # slot's cache must never be touched by the decode scatter)
+        ready = self.decode_ready & self.active_mask
         n_active = 0
-        for slot, req in list(self.scheduler.active.items()):
-            if not req.done:
-                req.generated.append(int(toks[slot]))
-                self.last_tok[slot] = int(toks[slot])
-                self.pos[slot] += 1
-                n_active += 1
-        self.stats.append(IterStats(
-            n_active=n_active,
-            tokens=n_active,
-            ib_global=float(aux["ib_global"]),
-            fp4_ranks=float(aux["fp4_ranks"]),
-            gate_open=float(aux["gate_open"])))
+        if ready.any():
+            tokens = jnp.asarray(self.last_tok[:, None], jnp.int32)
+            pos = jnp.asarray(np.where(ready, self.pos, self.max_len),
+                              jnp.int32)
+            modality = jnp.asarray(
+                np.where(ready, self.mod_state, False)[:, None])
+            logits, self.cache, self.m_state, aux = self._decode(
+                self.params, self.cache, self.m_state, tokens, pos, modality,
+                jnp.asarray(ready[:, None]))
+            self._tick(self.max_slots)
+            toks = self._sample(logits)
+            for slot, req in list(self.scheduler.active.items()):
+                if ready[slot] and not req.done:
+                    req.generated.append(int(toks[slot]))
+                    self.last_tok[slot] = int(toks[slot])
+                    self.pos[slot] += 1
+                    n_active += 1
+                    if req.done:
+                        self._finish(req)
+            self._record(phase="decode", n_active=n_active, tokens=n_active,
+                         batch_tokens=self.max_slots, aux=aux)
         self.scheduler.retire()
-        return n_active
+        return max(n_active, len(self._prefill_fifo))
 
     def run(self, max_iters: int = 10_000) -> List[Request]:
         it = 0

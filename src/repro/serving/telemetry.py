@@ -1,0 +1,134 @@
+"""Serving telemetry: rolling-window aggregation of engine iterations and
+request latencies into SLO-style percentiles.
+
+The engine emits one :class:`~repro.serving.engine.IterStats` per forward
+batch — prefill chunks included, which is where ReaLB's LB gate opens —
+and one finished :class:`~repro.serving.scheduler.Request` per completion.
+The collector keeps bounded deques (``window`` iterations / requests) so a
+long-running server reports *recent* percentiles, and exposes the headline
+quantities of the paper's serving evaluation: TTFT / TPOT percentiles,
+``ib_global`` distribution, and LB-gate / FP4 duty cycles split by phase.
+
+Percentiles use the linear-interpolation definition (numpy's default) but
+are implemented locally so the math is unit-testable without an engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Linear-interpolation percentile (numpy 'linear' method).
+
+    q in [0, 100].  Defined locally (not np.percentile) so the telemetry
+    math is dependency-light and directly unit-tested.
+    """
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile q out of range: {q}")
+    xs = sorted(xs)
+    if not xs:
+        raise ValueError("percentile of empty sequence")
+    if len(xs) == 1:
+        return float(xs[0])
+    rank = (q / 100.0) * (len(xs) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = rank - lo
+    return float(xs[lo] * (1.0 - frac) + xs[hi] * frac)
+
+
+def summarize(xs: Sequence[float], qs=(50, 90, 99)) -> Dict[str, float]:
+    """{"p50": ..., "p90": ..., ...} plus mean; empty input -> {}."""
+    xs = list(xs)
+    if not xs:
+        return {}
+    out = {f"p{int(q)}": percentile(xs, q) for q in qs}
+    out["mean"] = sum(xs) / len(xs)
+    return out
+
+
+@dataclasses.dataclass
+class RequestLatency:
+    uid: int
+    ttft: float                  # arrival -> first token
+    tpot: Optional[float]        # per-token after the first (None if 1 tok)
+    prompt_len: int
+    n_generated: int
+    is_vision: bool
+
+
+class Telemetry:
+    """Rolling-window collector; feed it from the engine, read summaries."""
+
+    def __init__(self, window: int = 512):
+        self.window = window
+        self.iters: Deque = deque(maxlen=window)        # IterStats
+        self.requests: Deque[RequestLatency] = deque(maxlen=window)
+        self.n_iters = 0
+        self.n_requests = 0
+
+    # -- feeds ------------------------------------------------------------
+    def record_iter(self, stat) -> None:
+        self.iters.append(stat)
+        self.n_iters += 1
+
+    def record_request(self, req) -> None:
+        if req.ttft is None:
+            return
+        self.requests.append(RequestLatency(
+            uid=req.uid, ttft=req.ttft, tpot=req.tpot,
+            prompt_len=req.prompt_len, n_generated=len(req.generated),
+            is_vision=req.is_vision))
+        self.n_requests += 1
+
+    # -- summaries --------------------------------------------------------
+    def _phase(self, phase: Optional[str]) -> List:
+        return [s for s in self.iters
+                if phase is None or s.phase == phase]
+
+    def gate_duty(self, phase: Optional[str] = "prefill") -> float:
+        """Fraction of (phase-filtered) iterations with the LB gate open."""
+        it = self._phase(phase)
+        if not it:
+            return 0.0
+        return sum(1.0 for s in it if s.gate_open > 0) / len(it)
+
+    def fp4_duty(self, phase: Optional[str] = None) -> float:
+        """Fraction of iterations on which >=1 rank ran its experts in FP4."""
+        it = self._phase(phase)
+        if not it:
+            return 0.0
+        return sum(1.0 for s in it if s.fp4_ranks > 0) / len(it)
+
+    def ib_summary(self, phase: Optional[str] = None) -> Dict[str, float]:
+        return summarize([s.ib_global for s in self._phase(phase)])
+
+    def ttft_summary(self) -> Dict[str, float]:
+        return summarize([r.ttft for r in self.requests])
+
+    def tpot_summary(self) -> Dict[str, float]:
+        return summarize([r.tpot for r in self.requests
+                          if r.tpot is not None])
+
+    def summary(self) -> Dict[str, object]:
+        """One flat report dict (benchmark / log-line friendly)."""
+        by_mod = {
+            "vision": [r.ttft for r in self.requests if r.is_vision],
+            "text": [r.ttft for r in self.requests if not r.is_vision],
+        }
+        return {
+            "n_iters": self.n_iters,
+            "n_requests": self.n_requests,
+            "ttft": self.ttft_summary(),
+            "ttft_vision": summarize(by_mod["vision"]),
+            "ttft_text": summarize(by_mod["text"]),
+            "tpot": self.tpot_summary(),
+            "ib_global": self.ib_summary(),
+            "ib_global_prefill": self.ib_summary("prefill"),
+            "gate_duty_prefill": self.gate_duty("prefill"),
+            "gate_duty_decode": self.gate_duty("decode"),
+            "fp4_duty": self.fp4_duty(),
+            "fp4_duty_prefill": self.fp4_duty("prefill"),
+        }

@@ -1,0 +1,21 @@
+"""Traffic-generation subsystem: request-level workloads for the serving
+stack (arrival processes, multimodal prompt synthesis, record/replay).
+
+The iteration-level trace generator in ``benchmarks/traces.py`` and this
+request-level layer share one calibration (:mod:`repro.workloads.profiles`).
+"""
+from repro.workloads.arrivals import (ArrivalConfig, ClosedLoop,
+                                      IterationCostModel, VirtualClock,
+                                      arrival_times)
+from repro.workloads.multimodal import (PromptProfile, RequestSpec,
+                                        make_stream, profile, stream_stats,
+                                        synth_request)
+from repro.workloads.profiles import WORKLOADS
+from repro.workloads.replay import load_stream, save_stream
+
+__all__ = [
+    "ArrivalConfig", "ClosedLoop", "IterationCostModel", "VirtualClock",
+    "arrival_times", "PromptProfile", "RequestSpec", "make_stream",
+    "profile", "stream_stats", "synth_request", "WORKLOADS",
+    "load_stream", "save_stream",
+]

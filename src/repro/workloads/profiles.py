@@ -1,0 +1,32 @@
+"""Per-benchmark workload calibration (modality mix & routing dynamics).
+
+Single source of truth shared by BOTH workload layers:
+
+* the iteration-level trace generator (``benchmarks/traces.py``) uses the
+  modality mix plus the routing-skew fields (``zipf_a``, ``jump_every``),
+* the request-level generator (:mod:`repro.workloads.multimodal`) uses the
+  modality mix to synthesize per-request prompts,
+
+so trace-driven policy simulations and end-to-end serving runs of the same
+named workload are calibrated identically (paper §5.1 benchmark suite).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+WORKLOADS: Dict[str, Dict] = {
+    "MMMU":      dict(vision_frac_mean=0.72, vision_frac_std=0.15,
+                      zipf_a=1.18, jump_every=220),
+    "MathVista": dict(vision_frac_mean=0.55, vision_frac_std=0.18,
+                      zipf_a=1.12, jump_every=300),
+    "DynaMath":  dict(vision_frac_mean=0.62, vision_frac_std=0.25,
+                      zipf_a=1.2, jump_every=160),
+    "AI2D":      dict(vision_frac_mean=0.5, vision_frac_std=0.12,
+                      zipf_a=1.1, jump_every=350),
+    "InfoVQA":   dict(vision_frac_mean=0.66, vision_frac_std=0.14,
+                      zipf_a=1.15, jump_every=280),
+    "TextVQA":   dict(vision_frac_mean=0.45, vision_frac_std=0.12,
+                      zipf_a=1.08, jump_every=320),
+    "MMBench":   dict(vision_frac_mean=0.55, vision_frac_std=0.15,
+                      zipf_a=1.12, jump_every=260),
+}

@@ -94,6 +94,32 @@ def check_realb_fp4_rank_activates():
     assert 1e-6 < rel < 0.5, rel   # changed, but quantization-sized
 
 
+def check_chunk_padding_isolated_under_ep():
+    """Chunk-bucket padding on an EP>1 mesh: adversarial padding (zero
+    embeddings, so every padding token routes to the same top-k experts)
+    must neither crowd real tokens out of the per-rank capacity nor move
+    the routing stats."""
+    cfg, p, x, mod = _moe_setup()
+    rcfg = ReaLBConfig(gate_gamma=10 ** 9)
+    x_pad = x.at[:, 8:].set(0.0)                 # second half = padding
+    valid = jnp.zeros((4, 16), bool).at[:, :8].set(True)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    with use_mesh(mesh):
+        m = jnp.full(ep_moe.moe_state_shape(mesh, 4), 0.9)
+        y, _, aux = jax.jit(
+            lambda p, x, m, mod, v: ep_moe.ep_moe_forward(
+                p, x, cfg, rcfg, m, mod, mode="dispatch", valid=v))(
+            p, x_pad, m, mod, valid)
+    y_ref, _, _ = ep_moe.ep_moe_forward(
+        p, x_pad[:, :8], cfg, rcfg, jnp.full((1, 1), 0.9), mod[:, :8],
+        mode="dispatch")
+    err = float(jnp.max(jnp.abs(y[:, :8] - y_ref)))
+    assert err < 5e-5, err
+    assert float(aux["drop_frac"]) == 0.0, float(aux["drop_frac"])
+    total = float(jnp.sum(jnp.asarray(aux["load_d"])))
+    assert total == 4 * 8 * cfg.moe.top_k, total   # valid tokens only
+
+
 def check_model_train_step_under_mesh():
     """Tiny full model: distributed train step ≈ single-device step."""
     from repro.optim import adamw

@@ -13,6 +13,7 @@ CHECKS = [
     "ep_dispatch_matches_local",
     "ep_broadcast_matches_local",
     "realb_fp4_rank_activates",
+    "chunk_padding_isolated_under_ep",
     "model_train_step_under_mesh",
     "decode_under_mesh",
     "elastic_reshard",

@@ -1,24 +1,27 @@
-"""ReaLB control policy invariants (hypothesis property tests)."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+"""ReaLB control policy invariants.
+
+Property tests run under ``hypothesis`` when it is installed; a seeded
+plain-pytest subset of each property exercises the same check functions so
+collection and coverage never depend on the optional package.
+"""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import ReaLBConfig
 from repro.core.policy import lb_gate, realb_policy
 
-loads = hnp.arrays(np.float64, (8,),
-                   elements=st.floats(0, 1e6, allow_nan=False))
-ms = hnp.arrays(np.float64, (8,), elements=st.floats(0, 1))
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 
-@hypothesis.given(loads, st.data())
-@hypothesis.settings(deadline=None, max_examples=200)
-def test_policy_invariants(load, data):
-    vis_frac = data.draw(hnp.arrays(np.float64, (8,),
-                                    elements=st.floats(0, 1)))
-    m = data.draw(ms)
+# -- shared check bodies (hypothesis and plain tests both call these) -------
+def check_policy_invariants(load, vis_frac, m):
     vis = load * vis_frac
     cfg = ReaLBConfig()
     dec = realb_policy(jnp.asarray(load), jnp.asarray(vis), jnp.asarray(m),
@@ -43,10 +46,7 @@ def test_policy_invariants(load, data):
     assert abs(float(dec.ib_global) - ib.max()) < 1e-5
 
 
-@hypothesis.given(hnp.arrays(np.float64, (8,),
-                             elements=st.floats(1, 1e6)))  # token counts
-@hypothesis.settings(deadline=None, max_examples=100)
-def test_aimd_direction(load):
+def check_aimd_direction(load):
     """congested ⇒ every M_d halves; calm ⇒ every M_d rises by md_add."""
     load = np.round(load)
     cfg = ReaLBConfig(gate_gamma=0)
@@ -60,6 +60,47 @@ def test_aimd_direction(load):
         np.testing.assert_allclose(m_new, 0.4, atol=1e-6)
     else:
         np.testing.assert_allclose(m_new, 0.9, atol=1e-6)
+
+
+# -- hypothesis property tests (optional) -----------------------------------
+if HAVE_HYPOTHESIS:
+    loads = hnp.arrays(np.float64, (8,),
+                       elements=st.floats(0, 1e6, allow_nan=False))
+    ms = hnp.arrays(np.float64, (8,), elements=st.floats(0, 1))
+
+    @hypothesis.given(loads, st.data())
+    @hypothesis.settings(deadline=None, max_examples=200)
+    def test_policy_invariants(load, data):
+        vis_frac = data.draw(hnp.arrays(np.float64, (8,),
+                                        elements=st.floats(0, 1)))
+        m = data.draw(ms)
+        check_policy_invariants(load, vis_frac, m)
+
+    @hypothesis.given(hnp.arrays(np.float64, (8,),
+                                 elements=st.floats(1, 1e6)))  # token counts
+    @hypothesis.settings(deadline=None, max_examples=100)
+    def test_aimd_direction(load):
+        check_aimd_direction(load)
+
+
+# -- plain-pytest subset (always runs) --------------------------------------
+@pytest.mark.parametrize("seed", range(25))
+def test_policy_invariants_sampled(seed):
+    rng = np.random.default_rng(seed)
+    # mix uniform-magnitude and heavy-tailed loads, plus degenerate corners
+    if seed % 5 == 0:
+        load = np.zeros(8)
+    elif seed % 5 == 1:
+        load = rng.uniform(0, 10, 8)          # below-gate totals
+    else:
+        load = np.exp(rng.uniform(0, np.log(1e6), 8))
+    check_policy_invariants(load, rng.uniform(0, 1, 8), rng.uniform(0, 1, 8))
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_aimd_direction_sampled(seed):
+    rng = np.random.default_rng(100 + seed)
+    check_aimd_direction(np.exp(rng.uniform(0, np.log(1e6), 8)))
 
 
 def test_monotone_in_modality_threshold():

@@ -1,12 +1,22 @@
-"""NVFP4 quantization recipe properties (paper Appendix E)."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+"""NVFP4 quantization recipe properties (paper Appendix E).
+
+Property tests run under ``hypothesis`` when it is installed; seeded
+plain-pytest subsets call the same check bodies so collection and coverage
+never depend on the optional package.
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import quant
+
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 FP4_GRID = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0])
 GRID_ALL = np.sort(np.concatenate([-FP4_GRID, FP4_GRID]))
@@ -40,10 +50,8 @@ def test_pack_unpack_roundtrip():
     np.testing.assert_array_equal(np.asarray(quant.unpack_u4(packed)), codes)
 
 
-@hypothesis.given(hnp.arrays(np.float32, (8,),
-                             elements=st.floats(-448, 448, width=32)))
-@hypothesis.settings(deadline=None, max_examples=100)
-def test_e4m3_idempotent_and_bounded(x):
+# -- shared check bodies ----------------------------------------------------
+def check_e4m3_idempotent_and_bounded(x):
     y = np.asarray(quant.e4m3_round(jnp.asarray(x)))
     y2 = np.asarray(quant.e4m3_round(jnp.asarray(y)))
     np.testing.assert_array_equal(y, y2)          # representable fixed point
@@ -54,14 +62,7 @@ def test_e4m3_idempotent_and_bounded(x):
     assert np.all(err <= bound + 1e-6)
 
 
-def test_e4m3_clamps():
-    y = np.asarray(quant.e4m3_round(jnp.asarray([1e6, -1e6, 500.0])))
-    np.testing.assert_array_equal(y, [448.0, -448.0, 448.0])
-
-
-@hypothesis.given(st.integers(0, 2 ** 31 - 1), st.floats(1e-3, 10.0))
-@hypothesis.settings(deadline=None, max_examples=40)
-def test_quantize_roundtrip_error_bound(seed, scale):
+def check_quantize_roundtrip_error_bound(seed, scale):
     rng = np.random.default_rng(seed)
     w = (rng.normal(0, scale, (4, 64))).astype(np.float32)
     q = quant.quantize_fp4(jnp.asarray(w))
@@ -71,6 +72,42 @@ def test_quantize_roundtrip_error_bound(seed, scale):
     err = np.abs(dq.reshape(4, 4, 16) - wg)
     # grid step <= amax/3 around the top; scale rounding <= 6.25% extra
     assert np.all(err <= 0.25 * amax + 1e-7)
+
+
+# -- hypothesis property tests (optional) -----------------------------------
+if HAVE_HYPOTHESIS:
+    @hypothesis.given(hnp.arrays(np.float32, (8,),
+                                 elements=st.floats(-448, 448, width=32)))
+    @hypothesis.settings(deadline=None, max_examples=100)
+    def test_e4m3_idempotent_and_bounded(x):
+        check_e4m3_idempotent_and_bounded(x)
+
+    @hypothesis.given(st.integers(0, 2 ** 31 - 1), st.floats(1e-3, 10.0))
+    @hypothesis.settings(deadline=None, max_examples=40)
+    def test_quantize_roundtrip_error_bound(seed, scale):
+        check_quantize_roundtrip_error_bound(seed, scale)
+
+
+# -- plain-pytest subset (always runs) --------------------------------------
+@pytest.mark.parametrize("seed", range(10))
+def test_e4m3_idempotent_and_bounded_sampled(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-448, 448, 8).astype(np.float32)
+    if seed == 0:
+        x = np.array([0.0, -0.0, 448.0, -448.0, 1e-6, -1e-6, 2.0, 3.1],
+                     np.float32)
+    check_e4m3_idempotent_and_bounded(x)
+
+
+@pytest.mark.parametrize("seed,scale", [(0, 1e-3), (1, 0.05), (2, 1.0),
+                                        (3, 10.0), (4, 0.3)])
+def test_quantize_roundtrip_error_bound_sampled(seed, scale):
+    check_quantize_roundtrip_error_bound(seed, scale)
+
+
+def test_e4m3_clamps():
+    y = np.asarray(quant.e4m3_round(jnp.asarray([1e6, -1e6, 500.0])))
+    np.testing.assert_array_equal(y, [448.0, -448.0, 448.0])
 
 
 def test_fp4_sim_gradient_straight_through():

@@ -1,0 +1,223 @@
+"""repro.workloads: arrival determinism, stream synthesis, replay,
+telemetry percentile math, modality-aware admission."""
+import numpy as np
+import pytest
+
+from repro.serving.scheduler import Request, Scheduler
+from repro.serving.telemetry import Telemetry, percentile, summarize
+from repro.workloads import (ArrivalConfig, ClosedLoop, IterationCostModel,
+                             VirtualClock, arrival_times, load_stream,
+                             make_stream, profile, save_stream,
+                             stream_stats)
+from repro.workloads.profiles import WORKLOADS
+
+OPEN_KINDS = ("poisson", "bursty", "diurnal")
+
+
+# -- arrivals ---------------------------------------------------------------
+@pytest.mark.parametrize("kind", OPEN_KINDS)
+def test_arrivals_deterministic(kind):
+    cfg = ArrivalConfig(kind=kind, n_requests=64, rate=10.0, seed=7)
+    a, b = arrival_times(cfg), arrival_times(cfg)
+    np.testing.assert_array_equal(a, b)
+    c = arrival_times(ArrivalConfig(kind=kind, n_requests=64, rate=10.0,
+                                    seed=8))
+    assert not np.array_equal(a, c)
+    assert len(a) == 64
+    assert np.all(np.diff(a) >= 0) and np.all(a > 0)
+
+
+def test_arrivals_rate_calibration():
+    # long poisson stream: realized rate within 20% of nominal
+    cfg = ArrivalConfig(kind="poisson", n_requests=2000, rate=10.0, seed=0)
+    t = arrival_times(cfg)
+    assert abs(len(t) / t[-1] - 10.0) < 2.0
+
+
+def test_bursty_is_burstier_than_poisson():
+    # squared coefficient of variation of inter-arrival gaps: ~1 for
+    # poisson, > 1 for the MMPP (deterministic given the fixed seeds)
+    n = 2000
+    tp = arrival_times(ArrivalConfig(kind="poisson", n_requests=n, seed=1))
+    tb = arrival_times(ArrivalConfig(kind="bursty", n_requests=n, seed=1))
+    cv2 = lambda t: float(np.var(np.diff(t)) / np.mean(np.diff(t)) ** 2)
+    assert cv2(tb) > 1.5 * cv2(tp)
+
+
+def test_closed_loop_feedback():
+    cfg = ArrivalConfig(kind="closed", n_requests=10, concurrency=4, seed=0)
+    first = arrival_times(cfg)
+    assert len(first) == 4 and np.all(first == 0.0)
+    loop = ClosedLoop(cfg)
+    times = []
+    t = 1.0
+    while True:
+        nxt = loop.next_arrival(t)
+        if nxt is None:
+            break
+        assert nxt >= t
+        times.append(nxt)
+        t = nxt + 0.5
+    assert len(times) == 6            # 10 total - 4 initial
+
+
+def test_virtual_clock_and_cost_model():
+    clk = VirtualClock()
+    assert clk() == 0.0
+    cm = IterationCostModel(fixed=1e-3, per_token=1e-5)
+    clk.advance(cm.cost(1000))
+    assert clk() == pytest.approx(1e-3 + 1e-2)
+
+
+# -- multimodal synthesis ---------------------------------------------------
+def test_stream_deterministic_and_calibrated():
+    arr = arrival_times(ArrivalConfig(kind="poisson", n_requests=60, seed=2))
+    s1 = make_stream(profile("MMMU"), arr, 512, seed=5)
+    s2 = make_stream(profile("MMMU"), arr, 512, seed=5)
+    for a, b in zip(s1, s2):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        np.testing.assert_array_equal(a.modality, b.modality)
+        assert a.arrival == b.arrival
+    # MMMU is vision-heavy, TextVQA is not: the shared calibration shows
+    st_m = stream_stats(s1)
+    st_t = stream_stats(make_stream(profile("TextVQA"), arr, 512, seed=5))
+    assert st_m["mean_vision_frac"] > st_t["mean_vision_frac"]
+    # vision tokens live in the upper half of the vocab
+    for s in s1[:8]:
+        if s.modality.any():
+            assert np.all(s.tokens[s.modality] >= 256)
+        assert np.all(s.tokens[~s.modality] < 256)
+
+
+def test_profile_shares_trace_calibration():
+    p = profile("DynaMath")
+    assert p.vision_frac_mean == WORKLOADS["DynaMath"]["vision_frac_mean"]
+    assert p.vision_frac_std == WORKLOADS["DynaMath"]["vision_frac_std"]
+
+
+def test_prompt_length_bounds():
+    arr = np.zeros(100)
+    specs = make_stream(profile("MMMU"), arr, 512, seed=0, max_prompt=64)
+    for s in specs:
+        assert 16 <= len(s.tokens) <= 64
+        assert len(s.modality) == len(s.tokens)
+
+
+# -- replay -----------------------------------------------------------------
+def test_replay_roundtrip_exact(tmp_path):
+    arr = arrival_times(ArrivalConfig(kind="bursty", n_requests=20, seed=3))
+    specs = make_stream(profile("InfoVQA"), arr, 1024, seed=9,
+                        with_embeds=True)
+    path = tmp_path / "stream.jsonl"
+    save_stream(path, specs, meta={"workload": "InfoVQA", "seed": 9})
+    meta, back = load_stream(path)
+    assert meta == {"workload": "InfoVQA", "seed": 9}
+    assert len(back) == len(specs)
+    for a, b in zip(specs, back):
+        assert a.uid == b.uid and a.arrival == b.arrival
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        np.testing.assert_array_equal(a.modality, b.modality)
+        assert a.max_new_tokens == b.max_new_tokens
+        assert a.decode_modality == b.decode_modality
+        assert a.embed_seed == b.embed_seed
+    # embeds regenerate identically from the recorded seed
+    ra = specs[0].to_request(d_model=16)
+    rb = back[0].to_request(d_model=16)
+    if ra.vision_embeds is not None:
+        np.testing.assert_array_equal(ra.vision_embeds, rb.vision_embeds)
+
+
+def test_replay_rejects_foreign_file(tmp_path):
+    p = tmp_path / "bogus.jsonl"
+    p.write_text('{"something": "else"}\n')
+    with pytest.raises(ValueError):
+        load_stream(p)
+
+
+# -- telemetry percentile math ----------------------------------------------
+def test_percentile_matches_numpy():
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 3, 10, 101):
+        xs = rng.exponential(1.0, n).tolist()
+        for q in (0, 25, 50, 90, 99, 100):
+            assert percentile(xs, q) == pytest.approx(
+                float(np.percentile(xs, q)), rel=1e-12)
+
+
+def test_percentile_edge_cases():
+    assert percentile([5.0], 99) == 5.0
+    with pytest.raises(ValueError):
+        percentile([], 50)
+    with pytest.raises(ValueError):
+        percentile([1.0], 101)
+    s = summarize([])
+    assert s == {}
+    s = summarize([1.0, 2.0, 3.0])
+    assert s["p50"] == 2.0 and s["mean"] == pytest.approx(2.0)
+
+
+def test_telemetry_window_and_duty():
+    from repro.serving.engine import IterStats
+    t = Telemetry(window=10)
+    for i in range(25):
+        t.record_iter(IterStats(n_active=1, tokens=1, ib_global=float(i),
+                                fp4_ranks=0.0,
+                                gate_open=1.0 if i % 2 == 0 else 0.0,
+                                phase="prefill" if i % 2 == 0 else "decode"))
+    assert t.n_iters == 25 and len(t.iters) == 10   # rolling window
+    assert t.gate_duty("prefill") == 1.0
+    assert t.gate_duty("decode") == 0.0
+    assert t.gate_duty(None) == 0.5
+    # ib summary over the window only (last 10 records: 15..24)
+    assert t.ib_summary(None)["p50"] == pytest.approx(19.5)
+
+
+def test_telemetry_request_latencies():
+    t = Telemetry()
+    r = Request(uid=0, tokens=np.zeros(4, np.int32),
+                modality=np.zeros(4, bool), max_new_tokens=3,
+                arrival_time=1.0)
+    r.generated = [1, 2, 3]
+    r.first_token_time = 1.5
+    r.finish_time = 2.5
+    t.record_request(r)
+    assert t.ttft_summary()["p50"] == pytest.approx(0.5)
+    assert t.tpot_summary()["p50"] == pytest.approx(0.5)
+    # unfinished request (no first token) is ignored, not crashed on
+    t.record_request(Request(uid=1, tokens=np.zeros(4, np.int32),
+                             modality=np.zeros(4, bool)))
+    assert t.n_requests == 1
+
+
+# -- modality-aware admission ----------------------------------------------
+def _req(uid, vis, p_len=8):
+    mod = np.full(p_len, bool(vis))
+    return Request(uid=uid, tokens=np.zeros(p_len, np.int32), modality=mod)
+
+
+def test_admission_text_jumps_vision_burst():
+    s = Scheduler(4, text_reserve=1)
+    for i in range(6):
+        s.submit(_req(i, vis=True))
+    s.submit(_req(100, vis=False))     # one text request behind the burst
+    admitted = s.admit()
+    # vision may take at most 3 of 4 slots while text waits: the text
+    # request jumps the queue into the reserved slot
+    assert [r.uid for r in admitted] == [0, 1, 2, 100]
+    assert sum(r.is_vision for r in s.active.values()) == 3
+
+
+def test_admission_work_conserving_without_text():
+    s = Scheduler(4, text_reserve=1)
+    for i in range(6):
+        s.submit(_req(i, vis=True))
+    admitted = s.admit()               # no text queued: fill all slots
+    assert [r.uid for r in admitted] == [0, 1, 2, 3]
+
+
+def test_admission_fifo_when_reserve_disabled():
+    s = Scheduler(2, text_reserve=0)
+    s.submit(_req(0, vis=True))
+    s.submit(_req(1, vis=True))
+    s.submit(_req(2, vis=False))
+    assert [r.uid for r in s.admit()] == [0, 1]
