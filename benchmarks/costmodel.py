@@ -14,6 +14,12 @@ ReaLB-seq, ReaLB-m1/m2.  All run on identical traces; EPLB replicates
 hot experts from sliding-window history (prediction-based), ReaLB runs
 the real :mod:`repro.core.policy` AIMD controller on the instantaneous
 loads.
+
+Placement strategies (the repo's ``repro.placement`` subsystem on the
+same traces): ``sim_placement`` runs the real EWMA predictor + planner
+and charges each replan its migration time (moved expert slabs over
+ICI), ``sim_realb_placement`` is the hybrid — placement remaps the
+slow-timescale skew, ReaLB's FP4 absorbs what the plan missed.
 """
 from __future__ import annotations
 
@@ -74,6 +80,20 @@ def dispatch_time(tokens_total: float, ep: int, d_model: float) -> float:
     """all-to-all dispatch (and combine) over the EP group."""
     per_rank = tokens_total / ep * (ep - 1) / ep * d_model * BYTES_BF16
     return per_rank / ICI_BW + FIXED_US * 1e-6
+
+
+def migration_bytes(n_moved: int, g: MoEGeometry) -> float:
+    """Weight bytes crossing ranks when ``n_moved`` experts change owner
+    (gate+up+down, every MoE layer — the whole stack shares one table)."""
+    from repro.placement.migrate import expert_bytes_raw
+    return n_moved * expert_bytes_raw(g.d_model, g.d_ff, BYTES_BF16,
+                                      g.n_moe_layers)
+
+
+def migration_time(n_moved: int, g: MoEGeometry) -> float:
+    """Serial transfer time of a migration over the EP fabric — the cost
+    term placement pays and ReaLB's precision switch does not."""
+    return migration_bytes(n_moved, g) / ICI_BW
 
 
 def nongemm_time(tokens_r: float, g: MoEGeometry) -> float:
@@ -214,3 +234,70 @@ def sim_eplb(cfg, g, window=100, interval=100, redundant=8,
         return np.zeros(ep), {"extra_s": extra}
 
     return _sim(cfg, g, decide, name)
+
+
+# --------------------------------------------------------------------------
+# predictive placement strategies (repro.placement on the same traces)
+# --------------------------------------------------------------------------
+def make_placement(g: MoEGeometry, ep: int, planner: str = "least_loaded",
+                   interval: int = 50, warmup: int = 8,
+                   alpha: float = 0.25, min_gain: float = 0.02):
+    """Decision fn driving the *real* serving-side PlacementManager
+    (same predictor, planner, cadence and churn guard); FP4 stays off.
+
+    Returns (decide, manager) — the manager carries the cumulative
+    migration accounting for the strategy comparison.
+    """
+    from repro.configs.base import PlacementConfig
+    from repro.placement import PlacementManager
+
+    pcfg = PlacementConfig(planner=planner, replan_every=interval,
+                           warmup_iters=warmup, ewma_alpha=alpha,
+                           min_gain=min_gain)
+    mgr = PlacementManager.from_geometry(
+        g.n_experts, pcfg, ep,
+        bytes_per_expert=int(migration_bytes(1, g)))
+
+    def decide(step, load, vis, state):
+        mgr.observe(np.stack([step.expert_load,
+                              step.expert_vis])[None])       # [1, 2, E]
+        extra = 0.0
+        plan = mgr.maybe_replan(step.it) if step.it > 0 else None
+        if plan is not None:
+            state["place"] = mgr.table.e2r        # rank_loads view
+            # amortized per MoE layer (the trace step is one layer)
+            extra = migration_time(plan.n_moved, g) / g.n_moe_layers
+        return np.zeros(ep), {"extra_s": extra}
+
+    return decide, mgr
+
+
+def _attach_migration(res: SimResult, mgr) -> SimResult:
+    res.extra["n_migrations"] = [float(mgr.n_migrations)]
+    res.extra["moved_bytes"] = [float(mgr.migrated_bytes)]
+    return res
+
+
+def sim_placement(cfg, g, planner="least_loaded", interval=50,
+                  name="Placement") -> SimResult:
+    decide, mgr = make_placement(g, cfg.ep, planner, interval)
+    return _attach_migration(_sim(cfg, g, decide, name), mgr)
+
+
+def sim_realb_placement(cfg, g, rcfg, planner="modality_aware",
+                        interval=50, name="ReaLB+Placement") -> SimResult:
+    """The hybrid arm: the planner remaps slow-timescale skew, ReaLB's
+    AIMD controller compresses whatever burst the plan could not predict.
+    The ReaLB decision runs on the *placed* per-rank loads the simulator
+    computes from the current table."""
+    p_decide, mgr = make_placement(g, cfg.ep, planner, interval)
+    r_decide = make_realb(g, rcfg)
+
+    def decide(step, load, vis, state):
+        fp4, r_diag = r_decide(step, load, vis, state)
+        _, p_diag = p_decide(step, load, vis, state)
+        return fp4, {"extra_s": r_diag.get("extra_s", 0.0)
+                     + p_diag.get("extra_s", 0.0),
+                     "m_mean": r_diag.get("m_mean", 1.0)}
+
+    return _attach_migration(_sim(cfg, g, decide, name), mgr)

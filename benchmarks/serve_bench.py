@@ -18,6 +18,13 @@ pin the exact request stream for policy A/Bs:
     python benchmarks/serve_bench.py --workload MMMU --arrivals bursty \
         --record /tmp/mmmu.jsonl
     python benchmarks/serve_bench.py --replay /tmp/mmmu.jsonl --policy off
+
+``--arm`` selects one of the four placement-comparison arms of the
+paper's baseline axis (off / realb / placement / realb+placement) and
+implies a virtual EP topology (``--virtual-ep``, default 4) so IB_d,
+FP4 duty and migration bytes are meaningful in a single-device
+virtual-time run; the plain ``--policy`` flag keeps the original
+placement-free behavior.
 """
 from __future__ import annotations
 
@@ -28,8 +35,10 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.configs import ReaLBConfig, get_config, reduced
+from repro.configs import (PlacementConfig, ReaLBConfig, get_config,
+                           reduced)
 from repro.models import transformer as tf
+from repro.placement import PlacementManager
 from repro.serving.engine import Engine
 from repro.serving.telemetry import Telemetry
 from repro.workloads import (ArrivalConfig, ClosedLoop, IterationCostModel,
@@ -45,6 +54,14 @@ POLICIES = {
     "off": {"enabled": False},           # never compress
 }
 
+# the four serving arms of the placement comparison: (policy, placement?)
+ARMS = {
+    "off": ("off", False),
+    "realb": ("realb", False),
+    "placement": ("off", True),
+    "realb+placement": ("realb", True),
+}
+
 
 def parse_args(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
@@ -52,6 +69,18 @@ def parse_args(argv=None):
     ap.add_argument("--arrivals", default="poisson",
                     choices=["poisson", "bursty", "diurnal", "closed"])
     ap.add_argument("--policy", default="realb", choices=sorted(POLICIES))
+    ap.add_argument("--arm", default=None, choices=sorted(ARMS),
+                    help="placement-comparison arm; overrides --policy and "
+                         "enables the expert-placement loop for the "
+                         "'placement' arms")
+    ap.add_argument("--planner", default="least_loaded",
+                    choices=["identity", "least_loaded", "modality_aware"])
+    ap.add_argument("--replan-every", type=int, default=32,
+                    help="engine iterations between placement replans")
+    ap.add_argument("--virtual-ep", type=int, default=None,
+                    help="virtual EP topology for the policy statistics on "
+                         "a single device (default: 4 when --arm is given, "
+                         "else off)")
     ap.add_argument("--arch", default="moonshot-v1-16b-a3b")
     ap.add_argument("--preset", default="tiny", choices=["tiny", "full"])
     ap.add_argument("--requests", type=int, default=48)
@@ -88,10 +117,26 @@ def build_stream(args, vocab_size: int, max_prompt: int
                        seed=args.seed + 1, max_prompt=max_prompt)
 
 
+def resolve_arm(args):
+    """Apply --arm to (policy, placement on/off, virtual_ep) in place."""
+    use_placement = False
+    if args.arm is not None:
+        args.policy, use_placement = ARMS[args.arm]
+        if args.virtual_ep is None:
+            args.virtual_ep = 4
+    return use_placement
+
+
 def serve(args, cfg, params, specs: List[RequestSpec]):
     """Run the open-loop experiment; returns (telemetry, engine, realized
     specs, wall seconds)."""
+    use_placement = resolve_arm(args)
     rcfg = ReaLBConfig(gate_gamma=args.gate_gamma, **POLICIES[args.policy])
+    manager = None
+    if use_placement:
+        pcfg = PlacementConfig(planner=args.planner,
+                               replan_every=args.replan_every)
+        manager = PlacementManager(cfg, pcfg, ep=args.virtual_ep or 4)
     telemetry = Telemetry()
     if args.wall_time:
         # zero the wall clock at run start so it is comparable with the
@@ -104,7 +149,8 @@ def serve(args, cfg, params, specs: List[RequestSpec]):
     eng = Engine(cfg, params, rcfg, max_slots=args.slots,
                  max_len=args.max_len, prefill_budget=args.prefill_budget,
                  text_reserve=args.text_reserve, clock=clock,
-                 telemetry=telemetry, cost_model=cost)
+                 telemetry=telemetry, cost_model=cost,
+                 placement=manager, virtual_ep=args.virtual_ep)
 
     closed = None
     prof = profile(args.workload)
@@ -175,10 +221,14 @@ def main(argv=None) -> int:
     else:
         specs = build_stream(args, cfg.vocab_size, max_prompt)
 
+    resolve_arm(args)     # idempotent; serve() resolves again
     print(f"workload={args.workload} arrivals={args.arrivals} "
           f"policy={args.policy} arch={cfg.name} "
           f"slots={args.slots} budget={args.prefill_budget} "
-          f"gate_gamma={args.gate_gamma}")
+          f"gate_gamma={args.gate_gamma}"
+          + (f" arm={args.arm} planner={args.planner} "
+             f"replan_every={args.replan_every} "
+             f"virtual_ep={args.virtual_ep}" if args.arm else ""))
     print(f"stream: {stream_stats(specs)}")
 
     params = tf.init_model(cfg, jax.random.PRNGKey(args.seed))
@@ -213,10 +263,14 @@ def main(argv=None) -> int:
     print(f"TTFT text   {fmt(s['ttft_text'])}")
     print(f"TPOT        {fmt(s['tpot'])}")
     print(f"IB_global   {fmt(s['ib_global'])}")
+    print(f"drop_frac   {fmt(s['drop_frac'])}")
     print(f"gate duty: prefill={s['gate_duty_prefill']:.2f} "
           f"decode={s['gate_duty_decode']:.2f}; "
           f"fp4 duty: all={s['fp4_duty']:.2f} "
           f"prefill={s['fp4_duty_prefill']:.2f}")
+    print(f"migration: {s['n_migrations']} events, "
+          f"{s['migration_bytes_total'] / 1e6:.2f} MB moved, "
+          f"{s['migration_s_total'] * 1e3:.2f} ms charged")
     return 0
 
 

@@ -1,0 +1,91 @@
+"""Placement vs ReaLB vs the hybrid, on one vision-burst routing trace.
+
+Runs the analytic cost-model simulators (pure numpy, CPU, well under a
+minute) over a single seeded trace with abrupt vision-hot-spot jumps and
+contrasts the four arms of the comparison:
+
+* ``off``             — contiguous placement, BF16 everywhere
+* ``realb``           — ReaLB's AIMD FP4 compression (zero migration)
+* ``placement``       — predictive least-loaded remapping (pays migration)
+* ``realb+placement`` — remap the slow skew, compress the bursts
+
+Prints per-arm IB_d / layer-time / FP4 / migration summaries plus a
+coarse IB_d trajectory so the complementary timescales are visible: after
+each hot-spot jump the placement arm stays imbalanced until its next
+replan, while the hybrid's FP4 duty covers exactly that gap.
+
+    PYTHONPATH=src python examples/placement_demo.py
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks import costmodel as cm
+from benchmarks import traces as tr
+from repro.configs import ReaLBConfig
+
+BINS = 12
+
+
+def sparkline(xs, bins=BINS):
+    """Coarse text trajectory: mean per time-bin, mapped to ramp glyphs."""
+    xs = np.asarray(xs)
+    chunks = np.array_split(xs, bins)
+    means = np.array([c.mean() for c in chunks])
+    glyphs = " .:-=+*#%@"
+    lo, hi = means.min(), means.max()
+    idx = np.zeros(bins, int) if hi <= lo else \
+        ((means - lo) / (hi - lo) * (len(glyphs) - 1)).astype(int)
+    return "".join(glyphs[i] for i in idx), means
+
+
+def main() -> int:
+    # vision-burst trace: strong skew, frequent abrupt hot-spot jumps
+    cfg = tr.TraceConfig(name="vision-burst", iters=600, jump_every=150,
+                         vision_frac_mean=0.8, zipf_a=1.3, seed=3)
+    g = cm.KIMI_VL
+    rcfg = ReaLBConfig()
+
+    arms = [
+        ("off", cm.sim_baseline(cfg, g)),
+        ("realb", cm.sim_realb(cfg, g, rcfg, name="realb")),
+        ("placement", cm.sim_placement(cfg, g, planner="least_loaded",
+                                       interval=60, name="placement")),
+        ("realb+placement", cm.sim_realb_placement(
+            cfg, g, rcfg, planner="least_loaded", interval=60,
+            name="realb+placement")),
+    ]
+    base = arms[0][1]
+
+    print(f"trace: {cfg.iters} iters, EP={cfg.ep}, "
+          f"jump_every={cfg.jump_every}, vision~{cfg.vision_frac_mean}")
+    print(f"{'arm':16s} {'layer_ms':>8s} {'IB mean':>8s} {'IB p95':>7s} "
+          f"{'fp4%tok':>8s} {'moved GB':>9s} {'e2e x':>6s}")
+    for name, r in arms:
+        ib = np.asarray(r.extra["ib_global"])
+        moved = r.extra.get("moved_bytes", [0.0])[0] / 1e9
+        print(f"{name:16s} {r.mean_layer_ms:8.3f} {ib.mean():8.2f} "
+              f"{np.percentile(ib, 95):7.2f} {r.fp4_token_frac:8.2f} "
+              f"{moved:9.2f} {r.e2e_speedup(base, g):6.3f}")
+
+    print(f"\nIB_d trajectory ({BINS} bins of {cfg.iters // BINS} iters; "
+          f"hot-spot jumps every {cfg.jump_every}):")
+    for name, r in arms:
+        line, means = sparkline(r.extra["ib_global"])
+        print(f"  {name:16s} |{line}|  "
+              f"{means.min():.2f}..{means.max():.2f}")
+    print("\nreading: 'placement' re-flattens IB only at each replan and "
+          "drifts between them; 'realb' leaves IB untouched and pays FP4 "
+          "on every burst; the hybrid reaches the lowest layer time — "
+          "remapping shrinks IB so fewer tokens need compression than "
+          "under ReaLB alone, at a bounded migration cost.")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

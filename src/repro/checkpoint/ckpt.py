@@ -122,6 +122,26 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return int(json.loads((steps[-1] / "meta.json").read_text())["step"])
 
 
+def restore_group(ckpt_dir: str, group: str,
+                  step: Optional[int] = None) -> Dict[str, np.ndarray]:
+    """Template-free restore of one flat group (``path -> array``).
+
+    For state whose structure is owned by the writer rather than declared
+    up front — e.g. the serving engine's expert-placement plan + predictor
+    EWMA (``group="placement"``), which must survive restarts so a
+    restored engine resumes with the same expert→rank mapping its saved
+    (physically permuted) weights are in.
+    """
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    path = pathlib.Path(ckpt_dir) / f"step_{step:08d}" / f"{group}.npz"
+    if not path.exists():
+        raise FileNotFoundError(f"checkpoint group missing: {path}")
+    with np.load(path) as z:
+        return _decode_flat({k: z[k] for k in z.files})
+
+
 def restore(ckpt_dir: str, templates: Dict[str, Tree],
             step: Optional[int] = None, shardings: Optional[Dict] = None
             ) -> Tuple[int, Dict[str, Tree]]:

@@ -13,6 +13,7 @@ from repro.configs.base import (  # noqa: F401
     ModelConfig,
     MoEConfig,
     MULTI_POD_MESH,
+    PlacementConfig,
     PREFILL_32K,
     ReaLBConfig,
     ShapeConfig,

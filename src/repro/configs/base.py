@@ -236,6 +236,31 @@ class ReaLBConfig:
 
 
 @dataclass(frozen=True)
+class PlacementConfig:
+    """Predictive expert→rank placement & live migration (repro.placement).
+
+    The placement loop is the slow-timescale complement to ReaLB: a
+    per-layer EWMA predictor of expert loads feeds a planner that remaps
+    experts across EP ranks every ``replan_every`` engine iterations;
+    ReaLB's FP4 compression absorbs whatever fast-timescale burst the plan
+    could not anticipate.
+    """
+
+    enabled: bool = True
+    planner: str = "least_loaded"  # identity | least_loaded | modality_aware
+    replan_every: int = 32         # engine iterations between replans
+    warmup_iters: int = 4          # observations required before planning
+    ewma_alpha: float = 0.25       # predictor smoothing (1 = last iter only)
+    min_gain: float = 0.02         # skip migration below this predicted
+    #                                relative reduction of the max rank load
+    vis_tol: float = 0.25          # modality_aware: max |r_v| difference for
+    #                                a load-balancing swap
+    max_swaps: int = 64            # modality_aware: refinement swap budget
+    migration_bw: float = 50e9     # bytes/s charged for moved expert slabs
+    #                                in virtual-time serving runs (ICI-class)
+
+
+@dataclass(frozen=True)
 class TrainConfig:
     lr: float = 3e-4
     warmup_steps: int = 100

@@ -27,6 +27,27 @@ Two execution paths:
 The per-rank precision decision is a *traced* ``lax.cond`` whose predicate
 is rank-local — SPMD HLO ``conditional``, each EP rank dynamically takes
 the FP4 or BF16 branch with zero host round-trips.
+
+Expert placement
+----------------
+Both paths route through a traced :class:`Placement` table instead of the
+hardwired contiguous expert→rank mapping: ``e2r[e]`` is the EP rank that
+owns logical expert ``e`` and ``local_slot[e]`` its position in that
+rank's weight slab.  The expert weight arrays are stored in *placed*
+(physical) order — row ``r * e_loc + s`` holds the expert with
+``e2r == r, local_slot == s`` — so live migration (see
+:mod:`repro.placement`) is a host-side gather of the weight slabs plus a
+new table; the traced graph never recompiles.  With the identity table
+(the default) every index equals the old ``flat_e // e_loc`` arithmetic,
+so outputs are bitwise-identical to the pre-placement layer.  Routing
+counts, capacity packing, the per-rank load/vision statistics and the
+ReaLB policy all observe the *placed* loads.
+
+On a single device the physical EP group is 1, but the policy statistics
+can still be computed over a *virtual* EP topology (``m_state`` of shape
+``[1, vep]``): per-virtual-rank placed loads drive the ReaLB policy and
+its AIMD state, which makes IB_d / FP4-duty / placement experiments
+meaningful in CPU virtual-time serving runs.
 """
 from __future__ import annotations
 
@@ -45,6 +66,41 @@ from repro.models.common import P, current_mesh, resolve_spec, shard_map
 
 Params = Dict[str, jax.Array]
 F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# expert placement table
+# --------------------------------------------------------------------------
+class Placement(NamedTuple):
+    """Traced logical-expert → (rank, slot) assignment.
+
+    ``e2r [E]`` — owning EP rank per logical expert; ``local_slot [E]`` —
+    index into that rank's weight slab.  Together they must form a
+    bijection onto ``rank * e_loc + slot`` (each rank owns exactly
+    ``E // n_ranks`` experts — slabs are fixed-size).
+    """
+    e2r: jax.Array
+    local_slot: jax.Array
+
+
+def identity_placement(num_experts: int, n_ranks: int) -> Placement:
+    """The contiguous mapping (expert ``e`` on rank ``e // e_loc``)."""
+    ar = jnp.arange(num_experts, dtype=jnp.int32)
+    e_loc = num_experts // n_ranks
+    return Placement(ar // e_loc, ar % e_loc)
+
+
+def _placed_index(place: Placement, e_loc: int) -> jax.Array:
+    """[E] logical expert -> placed position ``rank * e_loc + slot``."""
+    return place.e2r.astype(jnp.int32) * e_loc \
+        + place.local_slot.astype(jnp.int32)
+
+
+def _placed_inverse(pos_e: jax.Array) -> jax.Array:
+    """[E] placed position -> logical expert (inverse permutation)."""
+    e = pos_e.shape[0]
+    return jnp.zeros((e,), jnp.int32).at[pos_e].set(
+        jnp.arange(e, dtype=jnp.int32))
 
 
 # --------------------------------------------------------------------------
@@ -200,18 +256,25 @@ def _quantize_experts(w: Dict[str, jax.Array], use_fp4: jax.Array,
 # --------------------------------------------------------------------------
 # dispatch path (train / prefill)
 # --------------------------------------------------------------------------
-def _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, train):
+def _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, place,
+                  pol_ep, train):
     """x_t [t,D] local tokens; mod_t [t] vision flags; val_t [t] real-token
-    flags (False = batch padding); m_vec [ep] AIMD."""
+    flags (False = batch padding); m_vec [pol_ep] AIMD; place maps logical
+    experts onto ``pol_ep`` policy ranks (== comm.ep on a real EP mesh; a
+    virtual topology when comm.ep == 1)."""
     e_cfg = cfg.moe
     ep, e = comm.ep, cfg.moe.num_experts
-    e_loc = e // ep
+    e_loc = e // ep                      # physical slab size per rank
+    e_pol = e // pol_ep                  # policy-topology slab size
     t, d = x_t.shape
     k = e_cfg.top_k
+    pos_e = _placed_index(place, e_pol)  # logical expert -> placed position
+    inv = _placed_inverse(pos_e)         # placed position -> logical expert
 
     # ① routing + metadata (the lightweight "S" collection) ---------------
     gates, eidx, probs = _route(p["router"], x_t, e_cfg)
     flat_e = eidx.reshape(t * k)
+    flat_p = jnp.take(pos_e, flat_e)     # placed position per assignment
     # counts are valid-weighted so the LB gate, IB_d, the AIMD update and
     # the dispatch packing all see only real tokens — chunk-bucket padding
     # neither moves the policy nor claims expert capacity
@@ -219,14 +282,19 @@ def _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, train):
     counts_stat = jnp.bincount(flat_e, weights=w_val, length=e)
     vis_local = jnp.bincount(flat_e, weights=jnp.repeat(
         (mod_t & val_t).astype(F32), k), length=e)
-    counts_global = comm.psum_model(counts_stat)              # [E]
+    counts_global = comm.psum_model(counts_stat)              # [E] logical
     vis_global = comm.psum_model(vis_local)
-    load_d = counts_global.reshape(ep, e_loc).sum(-1)         # [ep]
-    vis_d = vis_global.reshape(ep, e_loc).sum(-1)
+    # per-policy-rank *placed* loads: gather into placed order, then reduce
+    load_d = jnp.take(counts_global, inv).reshape(pol_ep, e_pol).sum(-1)
+    vis_d = jnp.take(vis_global, inv).reshape(pol_ep, e_pol).sum(-1)
 
     # ② modality-aware LB scheduling (AIMD policy) -------------------------
     dec = realb_policy(load_d, vis_d, m_vec, rcfg)
-    use_fp4_me = jnp.asarray(False) if train else dec.use_fp4[comm.my_rank]
+    if ep == pol_ep:
+        use_fp4_rank = dec.use_fp4[comm.my_rank]
+    else:   # virtual policy topology on one physical rank: compress if any
+        use_fp4_rank = jnp.any(dec.use_fp4)
+    use_fp4_me = jnp.asarray(False) if train else use_fp4_rank
 
     w = _gather_weights(p, comm)
 
@@ -240,12 +308,12 @@ def _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, train):
     # slot, so they cannot crowd real tokens out of the per-rank cap (the
     # cap itself is provisioned from the static t, which over- rather than
     # under-provisions when chunks underfill the bucket)
-    dest = flat_e // e_loc
+    dest = flat_p // e_loc
     valid_flat = jnp.repeat(val_t.astype(bool), k)
     order = jnp.argsort(jnp.where(valid_flat, dest, ep), stable=True)
     dest_s = dest[order]
     valid_s = valid_flat[order]
-    send_counts = counts_stat.astype(jnp.int32) \
+    send_counts = jnp.take(counts_stat, inv).astype(jnp.int32) \
         .reshape(ep, e_loc).sum(-1)                            # [ep] valid
     offsets = jnp.cumsum(send_counts) - send_counts
     pos_in_rank = jnp.arange(t * k, dtype=jnp.int32) - offsets[dest_s]
@@ -256,7 +324,7 @@ def _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, train):
 
     tok_idx_s = (order // k).astype(jnp.int32)
     vals_s = jnp.take(x_t, tok_idx_s, axis=0)
-    leid_s = (flat_e % e_loc)[order]
+    leid_s = (flat_p % e_loc)[order]
     send = jnp.zeros((ep * cap, d), x_t.dtype).at[slot_s].set(
         vals_s, mode="drop")
     eid_send = jnp.full((ep * cap,), e_loc, jnp.int32).at[slot_s].set(
@@ -307,6 +375,7 @@ def _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, train):
                ib_global=dec.ib_global,
                fp4_ranks=jnp.sum(dec.use_fp4.astype(F32)),
                load_d=load_d, vis_d=vis_d,
+               expert_load=counts_global, expert_vis=vis_global,
                gate_open=dec.gate_open.astype(F32))
     return out.astype(x_t.dtype), dec.m_new, aux
 
@@ -314,13 +383,17 @@ def _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, train):
 # --------------------------------------------------------------------------
 # broadcast path (decode)
 # --------------------------------------------------------------------------
-def _moe_broadcast(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act):
+def _moe_broadcast(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, place,
+                   pol_ep):
     """Decode-regime MoE: tokens replicated over the EP axis."""
     e_cfg = cfg.moe
     ep, e = comm.ep, e_cfg.num_experts
     e_loc = e // ep
+    e_pol = e // pol_ep
     t = x_t.shape[0]
     k = e_cfg.top_k
+    pos_e = _placed_index(place, e_pol)
+    inv = _placed_inverse(pos_e)
 
     gates, eidx, probs = _route(p["router"], x_t, e_cfg)
     flat_e = eidx.reshape(t * k)
@@ -329,18 +402,21 @@ def _moe_broadcast(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act):
     counts = jnp.bincount(flat_e, weights=w_val, length=e)     # row totals
     vis = jnp.bincount(flat_e, weights=jnp.repeat(
         (mod_t & val_t).astype(F32), k), length=e)
-    load_d = counts.reshape(ep, e_loc).sum(-1)
-    vis_d = vis.reshape(ep, e_loc).sum(-1)
+    load_d = jnp.take(counts, inv).reshape(pol_ep, e_pol).sum(-1)
+    vis_d = jnp.take(vis, inv).reshape(pol_ep, e_pol).sum(-1)
     dec = realb_policy(load_d, vis_d, m_vec, rcfg)
-    use_fp4_me = dec.use_fp4[comm.my_rank]
+    if ep == pol_ep:
+        use_fp4_me = dec.use_fp4[comm.my_rank]
+    else:
+        use_fp4_me = jnp.any(dec.use_fp4)
 
     w = _gather_weights(p, comm)
     wq = _quantize_experts(w, use_fp4_me, rcfg, None)
 
-    my0 = comm.my_rank * e_loc
-    sel = (eidx >= my0) & (eidx < my0 + e_loc)                 # [t,K]
+    pidx = jnp.take(pos_e, eidx)                               # [t,K] placed
+    sel = (pidx // e_loc) == comm.my_rank                      # [t,K]
     local_gate = jnp.where(sel, gates, 0.0)
-    leid = jnp.clip(eidx - my0, 0, e_loc - 1)
+    leid = pidx % e_loc
 
     def per_expert(x_all, wg, wu, wd):
         g = jnp.einsum("td,edf->etf", x_all, wg.astype(x_all.dtype))
@@ -374,6 +450,7 @@ def _moe_broadcast(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act):
     aux.update(drop_frac=jnp.zeros(()), ib_global=dec.ib_global,
                fp4_ranks=jnp.sum(dec.use_fp4.astype(F32)),
                load_d=load_d, vis_d=vis_d,
+               expert_load=counts, expert_vis=vis,
                gate_open=dec.gate_open.astype(F32))
     return out.astype(x_t.dtype), dec.m_new, aux
 
@@ -385,8 +462,8 @@ AUX_SCALARS = ("lb_loss", "z_loss", "drop_frac", "ib_global", "fp4_ranks",
                "gate_open")
 
 
-def _manual_fn(x, mod, val, m_state, router, w_gate, w_up, w_down, *, cfg,
-               rcfg, ep, mode, fsdp, train):
+def _manual_fn(x, mod, val, m_state, router, w_gate, w_up, w_down, e2r,
+               lslot, *, cfg, rcfg, ep, mode, fsdp, train):
     comm = _dist_comm(ep, fsdp)
     b, s, d = x.shape
     x_t = x.reshape(b * s, d)
@@ -398,17 +475,20 @@ def _manual_fn(x, mod, val, m_state, router, w_gate, w_up, w_down, *, cfg,
         jax.nn.one_hot(comm.my_rank, ep, dtype=F32) * m_state.reshape(()))
     p = {"router": router, "w_gate": w_gate, "w_up": w_up, "w_down": w_down}
     act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
+    place = Placement(e2r, lslot)
     if mode == "broadcast":
         y, m_new, aux = _moe_broadcast(x_t, mod_t, val_t, p, m_vec, cfg,
-                                       rcfg, comm, act)
+                                       rcfg, comm, act, place, ep)
     else:
         y, m_new, aux = _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg,
-                                      rcfg, comm, act, train)
+                                      rcfg, comm, act, place, ep, train)
     y = y.reshape(b, s, d)
     m_out = m_new[comm.my_rank].reshape(m_state.shape)
     aux_s = jnp.stack([aux[n] for n in AUX_SCALARS]).reshape(1, -1)
     stats = jnp.stack([aux["load_d"], aux["vis_d"]]).reshape(1, 2, ep)
-    return y, m_out, aux_s, stats
+    estats = jnp.stack([aux["expert_load"], aux["expert_vis"]]
+                       ).reshape(1, 2, -1)
+    return y, m_out, aux_s, stats, estats
 
 
 def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
@@ -416,20 +496,35 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
                    modality: Optional[jax.Array] = None,
                    mode: str = "dispatch", train: bool = False,
                    fsdp: bool = False,
-                   valid: Optional[jax.Array] = None):
+                   valid: Optional[jax.Array] = None,
+                   placement: Optional[Placement] = None):
     """MoE layer with ReaLB.  x [B,S,D]; m_state [groups, ep] (see
     :func:`moe_state_shape`); valid [B,S] marks real tokens (None = all) —
     padding still computes but is excluded from the routing stats the
-    policy consumes.  Returns (y, new_m_state, aux_dict)."""
+    policy consumes.  ``placement`` maps logical experts onto EP ranks
+    (None = the contiguous identity mapping, bitwise-identical to the
+    pre-placement layer); the expert weight arrays in ``p`` must be stored
+    in the matching *placed* order.  Returns (y, new_m_state, aux_dict)."""
     mesh = current_mesh()
     if modality is None:
         modality = jnp.zeros(x.shape[:2], jnp.bool_)
     if valid is None:
         valid = jnp.ones(x.shape[:2], jnp.bool_)
+    if placement is not None and not isinstance(placement, Placement):
+        placement = Placement(*placement)
 
     local = (mesh is None or "model" not in mesh.axis_names or
              dict(zip(mesh.axis_names, mesh.devices.shape))["model"] == 1)
     if local:
+        # the policy/statistics topology is the trailing m_state dim: [1]
+        # physically, but a serving engine may provision a *virtual* EP
+        # group (m_state [1, vep]) so IB_d / FP4 duty are non-trivial on
+        # one device.
+        pol_ep = int(m_state.shape[-1]) if m_state.ndim else 1
+        assert cfg.moe.num_experts % pol_ep == 0, \
+            (cfg.moe.num_experts, pol_ep)
+        place = identity_placement(cfg.moe.num_experts, pol_ep) \
+            if placement is None else placement
         comm = _local_comm()
         b, s, d = x.shape
         act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
@@ -437,7 +532,7 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
             _moe_dispatch, train=train)
         y, m_new, aux = fn(x.reshape(b * s, d), modality.reshape(b * s),
                            valid.reshape(b * s), p, m_state.reshape(-1),
-                           cfg, rcfg, comm, act)
+                           cfg, rcfg, comm, act, place, pol_ep)
         return (y.reshape(b, s, d), m_new.reshape(m_state.shape), aux)
 
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -445,6 +540,8 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
     row_axes = tuple(a for a in mesh.axis_names if a != "model")
     row_entry = row_axes if len(row_axes) > 1 else row_axes[0]
     single_group = m_state.shape[0] == 1
+    place = identity_placement(cfg.moe.num_experts, ep) \
+        if placement is None else placement
 
     x_axes = ("batch", "seq", None) if mode == "dispatch" \
         else ("batch", None, None)
@@ -452,6 +549,7 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
     mod_spec = PartitionSpec(*x_spec[:2])
     m_spec = PartitionSpec(None if single_group else row_entry, "model")
     r_spec = PartitionSpec(None, None)
+    t_spec = PartitionSpec(None)                    # replicated [E] tables
     wg_spec = resolve_spec(p["w_gate"].shape,
                            ("expert", "embed" if fsdp else None, None), mesh)
     wd_spec = resolve_spec(p["w_down"].shape,
@@ -462,25 +560,31 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
 
     fn = partial(_manual_fn, cfg=cfg, rcfg=rcfg, ep=ep, mode=mode,
                  fsdp=fsdp, train=train)
-    y, m_new, aux_s, stats = shard_map(
+    y, m_new, aux_s, stats, estats = shard_map(
         fn, mesh=mesh,
         in_specs=(x_spec, mod_spec, mod_spec, m_spec, r_spec, wg_spec,
-                  wg_spec, wd_spec),
-        out_specs=(x_spec, m_spec, aux_spec, stats_spec),
+                  wg_spec, wd_spec, t_spec, t_spec),
+        out_specs=(x_spec, m_spec, aux_spec, stats_spec, stats_spec),
     )(x, modality, valid, m_state, p["router"], p["w_gate"], p["w_up"],
-      p["w_down"])
+      p["w_down"], place.e2r, place.local_slot)
 
     aux_mean = aux_s.mean(0)
     aux = {n: aux_mean[i] for i, n in enumerate(AUX_SCALARS)}
     aux["load_d"] = stats[:, 0, :]
     aux["vis_d"] = stats[:, 1, :]
+    aux["expert_load"] = estats[:, 0, :].sum(0)
+    aux["expert_vis"] = estats[:, 1, :].sum(0)
     return y, m_new, aux
 
 
-def moe_state_shape(mesh, global_batch: int) -> Tuple[int, int]:
-    """AIMD M-state shape [n_groups, ep] for a given mesh & batch."""
+def moe_state_shape(mesh, global_batch: int,
+                    virtual_ep: Optional[int] = None) -> Tuple[int, int]:
+    """AIMD M-state shape [n_groups, ep] for a given mesh & batch.
+
+    ``virtual_ep`` provisions the policy statistics over a virtual EP
+    topology when there is no mesh (single-device serving simulations)."""
     if mesh is None:
-        return (1, 1)
+        return (1, int(virtual_ep) if virtual_ep else 1)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     ep = sizes.get("model", 1)
     rows = 1

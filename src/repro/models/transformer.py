@@ -229,10 +229,12 @@ def _pad_kv(arr: jax.Array, cache_len: int) -> jax.Array:
 def apply_layer(lp: Tree, x: jax.Array, cfg: ModelConfig, rcfg: ReaLBConfig,
                 mix: str, ffn: str, *, mode: str, positions, pos,
                 memory, cache_in, m_state, modality, cache_len: int,
-                fsdp: bool, chunk_len=None, valid=None):
-    """Returns (x, cache_out, m_state, aux_scalars, stats)."""
+                fsdp: bool, chunk_len=None, valid=None, placement=None):
+    """Returns (x, cache_out, m_state, aux_scalars, stats, estats)."""
+    n_e = cfg.moe.num_experts if cfg.moe is not None else 1
     aux = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
     stats = jnp.zeros((2,) + m_state.shape, jnp.float32)
+    estats = jnp.zeros((2, n_e), jnp.float32)
     cache_out: Dict[str, jax.Array] = {}
     decode = mode == "decode"
     with_cache = mode in ("prefill", "decode", "chunk")
@@ -305,7 +307,8 @@ def apply_layer(lp: Tree, x: jax.Array, cfg: ModelConfig, rcfg: ReaLBConfig,
         y, m_state, moe_aux = ep_moe.ep_moe_forward(
             lp["moe"], h2, cfg, rcfg, m_state, modality,
             mode="broadcast" if decode else "dispatch",
-            train=(mode == "train"), fsdp=fsdp, valid=valid)
+            train=(mode == "train"), fsdp=fsdp, valid=valid,
+            placement=placement)
         if "shared" in lp:
             y = y + ffn_mod.ffn_forward(lp["shared"], h2, cfg)
         x = x + y
@@ -315,7 +318,13 @@ def apply_layer(lp: Tree, x: jax.Array, cfg: ModelConfig, rcfg: ReaLBConfig,
                              (m_state.size,)).reshape(m_state.shape),
             jnp.broadcast_to(moe_aux["vis_d"].reshape(-1),
                              (m_state.size,)).reshape(m_state.shape)])
-    return x, cache_out, m_state, aux, stats
+        # per-logical-expert routed loads (summed over EP group rows):
+        # the placement predictor's observation stream
+        estats = jnp.stack([
+            moe_aux["expert_load"].reshape(-1, n_e).sum(0),
+            moe_aux["expert_vis"].reshape(-1, n_e).sum(0)]
+        ).astype(jnp.float32)
+    return x, cache_out, m_state, aux, stats, estats
 
 
 # --------------------------------------------------------------------------
@@ -367,7 +376,7 @@ def _encode(params, cfg: ModelConfig, enc_embeds: jax.Array,
 
     def body(carry, bp):
         h, m = carry
-        h, _, m, _, _ = apply_layer(
+        h, _, m, _, _, _ = apply_layer(
             bp["layer0"], h, cfg, rcfg, "attn", "dense", mode="encode",
             positions=positions, pos=None, memory=None, cache_in=None,
             m_state=m, modality=None, cache_len=0, fsdp=False)
@@ -381,8 +390,9 @@ def _encode(params, cfg: ModelConfig, enc_embeds: jax.Array,
 
 def _run_stack(params, cfg, rcfg, x, *, mode, positions, pos, memory,
                cache, m_state, modality, cache_len, fsdp, chunk_len=None,
-               valid=None):
+               valid=None, placement=None):
     layout, n_blocks, n_prefix = block_structure(cfg)
+    n_e = cfg.moe.num_experts if cfg.moe is not None else 1
     new_cache: Dict[str, Any] = {}
     aux_acc = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
     with_cache = mode in ("prefill", "decode", "chunk")
@@ -393,7 +403,7 @@ def _run_stack(params, cfg, rcfg, x, *, mode, positions, pos, memory,
         for i in range(n_prefix):
             ci = cache["prefix"][str(i)] if (cache and "prefix" in cache) \
                 else None
-            x, co, m_state, aux, _ = apply_layer(
+            x, co, m_state, aux, _, _ = apply_layer(
                 params["prefix"][str(i)], x, cfg, rcfg,
                 cfg.layer_kinds()[i], "dense", mode=mode,
                 positions=positions, pos=pos, memory=memory, cache_in=ci,
@@ -409,19 +419,22 @@ def _run_stack(params, cfg, rcfg, x, *, mode, positions, pos, memory,
         block_cache = {}
         aux_b = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
         stats_b = jnp.zeros((2,) + m.shape, jnp.float32)
+        estats_b = jnp.zeros((2, n_e), jnp.float32)
         for i, (mix, f) in enumerate(layout):
             ci = cache_in[f"layer{i}"] if cache_in is not None else None
-            h, co, m, aux, stats = apply_layer(
+            h, co, m, aux, stats, estats = apply_layer(
                 bp[f"layer{i}"], h, cfg, rcfg, mix, f, mode=mode,
                 positions=positions, pos=pos, memory=memory, cache_in=ci,
                 m_state=m, modality=modality, cache_len=cache_len,
-                fsdp=fsdp, chunk_len=chunk_len, valid=valid)
+                fsdp=fsdp, chunk_len=chunk_len, valid=valid,
+                placement=placement)
             if with_cache:
                 block_cache[f"layer{i}"] = co
             aux_b = {k: aux_b[k] + aux[k] for k in AUX_KEYS}
             stats_b = stats_b + stats
-        outs = (block_cache, aux_b, stats_b) if with_cache \
-            else (aux_b, stats_b)
+            estats_b = estats_b + estats
+        outs = (block_cache, aux_b, stats_b, estats_b) if with_cache \
+            else (aux_b, stats_b, estats_b)
         return (h, m), outs
 
     if mode == "train" and cfg.remat == "full":
@@ -437,11 +450,12 @@ def _run_stack(params, cfg, rcfg, x, *, mode, positions, pos, memory,
     xs = (params["blocks"], cache["blocks"] if with_cache and cache else None)
     (x, m_state), ys = jax.lax.scan(body, (x, m_state), xs)
     if with_cache:
-        new_cache["blocks"], aux_blocks, stats_blocks = ys
+        new_cache["blocks"], aux_blocks, stats_blocks, estats_blocks = ys
     else:
-        aux_blocks, stats_blocks = ys
+        aux_blocks, stats_blocks, estats_blocks = ys
     aux_total = {k: aux_acc[k] + aux_blocks[k].sum() for k in AUX_KEYS}
     aux_total["moe_stats"] = stats_blocks          # [n_blocks, 2, groups, ep]
+    aux_total["expert_stats"] = estats_blocks      # [n_blocks, 2, E]
     return x, (new_cache if with_cache else None), m_state, aux_total
 
 
@@ -459,7 +473,7 @@ def _prepare_inputs(cfg, batch, mode):
 
 
 def train_forward(params, cfg: ModelConfig, rcfg: ReaLBConfig, batch,
-                  m_state) -> ForwardResult:
+                  m_state, placement=None) -> ForwardResult:
     tokens, modality = _prepare_inputs(cfg, batch, "train")
     b, s = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
@@ -472,13 +486,14 @@ def train_forward(params, cfg: ModelConfig, rcfg: ReaLBConfig, batch,
     x, _, m_state, aux = _run_stack(
         params, cfg, rcfg, x, mode="train", positions=positions, pos=None,
         memory=memory, cache=None, m_state=m_state, modality=modality,
-        cache_len=0, fsdp=True)
+        cache_len=0, fsdp=True, placement=placement)
     logits = _unembed(params, cfg, x)
     return ForwardResult(logits, None, m_state, aux)
 
 
 def prefill_forward(params, cfg: ModelConfig, rcfg: ReaLBConfig, batch,
-                    m_state, cache_len: int = 0) -> ForwardResult:
+                    m_state, cache_len: int = 0,
+                    placement=None) -> ForwardResult:
     tokens, modality = _prepare_inputs(cfg, batch, "prefill")
     b, s = tokens.shape
     cache_len = cache_len or s
@@ -492,13 +507,13 @@ def prefill_forward(params, cfg: ModelConfig, rcfg: ReaLBConfig, batch,
     x, cache, m_state, aux = _run_stack(
         params, cfg, rcfg, x, mode="prefill", positions=positions, pos=None,
         memory=memory, cache=None, m_state=m_state, modality=modality,
-        cache_len=cache_len, fsdp=False)
+        cache_len=cache_len, fsdp=False, placement=placement)
     logits = _unembed(params, cfg, x[:, -1:, :])
     return ForwardResult(logits[:, 0], cache, m_state, aux)
 
 
 def chunk_forward(params, cfg: ModelConfig, rcfg: ReaLBConfig, batch,
-                  cache, m_state) -> ForwardResult:
+                  cache, m_state, placement=None) -> ForwardResult:
     """Chunked-prefill continuation step against a partially-filled cache.
 
     batch: tokens [B,S] (one prompt chunk per row), start [B] (absolute
@@ -528,7 +543,8 @@ def chunk_forward(params, cfg: ModelConfig, rcfg: ReaLBConfig, batch,
     x, cache, m_state, aux = _run_stack(
         params, cfg, rcfg, x, mode="chunk", positions=positions, pos=start,
         memory=None, cache=cache, m_state=m_state, modality=modality,
-        cache_len=0, fsdp=False, chunk_len=chunk_len, valid=valid)
+        cache_len=0, fsdp=False, chunk_len=chunk_len, valid=valid,
+        placement=placement)
     last = jnp.clip(chunk_len - 1, 0, s - 1)
     x_last = x[jnp.arange(b), last][:, None, :]
     logits = _unembed(params, cfg, x_last)
@@ -536,7 +552,7 @@ def chunk_forward(params, cfg: ModelConfig, rcfg: ReaLBConfig, batch,
 
 
 def decode_forward(params, cfg: ModelConfig, rcfg: ReaLBConfig, batch,
-                   cache, m_state) -> ForwardResult:
+                   cache, m_state, placement=None) -> ForwardResult:
     """batch: tokens [B,1], pos [B], modality [B,1] (vision flag of the
     *new* token; usually False during generation), valid [B,1] (False =
     dummy slot excluded from routing stats)."""
@@ -549,7 +565,8 @@ def decode_forward(params, cfg: ModelConfig, rcfg: ReaLBConfig, batch,
     x, cache, m_state, aux = _run_stack(
         params, cfg, rcfg, x, mode="decode", positions=None, pos=pos,
         memory=None, cache=cache, m_state=m_state, modality=modality,
-        cache_len=0, fsdp=False, valid=batch.get("valid"))
+        cache_len=0, fsdp=False, valid=batch.get("valid"),
+        placement=placement)
     logits = _unembed(params, cfg, x)
     return ForwardResult(logits[:, 0], cache, m_state, aux)
 

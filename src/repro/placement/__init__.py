@@ -1,0 +1,26 @@
+"""Predictive expert→rank placement & live migration.
+
+The slow-timescale complement to ReaLB's fast precision switching: an
+EWMA predictor of per-expert routed load feeds capacity-constrained
+planners (``identity`` / ``least_loaded`` / ``modality_aware``) whose
+plans are applied as live weight-slab permutations on a configurable
+cadence — so persistent routing skew is remapped away while FP4
+compression absorbs the bursts no plan can anticipate.  See
+``repro.core.ep_moe`` for how the traced table enters the MoE layer and
+``repro.serving.engine`` for the serving-side loop.
+"""
+from repro.placement.manager import PlacementManager
+from repro.placement.migrate import (MigrationPlan, apply_to_params, diff,
+                                     expert_bytes, moe_param_paths)
+from repro.placement.planner import (PLANNERS, plan_identity,
+                                     plan_least_loaded, plan_modality_aware,
+                                     plan_placement)
+from repro.placement.predictor import EWMAPredictor
+from repro.placement.table import PlacementTable
+
+__all__ = [
+    "PlacementManager", "MigrationPlan", "apply_to_params", "diff",
+    "expert_bytes", "moe_param_paths", "PLANNERS", "plan_identity",
+    "plan_least_loaded", "plan_modality_aware", "plan_placement",
+    "EWMAPredictor", "PlacementTable",
+]

@@ -1,0 +1,126 @@
+"""PlacementManager: the serving-side control loop of the subsystem.
+
+Owns the current :class:`PlacementTable`, the EWMA predictor and the
+replan cadence.  The engine feeds it per-iteration expert stats
+(`observe`), asks it every iteration whether a replan is due
+(`maybe_replan` → a :class:`MigrationPlan` or None) and applies the
+returned weight permutation itself (the manager never touches device
+arrays).  Cumulative migration accounting lives here so telemetry and
+benchmarks can report the placement-vs-ReaLB overhead trade-off
+directly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, PlacementConfig
+from repro.placement import migrate
+from repro.placement.planner import plan_placement
+from repro.placement.predictor import EWMAPredictor
+from repro.placement.table import PlacementTable
+
+
+class PlacementManager:
+    def __init__(self, cfg: ModelConfig, pcfg: PlacementConfig, ep: int):
+        assert cfg.moe is not None, "placement requires an MoE model"
+        n_moe = sum(1 for f in cfg.ffn_kinds() if f == "moe")
+        self._setup(cfg.moe.num_experts, pcfg, ep,
+                    migrate.expert_bytes(cfg, max(n_moe, 1)))
+        self.cfg = cfg
+
+    @classmethod
+    def from_geometry(cls, num_experts: int, pcfg: PlacementConfig,
+                      ep: int, bytes_per_expert: int = 0
+                      ) -> "PlacementManager":
+        """Model-config-free construction (cost-model simulators)."""
+        self = cls.__new__(cls)
+        self._setup(num_experts, pcfg, ep, bytes_per_expert)
+        self.cfg = None
+        return self
+
+    def _setup(self, num_experts: int, pcfg: PlacementConfig, ep: int,
+               bytes_per_expert: int):
+        assert num_experts % ep == 0, (num_experts, ep)
+        self.pcfg, self.ep = pcfg, ep
+        self.table = PlacementTable.identity(num_experts, ep)
+        self.predictor = EWMAPredictor(num_experts, alpha=pcfg.ewma_alpha)
+        self.bytes_per_expert = bytes_per_expert
+        # cumulative accounting
+        self.n_migrations = 0
+        self.migrated_bytes = 0
+        self.migrated_experts = 0
+        self.last_replan_iter = -1
+
+    def reset(self) -> None:
+        """Back to a fresh identity state (e.g. restoring a checkpoint
+        written by a placement-free engine: weights are identity-ordered
+        and there is no plan/predictor state to resume)."""
+        self._setup(self.table.num_experts, self.pcfg, self.ep,
+                    self.bytes_per_expert)
+
+    # -- engine feeds ------------------------------------------------------
+    def observe(self, expert_stats: np.ndarray) -> None:
+        """expert_stats [n_blocks, 2, E]: per-MoE-layer (load, vis) counts
+        of one engine iteration (the transformer's ``aux["expert_stats"]``).
+        """
+        es = np.asarray(expert_stats, np.float64)
+        self.predictor.observe(es[:, 0, :], es[:, 1, :])
+
+    def maybe_replan(self, it: int) -> Optional[migrate.MigrationPlan]:
+        """Return the weight permutation to apply at iteration ``it``, or
+        None.  Updates the current table and the migration accounting when
+        a plan is returned."""
+        p = self.pcfg
+        if (not p.enabled or p.planner == "identity"
+                or self.predictor.n_obs < p.warmup_iters
+                or p.replan_every <= 0 or it % p.replan_every != 0
+                or it == self.last_replan_iter):
+            return None
+        load, vis = self.predictor.predict()
+        if load.sum() <= 0:
+            return None
+        new = plan_placement(p.planner, load, self.ep, vis=vis, cfg=p)
+        # skip churn: require a predicted max-rank-load improvement
+        old_max = self.table.rank_loads(load).max()
+        new_max = new.rank_loads(load).max()
+        if old_max <= 0 or (old_max - new_max) / old_max < p.min_gain:
+            return None
+        plan = migrate.diff(self.table, new, self.bytes_per_expert)
+        if plan.is_noop:
+            return None
+        self.table = new
+        self.n_migrations += 1
+        self.migrated_bytes += plan.moved_bytes
+        self.migrated_experts += plan.n_moved
+        self.last_replan_iter = it
+        return plan
+
+    def migration_seconds(self, moved_bytes: int) -> float:
+        """Virtual-time cost of moving ``moved_bytes`` over the EP fabric."""
+        return moved_bytes / max(self.pcfg.migration_bw, 1.0)
+
+    # -- checkpointing -----------------------------------------------------
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        out = {"e2r": self.table.e2r, "local_slot": self.table.local_slot,
+               "n_ranks": np.int64(self.table.n_ranks),
+               "n_migrations": np.int64(self.n_migrations),
+               "migrated_bytes": np.int64(self.migrated_bytes),
+               "migrated_experts": np.int64(self.migrated_experts)}
+        for k, v in self.predictor.state_dict().items():
+            out[f"pred_{k}"] = v
+        return out
+
+    def load_state_dict(self, state: Dict[str, np.ndarray]) -> None:
+        assert int(state["n_ranks"]) == self.ep, \
+            (int(state["n_ranks"]), self.ep)
+        self.table = PlacementTable(np.asarray(state["e2r"], np.int32),
+                                    np.asarray(state["local_slot"],
+                                               np.int32), self.ep)
+        self.n_migrations = int(state["n_migrations"])
+        self.migrated_bytes = int(state["migrated_bytes"])
+        self.migrated_experts = int(state["migrated_experts"])
+        self.predictor.load_state_dict(
+            {k[len("pred_"):]: v for k, v in state.items()
+             if k.startswith("pred_")})

@@ -1,0 +1,121 @@
+"""Live migration: plan-diff → expert-slab permutation of the weights.
+
+The expert weight arrays are stored in *placed* (physical) order.  A new
+plan is applied by one gather along the expert axis:
+
+    w_new[..., p, :] = w_old[..., gather_idx[p], :]
+    gather_idx = old.pos[new.owner]
+
+i.e. physical row ``p`` must now hold logical expert ``new.owner[p]``,
+whose weights currently sit at row ``old.pos[expert]``.  On a real EP
+mesh the gather is a cross-device all-to-all of the moved slabs (XLA
+lowers the resharding gather); on one device it is a copy.  Only the
+routed expert tensors move — router weights are indexed by *logical*
+expert id and never migrate, and attention / shared-expert / M-state
+tensors are untouched.
+
+``MigrationPlan`` also carries the accounting the benchmarks need: which
+experts physically moved rank, and how many bytes of weights that is.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.placement.table import PlacementTable
+
+MOE_WEIGHT_KEYS = ("w_gate", "w_up", "w_down")
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationPlan:
+    gather_idx: np.ndarray     # [E] new physical row -> old physical row
+    moved_experts: np.ndarray  # logical expert ids whose rank changed
+    moved_bytes: int           # total weight bytes crossing ranks
+
+    @property
+    def n_moved(self) -> int:
+        return int(self.moved_experts.shape[0])
+
+    @property
+    def is_noop(self) -> bool:
+        return self.n_moved == 0
+
+
+def expert_bytes_raw(d_model: int, d_ff: int, bytes_per_param: float,
+                     n_moe_layers: int) -> float:
+    """Weight bytes of ONE expert (gate+up+down) across the MoE stack —
+    the single formula shared by the serving manager and the analytic
+    cost model."""
+    return 3.0 * d_model * d_ff * bytes_per_param * n_moe_layers
+
+
+def expert_bytes(cfg: ModelConfig, n_moe_layers: int) -> int:
+    """Weight bytes of ONE expert across the whole MoE stack."""
+    itemsize = np.dtype(cfg.param_dtype).itemsize \
+        if cfg.param_dtype != "bfloat16" else 2
+    return int(expert_bytes_raw(cfg.d_model, cfg.moe.d_ff, itemsize,
+                                n_moe_layers))
+
+
+def diff(old: PlacementTable, new: PlacementTable,
+         bytes_per_expert: int = 0) -> MigrationPlan:
+    """The permutation (and cost) taking placed weights from old to new."""
+    assert old.num_experts == new.num_experts, (old, new)
+    assert old.n_ranks == new.n_ranks, (old.n_ranks, new.n_ranks)
+    gather = old.pos[new.owner]
+    moved = np.flatnonzero(old.e2r != new.e2r)
+    return MigrationPlan(gather_idx=gather.astype(np.int64),
+                         moved_experts=moved,
+                         moved_bytes=int(moved.shape[0]) * bytes_per_expert)
+
+
+def moe_param_paths(params: Dict[str, Any]) -> List[Tuple[str, str]]:
+    """(block_group, layer_key) pairs holding routed-expert weights."""
+    out = []
+    for group in ("blocks", "prefix"):
+        sub = params.get(group)
+        if not isinstance(sub, dict):
+            continue
+        for lname, lp in sub.items():
+            if isinstance(lp, dict) and "moe" in lp:
+                out.append((group, lname))
+    return out
+
+
+def apply_to_params(params: Dict[str, Any], plan: MigrationPlan
+                    ) -> Dict[str, Any]:
+    """Gather every routed-expert weight slab by the migration plan.
+
+    Returns a new params tree (shallow-copied containers; non-MoE leaves
+    aliased).  Works on stacked ``[n_blocks, E, ...]`` scan weights and on
+    unstacked ``[E, ...]`` ones; the router is left in logical order.
+    """
+    if plan.is_noop:
+        return params
+    idx = plan.gather_idx
+    out = dict(params)
+    for group, lname in moe_param_paths(params):
+        grp = dict(out[group])
+        lp = dict(grp[lname])
+        moe = dict(lp["moe"])
+        for key in MOE_WEIGHT_KEYS:
+            w = moe[key]
+            axis = w.ndim - 3          # [.., E, a, b]: expert axis
+            moe[key] = jnp_take(w, idx, axis)
+        lp["moe"] = moe
+        grp[lname] = lp
+        out[group] = grp
+    return out
+
+
+def jnp_take(w, idx, axis: int):
+    """Gather that works for numpy and jax arrays without importing jax at
+    module load (the planners/table are importable in pure-numpy tools)."""
+    if isinstance(w, np.ndarray):
+        return np.take(w, idx, axis=axis)
+    import jax.numpy as jnp
+    return jnp.take(w, jnp.asarray(idx), axis=axis)

@@ -1,0 +1,90 @@
+"""Per-layer EWMA expert-load predictor.
+
+Fed from the engine's per-iteration routing statistics
+(``aux["expert_stats"]``: per-MoE-layer routed-assignment counts per
+logical expert, plus the vision sub-counts), it keeps one exponentially
+weighted moving average per (layer, expert).  This is the
+prediction-driven half of placement systems (MoE-GPS-style): the planner
+consumes the *predicted* next-window loads, not the instantaneous ones,
+so a one-iteration burst does not trigger a migration — that burst is
+ReaLB's job.
+
+Loads are normalized per observation (each layer's counts divided by the
+iteration's total) before averaging, so prefill iterations with 10³
+tokens and decode iterations with 10¹ tokens contribute comparable
+routing *distributions* rather than letting prefill dominate by volume.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+class EWMAPredictor:
+    def __init__(self, num_experts: int, alpha: float = 0.25):
+        assert 0.0 < alpha <= 1.0, alpha
+        self.num_experts = int(num_experts)
+        self.alpha = float(alpha)
+        self.load: Optional[np.ndarray] = None   # [L, E] EWMA load share
+        self.vis: Optional[np.ndarray] = None    # [L, E] EWMA vision share
+        self.n_obs = 0
+
+    def observe(self, layer_load: np.ndarray,
+                layer_vis: Optional[np.ndarray] = None) -> None:
+        """layer_load/[layer_vis]: [L, E] routed counts for one iteration.
+
+        Iterations that routed nothing (pure-padding forwards) are
+        ignored instead of decaying the average toward zero.
+        """
+        load = np.atleast_2d(np.asarray(layer_load, np.float64))
+        assert load.shape[-1] == self.num_experts, load.shape
+        total = load.sum()
+        if total <= 0:
+            return
+        vis = np.zeros_like(load) if layer_vis is None \
+            else np.atleast_2d(np.asarray(layer_vis, np.float64))
+        norm = load / total
+        vnorm = vis / total
+        if self.load is None or self.load.shape != load.shape:
+            self.load, self.vis = norm, vnorm
+        else:
+            a = self.alpha
+            self.load = a * norm + (1.0 - a) * self.load
+            self.vis = a * vnorm + (1.0 - a) * self.vis
+        self.n_obs += 1
+
+    def predict(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Aggregated (load, vis) share per logical expert, [E] each.
+
+        Layers are summed: the placement table is shared by every MoE
+        layer, so the planner balances the stack-total per-expert load.
+        """
+        if self.load is None:
+            z = np.zeros(self.num_experts)
+            return z, z.copy()
+        return self.load.sum(0), self.vis.sum(0)
+
+    def predict_per_layer(self) -> Optional[np.ndarray]:
+        """[L, E] per-layer EWMA load shares (diagnostics)."""
+        return None if self.load is None else self.load.copy()
+
+    # -- checkpointing ----------------------------------------------------
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        out = {"alpha": np.float64(self.alpha),
+               "n_obs": np.int64(self.n_obs),
+               "num_experts": np.int64(self.num_experts)}
+        if self.load is not None:
+            out["load"] = self.load
+            out["vis"] = self.vis
+        return out
+
+    def load_state_dict(self, state: Dict[str, np.ndarray]) -> None:
+        assert int(state["num_experts"]) == self.num_experts, \
+            (int(state["num_experts"]), self.num_experts)
+        self.alpha = float(state["alpha"])
+        self.n_obs = int(state["n_obs"])
+        self.load = np.asarray(state["load"], np.float64) \
+            if "load" in state else None
+        self.vis = np.asarray(state["vis"], np.float64) \
+            if "vis" in state else None

@@ -18,6 +18,17 @@ Architectures whose caches cannot be continued mid-prompt (MLA latent,
 SSM state, enc-dec memory, VLM embed injection) fall back to the v1
 one-shot batch-1 prefill per request; everything downstream (timing,
 telemetry, modality-aware decode) is shared.
+
+Expert placement & live migration: when constructed with a
+:class:`~repro.placement.PlacementManager`, the engine feeds it per-
+iteration expert-load stats, and at the manager's replan cadence applies
+the returned weight-slab permutation to ``self.params`` (gather-by-table;
+KV caches, AIMD M-state and telemetry are untouched).  Migration bytes
+and virtual-time seconds are charged to the clock and recorded in the
+next :class:`IterStats`, so the zero-overhead property of ReaLB vs. the
+migration cost of placement is directly measurable.  ``virtual_ep``
+provisions the ReaLB policy statistics over a virtual EP topology on a
+single device (see ``repro.core.ep_moe``).
 """
 from __future__ import annotations
 
@@ -50,6 +61,9 @@ class IterStats:
     t_wall: float = 0.0          # engine clock at record time
     batch_tokens: int = 0        # tokens the MoE actually saw (incl. pad)
     vis_frac: float = 0.0        # vision fraction of routed assignments
+    drop_frac: float = 0.0       # capacity-dropped fraction of routed tokens
+    migration_bytes: float = 0.0  # expert weights moved before this iter
+    migration_s: float = 0.0     # virtual-time cost charged for the move
 
 
 def _bucket(n: int, lo: int = 8) -> int:
@@ -67,7 +81,8 @@ class Engine:
                  prefill_budget: int = 256, text_reserve: int = 1,
                  clock: Callable[[], float] = time.monotonic,
                  telemetry: Optional[Telemetry] = None,
-                 cost_model=None):
+                 cost_model=None, placement=None,
+                 virtual_ep: Optional[int] = None):
         self.cfg, self.params, self.rcfg = cfg, params, rcfg
         self.max_slots, self.max_len = max_slots, max_len
         self.temperature = temperature
@@ -86,8 +101,30 @@ class Engine:
         # are stamped, so TTFT includes the iteration that produced the
         # token — not just queueing delay.
         self.cost_model = cost_model
+        # expert placement: a repro.placement.PlacementManager (or None).
+        # virtual_ep sizes the policy-statistics topology on meshless runs
+        # (defaults to the manager's EP group when one is given).
+        self._placement = placement
+        mesh = current_mesh()
+        if placement is not None and mesh is not None:
+            mesh_ep = dict(zip(mesh.axis_names,
+                               mesh.devices.shape)).get("model", 1)
+            assert placement.ep == mesh_ep, \
+                f"placement plans {placement.ep} ranks, mesh EP={mesh_ep}"
+        if placement is not None and mesh is None \
+                and virtual_ep is not None:
+            # the table's slots are strided by E // placement.ep; a
+            # different policy topology would break the pos bijection
+            assert placement.ep == virtual_ep, \
+                f"placement plans {placement.ep} ranks, virtual_ep={virtual_ep}"
+        if virtual_ep is None and placement is not None and mesh is None:
+            virtual_ep = placement.ep
+        self._pending_migration = (0.0, 0.0)      # (bytes, seconds)
+        self._place_cache = None                  # device copy of the table
+        self._it = 0
         self.cache = tf.init_cache(cfg, max_slots, max_len)
-        groups, ep = ep_moe.moe_state_shape(current_mesh(), max_slots)
+        groups, ep = ep_moe.moe_state_shape(current_mesh(), max_slots,
+                                            virtual_ep=virtual_ep)
         self.m_state = jnp.full((groups, ep), rcfg.md_init, jnp.float32)
         self.pos = np.zeros(max_slots, np.int32)      # next write position
         self.last_tok = np.zeros(max_slots, np.int32)
@@ -107,29 +144,66 @@ class Engine:
         cfg, rcfg = self.cfg, self.rcfg
 
         @jax.jit
-        def prefill_one(params, m_state, batch):
+        def prefill_one(params, m_state, batch, place):
             res = tf.prefill_forward(params, cfg, rcfg, batch, m_state,
-                                     cache_len=self.max_len)
+                                     cache_len=self.max_len, placement=place)
             return res.logits, res.cache, res.m_state, res.aux
 
         @jax.jit
         def chunk_step(params, cache, m_state, tokens, start, chunk_len,
-                       modality):
+                       modality, place):
             batch = {"tokens": tokens, "start": start,
                      "chunk_len": chunk_len, "modality": modality}
-            res = tf.chunk_forward(params, cfg, rcfg, batch, cache, m_state)
+            res = tf.chunk_forward(params, cfg, rcfg, batch, cache, m_state,
+                                   placement=place)
             return res.logits, res.cache, res.m_state, res.aux
 
         @jax.jit
-        def decode(params, cache, m_state, tokens, pos, modality, valid):
+        def decode(params, cache, m_state, tokens, pos, modality, valid,
+                   place):
             batch = {"tokens": tokens, "pos": pos, "modality": modality,
                      "valid": valid}
-            res = tf.decode_forward(params, cfg, rcfg, batch, cache, m_state)
+            res = tf.decode_forward(params, cfg, rcfg, batch, cache, m_state,
+                                    placement=place)
             return res.logits, res.cache, res.m_state, res.aux
 
         self._prefill_one = prefill_one
         self._chunk = chunk_step
         self._decode = decode
+
+    def _place_args(self):
+        """The traced (e2r, local_slot) of the current plan (None = the
+        identity mapping, bitwise-identical to a placement-free engine).
+        Cached on device; invalidated when a migration changes the table."""
+        if self._placement is None:
+            return None
+        if self._place_cache is None:
+            e2r, lslot = self._placement.table.as_tuple()
+            self._place_cache = (jnp.asarray(e2r), jnp.asarray(lslot))
+        return self._place_cache
+
+    # -- live migration ------------------------------------------------------
+    def _maybe_migrate(self):
+        """Apply the manager's replan (if due): permute the expert weight
+        slabs, charge the virtual clock, and stage the accounting for the
+        next recorded iteration."""
+        if self._placement is None or self.cfg.moe is None:
+            return
+        plan = self._placement.maybe_replan(self._it)
+        if plan is None:
+            return
+        from repro.placement import migrate
+        self.params = migrate.apply_to_params(self.params, plan)
+        self._place_cache = None                  # table changed
+        # charge the transfer to the virtual clock; under wall clocks
+        # (no .advance) the move is real work already on the wall, so
+        # record 0 charged seconds rather than claiming a charge
+        secs = 0.0
+        if hasattr(self.clock, "advance"):
+            secs = self._placement.migration_seconds(plan.moved_bytes)
+            self.clock.advance(secs)
+        b, s = self._pending_migration
+        self._pending_migration = (b + plan.moved_bytes, s + secs)
 
     # -- cache slot insertion ----------------------------------------------
     def _insert_cache(self, slot: int, new_cache):
@@ -178,14 +252,21 @@ class Engine:
         # moe_stats: [n_blocks, 2, groups, ep] stacked (load_d, vis_d) rows
         ms = np.asarray(aux["moe_stats"], np.float64)
         load_sum, vis_sum = float(ms[:, 0].sum()), float(ms[:, 1].sum())
+        mig_bytes, mig_s = self._pending_migration
+        self._pending_migration = (0.0, 0.0)
         stat = IterStats(
             n_active=n_active, tokens=tokens,
             ib_global=float(aux["ib_global"]) / self._n_moe,
             fp4_ranks=float(aux["fp4_ranks"]) / self._n_moe,
             gate_open=float(aux["gate_open"]) / self._n_moe,
             phase=phase, t_wall=self.clock(), batch_tokens=batch_tokens,
-            vis_frac=vis_sum / max(load_sum, 1.0))
+            vis_frac=vis_sum / max(load_sum, 1.0),
+            drop_frac=float(aux["drop_frac"]) / self._n_moe,
+            migration_bytes=mig_bytes, migration_s=mig_s)
         self.stats.append(stat)
+        if self._placement is not None and "expert_stats" in aux:
+            # [n_blocks, 2, E] per-MoE-layer expert loads -> predictor
+            self._placement.observe(np.asarray(aux["expert_stats"]))
         if self.telemetry is not None:
             self.telemetry.record_iter(stat)
 
@@ -220,7 +301,7 @@ class Engine:
                               np.float32),
                 jnp.dtype(self.cfg.param_dtype))[None]
         logits, new_cache, self.m_state, aux = self._prefill_one(
-            self.params, self.m_state, batch)
+            self.params, self.m_state, batch, self._place_args())
         self._tick(req.prompt_len)
         self._insert_cache(req.slot, new_cache)
         req.prefill_pos = req.prompt_len
@@ -262,7 +343,7 @@ class Engine:
         logits, self.cache, self.m_state, aux = self._chunk(
             self.params, self.cache, self.m_state, jnp.asarray(tokens),
             jnp.asarray(start), jnp.asarray(chunk_len),
-            jnp.asarray(modality))
+            jnp.asarray(modality), self._place_args())
         self._tick(b * s_bucket)
         completing = [slot for slot, take in plan
                       if self.scheduler.active[slot].prefill_pos + take
@@ -283,6 +364,10 @@ class Engine:
     # -- the iteration --------------------------------------------------------
     def step(self) -> int:
         """One continuous-batching iteration. Returns #active sequences."""
+        self._it += 1
+        # -1) placement: apply a due replan before any forward of this
+        # iteration sees the weights (plan and slabs move atomically)
+        self._maybe_migrate()
         # 0) purge slots freed by a mid-prefill retirement (e.g. a
         # max_new_tokens=0 request) before they can be re-admitted
         if self._prefill_fifo:
@@ -325,7 +410,7 @@ class Engine:
                 np.where(ready, self.mod_state, False)[:, None])
             logits, self.cache, self.m_state, aux = self._decode(
                 self.params, self.cache, self.m_state, tokens, pos, modality,
-                jnp.asarray(ready[:, None]))
+                jnp.asarray(ready[:, None]), self._place_args())
             self._tick(self.max_slots)
             toks = self._sample(logits)
             for slot, req in list(self.scheduler.active.items()):
@@ -347,3 +432,50 @@ class Engine:
             self.step()
             it += 1
         return self.scheduler.finished
+
+    # -- checkpointing --------------------------------------------------------
+    def save_checkpoint(self, ckpt_dir: str, step: int, keep: int = 3) -> str:
+        """Persist params + AIMD state (+ the chosen placement plan and
+        predictor state) so a restored engine resumes with the same
+        placement instead of silently reverting to identity."""
+        from repro.checkpoint import ckpt
+        state = {"serving": {"params": self.params, "m_state": self.m_state}}
+        if self._placement is not None:
+            state["placement"] = self._placement.state_dict()
+        return ckpt.save(ckpt_dir, step, state, keep=keep)
+
+    def load_checkpoint(self, ckpt_dir: str,
+                        step: Optional[int] = None) -> int:
+        from repro.checkpoint import ckpt
+        templates = {"serving": {"params": self.params,
+                                 "m_state": self.m_state}}
+        step, out = ckpt.restore(ckpt_dir, templates, step)
+        if self._placement is None:
+            # the saved params may be in a migrated (permuted) order; a
+            # placement-free engine would silently route the identity
+            # table through them — refuse instead of desynchronizing
+            try:
+                ckpt.restore_group(ckpt_dir, "placement", step)
+            except FileNotFoundError:
+                pass
+            else:
+                raise ValueError(
+                    f"checkpoint {ckpt_dir} step {step} was written by a "
+                    "placement engine (weights are in placed order); "
+                    "construct this Engine with the same PlacementManager "
+                    "to restore it")
+        self.params = out["serving"]["params"]
+        self.m_state = out["serving"]["m_state"]
+        if self._placement is not None:
+            # saved params are in the saved plan's placed order — restore
+            # the plan with them.  A checkpoint written by a placement-free
+            # engine has identity-ordered weights and no placement group:
+            # reset the manager to a fresh identity state instead.
+            try:
+                state = ckpt.restore_group(ckpt_dir, "placement", step)
+            except FileNotFoundError:
+                self._placement.reset()
+            else:
+                self._placement.load_state_dict(state)
+            self._place_cache = None
+        return step

@@ -68,11 +68,22 @@ class Telemetry:
         self.requests: Deque[RequestLatency] = deque(maxlen=window)
         self.n_iters = 0
         self.n_requests = 0
+        # migration accounting is cumulative (not windowed): the question
+        # the paper's comparison asks is "how many bytes did placement move
+        # over the whole run, vs. ReaLB's zero"
+        self.migration_bytes_total = 0.0
+        self.migration_s_total = 0.0
+        self.n_migrations = 0
 
     # -- feeds ------------------------------------------------------------
     def record_iter(self, stat) -> None:
         self.iters.append(stat)
         self.n_iters += 1
+        mig = getattr(stat, "migration_bytes", 0.0)
+        if mig > 0:
+            self.migration_bytes_total += mig
+            self.migration_s_total += getattr(stat, "migration_s", 0.0)
+            self.n_migrations += 1
 
     def record_request(self, req) -> None:
         if req.ttft is None:
@@ -105,6 +116,11 @@ class Telemetry:
     def ib_summary(self, phase: Optional[str] = None) -> Dict[str, float]:
         return summarize([s.ib_global for s in self._phase(phase)])
 
+    def drop_summary(self, phase: Optional[str] = None) -> Dict[str, float]:
+        """Rolling-window capacity-drop fraction percentiles."""
+        return summarize([getattr(s, "drop_frac", 0.0)
+                          for s in self._phase(phase)])
+
     def ttft_summary(self) -> Dict[str, float]:
         return summarize([r.ttft for r in self.requests])
 
@@ -131,4 +147,9 @@ class Telemetry:
             "gate_duty_decode": self.gate_duty("decode"),
             "fp4_duty": self.fp4_duty(),
             "fp4_duty_prefill": self.fp4_duty("prefill"),
+            "drop_frac": self.drop_summary(),
+            "drop_frac_prefill": self.drop_summary("prefill"),
+            "migration_bytes_total": self.migration_bytes_total,
+            "migration_s_total": self.migration_s_total,
+            "n_migrations": self.n_migrations,
         }

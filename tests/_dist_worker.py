@@ -120,6 +120,68 @@ def check_chunk_padding_isolated_under_ep():
     assert total == 4 * 8 * cfg.moe.top_k, total   # valid tokens only
 
 
+def check_placement_identity_bitwise_under_ep():
+    """Under a real EP mesh, the explicit identity table is bitwise-equal
+    to the default (placement=None) path — dispatch and broadcast."""
+    cfg, p, x, mod = _moe_setup()
+    rcfg = ReaLBConfig(gate_gamma=10 ** 9)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    ident = ep_moe.identity_placement(cfg.moe.num_experts, 4)
+    with use_mesh(mesh):
+        m = jnp.full(ep_moe.moe_state_shape(mesh, 4), 0.9)
+        for mode, xx, mm in (("dispatch", x, mod),
+                             ("broadcast", x[:, :1], mod[:, :1])):
+            y0, m0, _ = jax.jit(lambda p, x, m, mod: ep_moe.ep_moe_forward(
+                p, x, cfg, rcfg, m, mod, mode=mode))(p, xx, m, mm)
+            y1, m1, _ = jax.jit(
+                lambda p, x, m, mod, pl: ep_moe.ep_moe_forward(
+                    p, x, cfg, rcfg, m, mod, mode=mode, placement=pl))(
+                p, xx, m, mm, ident)
+            assert np.array_equal(np.asarray(y0), np.asarray(y1)), mode
+            assert np.array_equal(np.asarray(m0), np.asarray(m1)), mode
+
+
+def check_placement_permuted_matches_local_under_ep():
+    """A permutation table with correspondingly permuted weight slabs on a
+    (2,4) mesh matches the identity result, with permuted per-rank stats."""
+    cfg, p, x, mod = _moe_setup()
+    rcfg = ReaLBConfig(gate_gamma=10 ** 9)
+    e = cfg.moe.num_experts
+    ep = 4
+    rng = np.random.default_rng(5)
+    owner = rng.permutation(e)                  # physical row -> logical
+    pos = np.empty(e, np.int64)
+    pos[owner] = np.arange(e)
+    e_loc = e // ep
+    place = (jnp.asarray(pos // e_loc, jnp.int32),
+             jnp.asarray(pos % e_loc, jnp.int32))
+    p_perm = dict(p, w_gate=p["w_gate"][owner], w_up=p["w_up"][owner],
+                  w_down=p["w_down"][owner])
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    with use_mesh(mesh):
+        m = jnp.full(ep_moe.moe_state_shape(mesh, 4), 0.9)
+        for mode, xx, mm in (("dispatch", x, mod),
+                             ("broadcast", x[:, :1], mod[:, :1])):
+            y0, _, aux0 = jax.jit(
+                lambda p, x, m, mod: ep_moe.ep_moe_forward(
+                    p, x, cfg, rcfg, m, mod, mode=mode))(p, xx, m, mm)
+            y1, _, aux1 = jax.jit(
+                lambda p, x, m, mod, pl: ep_moe.ep_moe_forward(
+                    p, x, cfg, rcfg, m, mod, mode=mode, placement=pl))(
+                p_perm, xx, m, mm, place)
+            err = float(jnp.max(jnp.abs(y1 - y0)))
+            assert err < 5e-5, (mode, err)
+            # global logical per-expert loads, re-aggregated by the
+            # permuted table, must equal the placed per-rank loads summed
+            # over EP groups
+            el = np.asarray(aux0["expert_load"])
+            want = np.zeros(ep)
+            np.add.at(want, np.asarray(pos // e_loc), el)
+            got = np.asarray(aux1["load_d"]).reshape(-1, ep).sum(0)
+            np.testing.assert_allclose(got, want, rtol=1e-6,
+                                       err_msg=mode)
+
+
 def check_model_train_step_under_mesh():
     """Tiny full model: distributed train step ≈ single-device step."""
     from repro.optim import adamw

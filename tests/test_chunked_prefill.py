@@ -11,6 +11,8 @@ from repro.serving.engine import Engine
 from repro.serving.scheduler import Request
 from repro.serving.telemetry import Telemetry
 
+pytestmark = pytest.mark.slow    # engine jit compiles across chunk buckets
+
 RCFG = ReaLBConfig(gate_gamma=10 ** 9)   # gate closed: pure numerics
 
 

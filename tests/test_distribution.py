@@ -7,6 +7,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow    # each check compiles a mesh subprocess
+
 WORKER = pathlib.Path(__file__).parent / "_dist_worker.py"
 
 CHECKS = [
@@ -14,6 +16,8 @@ CHECKS = [
     "ep_broadcast_matches_local",
     "realb_fp4_rank_activates",
     "chunk_padding_isolated_under_ep",
+    "placement_identity_bitwise_under_ep",
+    "placement_permuted_matches_local_under_ep",
     "model_train_step_under_mesh",
     "decode_under_mesh",
     "elastic_reshard",

@@ -1,0 +1,363 @@
+"""Placement subsystem: tables, planners, predictor, migration, the
+placement-threaded MoE layer (identity ≡ bitwise, permutation ≡ allclose
+with permuted stats) and the serving engine's live-migration loop."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (PlacementConfig, ReaLBConfig, get_config,
+                           reduced)
+from repro.core import ep_moe
+from repro.placement import (EWMAPredictor, PlacementManager,
+                             PlacementTable, apply_to_params, diff,
+                             plan_least_loaded, plan_modality_aware,
+                             plan_placement)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("olmoe-1b-7b"))
+    e = cfg.moe
+    ks = jax.random.split(jax.random.PRNGKey(1), 6)
+    D, E, F = cfg.d_model, e.num_experts, e.d_ff
+    p = {"router": jax.random.normal(ks[0], (D, E)) * 0.2,
+         "w_gate": jax.random.normal(ks[1], (E, D, F)) / np.sqrt(D),
+         "w_up": jax.random.normal(ks[2], (E, D, F)) / np.sqrt(D),
+         "w_down": jax.random.normal(ks[3], (E, F, D)) / np.sqrt(F)}
+    x = jax.random.normal(ks[4], (2, 16, D)) * 0.5
+    mod = jax.random.bernoulli(ks[5], 0.6, (2, 16))
+    return cfg, p, x, mod
+
+
+def random_table(e: int, ep: int, seed: int = 0) -> PlacementTable:
+    rng = np.random.default_rng(seed)
+    owner = rng.permutation(e)              # physical row -> logical expert
+    pos = np.empty(e, np.int64)
+    pos[owner] = np.arange(e)               # logical -> physical
+    e_loc = e // ep
+    return PlacementTable(pos // e_loc, pos % e_loc, ep)
+
+
+# --------------------------------------------------------------------------
+# table
+# --------------------------------------------------------------------------
+def test_table_identity_roundtrip():
+    t = PlacementTable.identity(8, 4)
+    assert np.array_equal(t.pos, np.arange(8))
+    assert np.array_equal(t.owner, np.arange(8))
+    assert t.e_loc == 2
+
+
+def test_table_owner_inverts_pos():
+    t = random_table(16, 4, seed=3)
+    assert np.array_equal(t.pos[t.owner], np.arange(16))
+    assert np.array_equal(np.sort(t.pos), np.arange(16))
+
+
+def test_table_rejects_overfull_rank():
+    with pytest.raises(AssertionError):
+        PlacementTable(np.zeros(8, np.int32), np.arange(8, dtype=np.int32),
+                       4)   # all experts on rank 0
+
+
+def test_table_rank_loads():
+    t = PlacementTable.from_ranks(np.array([0, 0, 1, 1]), 2)
+    np.testing.assert_allclose(t.rank_loads(np.array([1., 2, 3, 4])),
+                               [3.0, 7.0])
+
+
+# --------------------------------------------------------------------------
+# planners
+# --------------------------------------------------------------------------
+def test_least_loaded_beats_identity_on_skew():
+    load = np.array([10, 8, 1, 1, 1, 1, 1, 1.0])   # identity: rank0 = 18
+    ident = PlacementTable.identity(8, 4)
+    t = plan_least_loaded(load, 4)
+    assert t.rank_loads(load).max() < ident.rank_loads(load).max()
+    assert np.bincount(t.e2r, minlength=4).tolist() == [2, 2, 2, 2]
+
+
+def test_modality_aware_concentrates_vision():
+    load = np.ones(8)
+    vis = np.array([0.9, 0.8, 0.85, 0.95, 0.0, 0.1, 0.05, 0.0])
+    t = plan_modality_aware(load, vis, 4)
+    rank_vis = t.rank_loads(vis)
+    # the four vision-heavy experts land on two ranks, not four
+    assert (rank_vis > 0.5).sum() == 2, rank_vis
+
+
+def test_modality_aware_rebalances_load():
+    load = np.array([8, 1, 1, 1, 4, 1, 1, 1.0])
+    vis = load * 0.9                               # uniform vision ratio
+    t = plan_modality_aware(load, vis, 4, vis_tol=0.5)
+    ident = PlacementTable.identity(8, 4)
+    assert t.rank_loads(load).max() <= ident.rank_loads(load).max()
+
+
+def test_plan_placement_dispatch_and_unknown():
+    t = plan_placement("identity", np.ones(8), 4)
+    assert np.array_equal(t.e2r, PlacementTable.identity(8, 4).e2r)
+    with pytest.raises(ValueError):
+        plan_placement("nope", np.ones(8), 4)
+
+
+# --------------------------------------------------------------------------
+# predictor
+# --------------------------------------------------------------------------
+def test_predictor_ewma_math():
+    pred = EWMAPredictor(4, alpha=0.5)
+    pred.observe(np.array([[4.0, 0, 0, 0]]))
+    pred.observe(np.array([[0, 4.0, 0, 0]]))
+    load, _ = pred.predict()
+    np.testing.assert_allclose(load, [0.5, 0.5, 0, 0])
+    pred.observe(np.zeros((1, 4)))                 # ignored, not decayed
+    np.testing.assert_allclose(pred.predict()[0], load)
+
+
+def test_predictor_state_roundtrip():
+    pred = EWMAPredictor(4, alpha=0.3)
+    pred.observe(np.array([[1.0, 2, 3, 4]]), np.array([[0.0, 1, 1, 2]]))
+    sd = {k: np.asarray(v) for k, v in pred.state_dict().items()}
+    p2 = EWMAPredictor(4)
+    p2.load_state_dict(sd)
+    np.testing.assert_allclose(p2.predict()[0], pred.predict()[0])
+    assert p2.n_obs == pred.n_obs and p2.alpha == pred.alpha
+
+
+# --------------------------------------------------------------------------
+# migration
+# --------------------------------------------------------------------------
+def test_diff_identity_is_noop():
+    t = PlacementTable.identity(8, 4)
+    plan = diff(t, t, bytes_per_expert=10)
+    assert plan.is_noop and plan.moved_bytes == 0
+    assert np.array_equal(plan.gather_idx, np.arange(8))
+
+
+def test_apply_to_params_permutes_stacked_weights():
+    t_old = PlacementTable.identity(8, 4)
+    t_new = random_table(8, 4, seed=1)
+    plan = diff(t_old, t_new, bytes_per_expert=7)
+    assert plan.moved_bytes == 7 * plan.n_moved
+    w = np.arange(2 * 8 * 3 * 5, dtype=np.float32).reshape(2, 8, 3, 5)
+    params = {"blocks": {"layer0": {"moe": {
+        "router": np.zeros((3, 8)), "w_gate": w, "w_up": w + 1,
+        "w_down": np.swapaxes(w, 2, 3)}}}}
+    out = apply_to_params(params, plan)
+    got = out["blocks"]["layer0"]["moe"]["w_gate"]
+    for p_new in range(8):
+        expert = t_new.owner[p_new]
+        np.testing.assert_array_equal(got[:, p_new],
+                                      w[:, t_old.pos[expert]])
+    # router never migrates
+    assert out["blocks"]["layer0"]["moe"]["router"] is \
+        params["blocks"]["layer0"]["moe"]["router"]
+
+
+# --------------------------------------------------------------------------
+# MoE layer invariance
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["dispatch", "broadcast"])
+def test_identity_table_bitwise_equal(setup, mode):
+    """The placement-threaded layer with the identity table must be
+    bitwise-identical to the default (placement=None) path."""
+    cfg, p, x, mod = setup
+    rcfg = ReaLBConfig(gate_gamma=10 ** 9)
+    m = jnp.full((1, 1), 0.9)
+    e = cfg.moe.num_experts
+    ident = ep_moe.identity_placement(e, 1)
+    y0, m0, aux0 = ep_moe.ep_moe_forward(p, x, cfg, rcfg, m, mod, mode=mode)
+    y1, m1, aux1 = ep_moe.ep_moe_forward(p, x, cfg, rcfg, m, mod, mode=mode,
+                                         placement=ident)
+    assert np.array_equal(np.asarray(y0), np.asarray(y1))
+    assert np.array_equal(np.asarray(m0), np.asarray(m1))
+    for k in ("load_d", "vis_d", "drop_frac", "lb_loss"):
+        assert np.array_equal(np.asarray(aux0[k]), np.asarray(aux1[k])), k
+
+
+@pytest.mark.parametrize("mode", ["dispatch", "broadcast"])
+def test_permuted_table_allclose_with_permuted_stats(setup, mode):
+    """Any permutation table (with correspondingly permuted weight slabs)
+    yields allclose outputs, and the per-rank load/vision stats move with
+    the experts (virtual 4-rank policy topology)."""
+    cfg, p, x, mod = setup
+    rcfg = ReaLBConfig(gate_gamma=10 ** 9)
+    e = cfg.moe.num_experts
+    vep = 4
+    m = jnp.full((1, vep), 0.9)
+    table = random_table(e, vep, seed=2)
+    perm = table.owner                      # physical row -> logical expert
+    p_perm = dict(p, w_gate=p["w_gate"][perm], w_up=p["w_up"][perm],
+                  w_down=p["w_down"][perm])
+    place = (jnp.asarray(table.e2r), jnp.asarray(table.local_slot))
+    y0, _, aux0 = ep_moe.ep_moe_forward(p, x, cfg, rcfg, m, mod, mode=mode)
+    y1, _, aux1 = ep_moe.ep_moe_forward(p_perm, x, cfg, rcfg, m, mod,
+                                        mode=mode, placement=place)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=2e-5,
+                               atol=2e-5)
+    el = np.asarray(aux0["expert_load"])
+    ev = np.asarray(aux0["expert_vis"])
+    np.testing.assert_allclose(np.asarray(aux1["load_d"]),
+                               table.rank_loads(el))
+    np.testing.assert_allclose(np.asarray(aux1["vis_d"]),
+                               table.rank_loads(ev))
+    # logical-expert stats are placement-invariant
+    np.testing.assert_allclose(np.asarray(aux1["expert_load"]), el)
+
+
+def test_expert_load_aux_totals(setup):
+    cfg, p, x, mod = setup
+    rcfg = ReaLBConfig(gate_gamma=10 ** 9)
+    m = jnp.full((1, 1), 0.9)
+    _, _, aux = ep_moe.ep_moe_forward(p, x, cfg, rcfg, m, mod,
+                                      mode="dispatch")
+    el = np.asarray(aux["expert_load"])
+    assert el.shape == (cfg.moe.num_experts,)
+    assert el.sum() == x.shape[0] * x.shape[1] * cfg.moe.top_k
+    assert np.asarray(aux["expert_vis"]).sum() == \
+        float(np.asarray(mod).sum()) * cfg.moe.top_k
+
+
+# --------------------------------------------------------------------------
+# manager
+# --------------------------------------------------------------------------
+def test_manager_replans_on_skew_and_respects_cadence():
+    cfg = reduced(get_config("olmoe-1b-7b"))
+    mgr = PlacementManager(cfg, PlacementConfig(replan_every=2,
+                                                warmup_iters=1), 4)
+    es = np.zeros((4, 2, 8))
+    es[:, 0] = np.array([10, 8, 1, 1, 1, 1, 1, 1.0])
+    mgr.observe(es)
+    assert mgr.maybe_replan(1) is None            # off-cadence
+    plan = mgr.maybe_replan(2)
+    assert plan is not None and plan.n_moved > 0
+    assert mgr.n_migrations == 1
+    assert mgr.migrated_bytes == plan.moved_bytes > 0
+    mgr.observe(es)
+    assert mgr.maybe_replan(4) is None            # plan already optimal
+
+
+def test_manager_identity_planner_never_migrates():
+    cfg = reduced(get_config("olmoe-1b-7b"))
+    mgr = PlacementManager(cfg, PlacementConfig(planner="identity",
+                                                replan_every=1,
+                                                warmup_iters=0), 4)
+    es = np.zeros((4, 2, 8))
+    es[:, 0] = np.arange(8) + 1.0
+    for it in range(4):
+        mgr.observe(es)
+        assert mgr.maybe_replan(it) is None
+    assert mgr.n_migrations == 0
+
+
+# --------------------------------------------------------------------------
+# engine end-to-end (live migration + checkpoint resume)
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=2)
+    import repro.models.transformer as tf
+    params = tf.init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _reqs(cfg, n=6, p_len=12, new=4, seed=0):
+    from repro.serving.scheduler import Request
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        toks = rng.integers(0, cfg.vocab_size, p_len).astype(np.int32)
+        out.append(Request(uid=i, tokens=toks,
+                           modality=np.full(p_len, bool(i % 2)),
+                           max_new_tokens=new, arrival_time=0.0))
+    return out
+
+
+@pytest.mark.slow
+def test_engine_identity_placement_matches_baseline(model):
+    """An identity-planner engine generates exactly what a placement-free
+    engine does (same virtual policy topology)."""
+    from repro.serving.engine import Engine
+    cfg, params = model
+    rcfg = ReaLBConfig(gate_gamma=4)
+
+    eng0 = Engine(cfg, params, rcfg, max_slots=3, max_len=32, virtual_ep=4)
+    for r in _reqs(cfg):
+        eng0.submit(r)
+    g0 = [r.generated for r in sorted(eng0.run(), key=lambda r: r.uid)]
+
+    mgr = PlacementManager(cfg, PlacementConfig(planner="identity"), 4)
+    eng1 = Engine(cfg, params, rcfg, max_slots=3, max_len=32, placement=mgr)
+    for r in _reqs(cfg):
+        eng1.submit(r)
+    g1 = [r.generated for r in sorted(eng1.run(), key=lambda r: r.uid)]
+    assert g0 == g1
+    assert mgr.n_migrations == 0
+    assert eng1.stats and all(s.migration_bytes == 0 for s in eng1.stats)
+
+
+@pytest.mark.slow
+def test_engine_live_migration_and_checkpoint_resume(model):
+    from repro.serving.engine import Engine
+    from repro.serving.telemetry import Telemetry
+    from repro.workloads import IterationCostModel, VirtualClock
+    cfg, params = model
+    rcfg = ReaLBConfig(gate_gamma=4)
+    mgr = PlacementManager(cfg, PlacementConfig(planner="least_loaded",
+                                                replan_every=3,
+                                                warmup_iters=2,
+                                                min_gain=0.0), 4)
+    tel = Telemetry()
+    eng = Engine(cfg, params, rcfg, max_slots=3, max_len=32, placement=mgr,
+                 telemetry=tel, clock=VirtualClock(),
+                 cost_model=IterationCostModel())
+    for r in _reqs(cfg, n=10):
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 10
+    assert all(len(r.generated) == r.max_new_tokens for r in done)
+    assert mgr.n_migrations >= 1
+    assert tel.migration_bytes_total == mgr.migrated_bytes > 0
+    s = tel.summary()
+    assert s["migration_bytes_total"] > 0 and s["n_migrations"] >= 1
+    assert "drop_frac" in s and "p50" in s["drop_frac"]
+    # migration time was charged to the virtual clock via IterStats
+    assert sum(st.migration_s for st in eng.stats) > 0
+
+    with tempfile.TemporaryDirectory() as d:
+        eng.save_checkpoint(d, 3)
+        mgr2 = PlacementManager(cfg, PlacementConfig(
+            planner="least_loaded"), 4)
+        eng2 = Engine(cfg, params, rcfg, max_slots=3, max_len=32,
+                      placement=mgr2)
+        assert eng2.load_checkpoint(d) == 3
+        # restored engine resumes with the same placement, not identity
+        assert np.array_equal(mgr2.table.e2r, mgr.table.e2r)
+        assert np.array_equal(mgr2.table.local_slot, mgr.table.local_slot)
+        assert mgr2.n_migrations == mgr.n_migrations
+        w0 = np.asarray(eng.params["blocks"]["layer0"]["moe"]["w_gate"])
+        w1 = np.asarray(eng2.params["blocks"]["layer0"]["moe"]["w_gate"])
+        assert np.array_equal(w0, w1)
+        # a placement-free engine must refuse the permuted checkpoint
+        # instead of silently routing the identity table through it
+        eng3 = Engine(cfg, params, rcfg, max_slots=3, max_len=32)
+        with pytest.raises(ValueError, match="placement"):
+            eng3.load_checkpoint(d)
+
+    # the reverse direction: a placement engine restoring a checkpoint
+    # written WITHOUT placement resets to a clean identity state
+    with tempfile.TemporaryDirectory() as d:
+        eng_plain = Engine(cfg, params, rcfg, max_slots=3, max_len=32)
+        eng_plain.save_checkpoint(d, 1)
+        mgr4 = PlacementManager(cfg, PlacementConfig(
+            planner="least_loaded"), 4)
+        mgr4.table = mgr.table                  # pretend it had migrated
+        eng4 = Engine(cfg, params, rcfg, max_slots=3, max_len=32,
+                      placement=mgr4)
+        assert eng4.load_checkpoint(d) == 1
+        assert np.array_equal(mgr4.table.e2r,
+                              np.arange(8, dtype=np.int32) // 2)
+        assert mgr4.n_migrations == 0

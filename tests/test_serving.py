@@ -9,6 +9,8 @@ from repro.models import transformer as tf
 from repro.serving.engine import Engine
 from repro.serving.scheduler import Request, Scheduler
 
+pytestmark = pytest.mark.slow    # full engine loops (prefill+decode jits)
+
 
 @pytest.fixture(scope="module")
 def model():

@@ -13,6 +13,8 @@ from repro.data.pipeline import DataConfig, DataLoader
 from repro.models import transformer as tf
 from repro.optim import adamw
 
+pytestmark = pytest.mark.slow    # end-to-end train/serve/benchmark runs
+
 
 def test_assignment_coverage():
     cells = all_cells()
