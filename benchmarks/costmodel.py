@@ -96,6 +96,42 @@ def migration_time(n_moved: int, g: MoEGeometry) -> float:
     return migration_bytes(n_moved, g) / ICI_BW
 
 
+@dataclasses.dataclass(frozen=True)
+class ReplanCostGate:
+    """Amortized-gain guard coupling the replan cadence to the latency
+    model: accept a migration only when the predicted per-iteration MoE
+    layer-time saving, summed over the plan's amortization horizon (the
+    iterations until the next replan can fire), exceeds the serial
+    migration transfer time.  Plugs into ``PlacementManager`` /
+    ``ReplicaManager`` as ``cost_gate``."""
+    g: MoEGeometry
+    ep: int
+    horizon_iters: int              # replan_every of the manager
+    tokens_per_iter: float = 4096.0  # typical routed batch the savings
+    #                                  are evaluated at
+
+    def layer_seconds(self, rank_loads: np.ndarray) -> float:
+        """MoE layer time of one iteration under the given (relative)
+        per-rank loads, scaled to ``tokens_per_iter``."""
+        loads = np.asarray(rank_loads, np.float64)
+        tot = loads.sum()
+        if tot <= 0:
+            return 0.0
+        tok = loads * (self.tokens_per_iter * self.g.top_k / tot)
+        t, _ = moe_layer_time(tok, np.zeros(self.ep), self.g, self.ep,
+                              self.tokens_per_iter)
+        return t
+
+    def accept(self, old_rank_loads: np.ndarray,
+               new_rank_loads: np.ndarray, n_moved: int) -> bool:
+        if n_moved <= 0:
+            return True
+        saving = (self.layer_seconds(old_rank_loads)
+                  - self.layer_seconds(new_rank_loads))
+        horizon = saving * self.g.n_moe_layers * max(self.horizon_iters, 1)
+        return horizon > migration_time(n_moved, self.g)
+
+
 def nongemm_time(tokens_r: float, g: MoEGeometry) -> float:
     """Router/softmax/sort/norm — bandwidth-ish + fixed kernel costs.
     Dominates at small batch (the LB-gate regime, Fig 4)."""
@@ -291,6 +327,70 @@ def sim_realb_placement(cfg, g, rcfg, planner="modality_aware",
     The ReaLB decision runs on the *placed* per-rank loads the simulator
     computes from the current table."""
     p_decide, mgr = make_placement(g, cfg.ep, planner, interval)
+    r_decide = make_realb(g, rcfg)
+
+    def decide(step, load, vis, state):
+        fp4, r_diag = r_decide(step, load, vis, state)
+        _, p_diag = p_decide(step, load, vis, state)
+        return fp4, {"extra_s": r_diag.get("extra_s", 0.0)
+                     + p_diag.get("extra_s", 0.0),
+                     "m_mean": r_diag.get("m_mean", 1.0)}
+
+    return _attach_migration(_sim(cfg, g, decide, name), mgr)
+
+
+# --------------------------------------------------------------------------
+# redundant-expert strategies (repro.replication on the same traces)
+# --------------------------------------------------------------------------
+def make_replication(g: MoEGeometry, ep: int, interval: int = 50,
+                     warmup: int = 8, alpha: float = 0.25,
+                     min_gain: float = 0.02, spare_per_rank: int = 1,
+                     max_replicas: int = 2, vis_weight: float = 1.0,
+                     cost_gate=None):
+    """Decision fn driving the *real* serving-side ReplicaManager (same
+    predictor, EPLB-style planner, staged-commit discipline); FP4 stays
+    off.  The simulator models the round-robin token split as fractional
+    ownership rows (``traces.rank_loads``)."""
+    from repro.configs.base import ReplicationConfig
+    from repro.replication import ReplicaManager
+
+    rpcfg = ReplicationConfig(replan_every=interval, warmup_iters=warmup,
+                              ewma_alpha=alpha, min_gain=min_gain,
+                              spare_per_rank=spare_per_rank,
+                              max_replicas=max_replicas,
+                              vis_weight=vis_weight)
+    mgr = ReplicaManager.from_geometry(
+        g.n_experts, rpcfg, ep,
+        bytes_per_expert=int(migration_bytes(1, g)), cost_gate=cost_gate)
+
+    def decide(step, load, vis, state):
+        mgr.observe(np.stack([step.expert_load,
+                              step.expert_vis])[None])        # [1, 2, E]
+        extra = 0.0
+        plan = mgr.maybe_replan(step.it) if step.it > 0 else None
+        if plan is not None:
+            mgr.commit(plan)           # sim: the slab copy is atomic
+            state["place"] = mgr.rset.ownership_matrix()
+            # amortized per MoE layer; only cross-rank slabs travel
+            extra = migration_time(len(plan.crossrank_slots),
+                                   g) / g.n_moe_layers
+        return np.zeros(ep), {"extra_s": extra}
+
+    return decide, mgr
+
+
+def sim_replication(cfg, g, interval=50, name="Replicate",
+                    **kw) -> SimResult:
+    decide, mgr = make_replication(g, cfg.ep, interval, **kw)
+    return _attach_migration(_sim(cfg, g, decide, name), mgr)
+
+
+def sim_realb_replication(cfg, g, rcfg, interval=50,
+                          name="ReaLB+Replicate", **kw) -> SimResult:
+    """The precision hybrid: replication flattens the predictable hot
+    experts, ReaLB's FP4 compresses whatever burst the replica set could
+    not anticipate — the decision runs on the *post-split* rank loads."""
+    p_decide, mgr = make_replication(g, cfg.ep, interval, **kw)
     r_decide = make_realb(g, rcfg)
 
     def decide(step, load, vis, state):

@@ -19,26 +19,32 @@ pin the exact request stream for policy A/Bs:
         --record /tmp/mmmu.jsonl
     python benchmarks/serve_bench.py --replay /tmp/mmmu.jsonl --policy off
 
-``--arm`` selects one of the four placement-comparison arms of the
-paper's baseline axis (off / realb / placement / realb+placement) and
-implies a virtual EP topology (``--virtual-ep``, default 4) so IB_d,
-FP4 duty and migration bytes are meaningful in a single-device
-virtual-time run; the plain ``--policy`` flag keeps the original
-placement-free behavior.
+``--arm`` selects one of the six comparison arms of the paper's baseline
+axis (off / realb / placement / realb+placement / replicate /
+realb+replicate) and implies a virtual EP topology (``--virtual-ep``,
+default 4) so IB_d, FP4 duty, token-split duty and migration bytes are
+meaningful in a single-device virtual-time run; the plain ``--policy``
+flag keeps the original placement-free behavior.  ``--arm all`` runs
+every arm head-to-head on the *same* realized request stream in one
+deterministic invocation and prints a comparison table;
+``--json-out BENCH_serve.json`` writes the per-arm summaries (throughput,
+TTFT/TPOT percentiles, IB, migration bytes) as a machine-readable CI
+artifact.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.configs import (PlacementConfig, ReaLBConfig, get_config,
-                           reduced)
+from repro.configs import (PlacementConfig, ReaLBConfig, ReplicationConfig,
+                           get_config, reduced)
 from repro.models import transformer as tf
 from repro.placement import PlacementManager
+from repro.replication import ReplicaManager, expand_moe_params
 from repro.serving.engine import Engine
 from repro.serving.telemetry import Telemetry
 from repro.workloads import (ArrivalConfig, ClosedLoop, IterationCostModel,
@@ -54,12 +60,15 @@ POLICIES = {
     "off": {"enabled": False},           # never compress
 }
 
-# the four serving arms of the placement comparison: (policy, placement?)
+# the serving arms of the load-balancing comparison:
+# (policy, expert-layout manager kind)
 ARMS = {
-    "off": ("off", False),
-    "realb": ("realb", False),
-    "placement": ("off", True),
-    "realb+placement": ("realb", True),
+    "off": ("off", None),
+    "realb": ("realb", None),
+    "placement": ("off", "placement"),
+    "realb+placement": ("realb", "placement"),
+    "replicate": ("off", "replication"),
+    "realb+replicate": ("realb", "replication"),
 }
 
 
@@ -69,14 +78,25 @@ def parse_args(argv=None):
     ap.add_argument("--arrivals", default="poisson",
                     choices=["poisson", "bursty", "diurnal", "closed"])
     ap.add_argument("--policy", default="realb", choices=sorted(POLICIES))
-    ap.add_argument("--arm", default=None, choices=sorted(ARMS),
-                    help="placement-comparison arm; overrides --policy and "
-                         "enables the expert-placement loop for the "
-                         "'placement' arms")
+    ap.add_argument("--arm", default=None,
+                    choices=sorted(ARMS) + ["all"],
+                    help="comparison arm; overrides --policy and enables "
+                         "the expert-layout loop for the placement / "
+                         "replicate arms.  'all' runs every arm on the "
+                         "same realized stream in one deterministic run")
     ap.add_argument("--planner", default="least_loaded",
                     choices=["identity", "least_loaded", "modality_aware"])
     ap.add_argument("--replan-every", type=int, default=32,
                     help="engine iterations between placement replans")
+    ap.add_argument("--spare-per-rank", type=int, default=1,
+                    help="replica slots per rank beyond E // ranks "
+                         "(replicate arms)")
+    ap.add_argument("--max-replicas", type=int, default=2,
+                    help="replica cap per logical expert (replicate arms)")
+    ap.add_argument("--cost-gate", action="store_true",
+                    help="gate replans on the analytic cost model: fire "
+                         "only when predicted layer-time savings over the "
+                         "replan interval exceed the migration time")
     ap.add_argument("--virtual-ep", type=int, default=None,
                     help="virtual EP topology for the policy statistics on "
                          "a single device (default: 4 when --arm is given, "
@@ -104,6 +124,9 @@ def parse_args(argv=None):
                          "--workload/--arrivals/--requests)")
     ap.add_argument("--json", action="store_true",
                     help="emit one machine-readable JSON summary line")
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="write per-arm summaries to a JSON file "
+                         "(e.g. BENCH_serve.json as a CI artifact)")
     return ap.parse_args(argv)
 
 
@@ -118,25 +141,51 @@ def build_stream(args, vocab_size: int, max_prompt: int
 
 
 def resolve_arm(args):
-    """Apply --arm to (policy, placement on/off, virtual_ep) in place."""
-    use_placement = False
-    if args.arm is not None:
-        args.policy, use_placement = ARMS[args.arm]
+    """Apply --arm to (policy, manager kind, virtual_ep) in place."""
+    kind = None
+    if args.arm is not None and args.arm != "all":
+        args.policy, kind = ARMS[args.arm]
         if args.virtual_ep is None:
             args.virtual_ep = 4
-    return use_placement
+    return kind
+
+
+def make_cost_gate(args, cfg, ep: int):
+    """An analytic-cost-model replan gate for this model's MoE geometry."""
+    try:
+        from benchmarks import costmodel as cm
+    except ImportError:     # run as `python benchmarks/serve_bench.py`:
+        import pathlib      # sys.path[0] is benchmarks/, not the repo root
+        import sys
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+        from benchmarks import costmodel as cm
+    n_moe = max(sum(1 for f in cfg.ffn_kinds() if f == "moe"), 1)
+    geom = cm.MoEGeometry(cfg.name, cfg.d_model, cfg.moe.d_ff,
+                          cfg.moe.num_experts, cfg.moe.top_k, n_moe)
+    return cm.ReplanCostGate(geom, ep, horizon_iters=args.replan_every,
+                             tokens_per_iter=float(args.prefill_budget))
 
 
 def serve(args, cfg, params, specs: List[RequestSpec]):
     """Run the open-loop experiment; returns (telemetry, engine, realized
     specs, wall seconds)."""
-    use_placement = resolve_arm(args)
+    kind = resolve_arm(args)
     rcfg = ReaLBConfig(gate_gamma=args.gate_gamma, **POLICIES[args.policy])
     manager = None
-    if use_placement:
+    vep = args.virtual_ep or 4
+    gate = make_cost_gate(args, cfg, vep) \
+        if (args.cost_gate and kind is not None) else None
+    if kind == "placement":
         pcfg = PlacementConfig(planner=args.planner,
                                replan_every=args.replan_every)
-        manager = PlacementManager(cfg, pcfg, ep=args.virtual_ep or 4)
+        manager = PlacementManager(cfg, pcfg, ep=vep, cost_gate=gate)
+    elif kind == "replication":
+        rpcfg = ReplicationConfig(replan_every=args.replan_every,
+                                  spare_per_rank=args.spare_per_rank,
+                                  max_replicas=args.max_replicas)
+        manager = ReplicaManager(cfg, rpcfg, ep=vep, cost_gate=gate)
+        # lay the logical expert rows out into the replica slot space
+        params = expand_moe_params(params, manager.rset)
     telemetry = Telemetry()
     if args.wall_time:
         # zero the wall clock at run start so it is comparable with the
@@ -201,6 +250,59 @@ def serve(args, cfg, params, specs: List[RequestSpec]):
     return telemetry, eng, realized, time.monotonic() - t0
 
 
+def summarize_run(telemetry: Telemetry, eng: Engine, wall: float) -> Dict:
+    """Flat per-arm summary (table / JSON-artifact friendly)."""
+    done = eng.scheduler.finished
+    out_toks = sum(len(r.generated) for r in done)
+    in_toks = sum(r.prompt_len for r in done)
+    s = telemetry.summary()
+    s["n_requests_served"] = len(done)
+    s["prompt_tokens"] = in_toks
+    s["generated_tokens"] = out_toks
+    s["throughput_tok_per_s"] = (in_toks + out_toks) / max(wall, 1e-9)
+    s["wall_s"] = wall
+    return s
+
+
+def write_json_out(args, results: Dict[str, Dict]) -> None:
+    payload = {
+        "meta": dict(workload=args.workload, arrivals=args.arrivals,
+                     arch=args.arch, preset=args.preset,
+                     requests=args.requests, rate=args.rate,
+                     seed=args.seed, slots=args.slots,
+                     prefill_budget=args.prefill_budget,
+                     gate_gamma=args.gate_gamma, planner=args.planner,
+                     replan_every=args.replan_every,
+                     virtual_ep=args.virtual_ep or 4,
+                     spare_per_rank=args.spare_per_rank,
+                     max_replicas=args.max_replicas,
+                     cost_gate=args.cost_gate, replay=args.replay),
+        "arms": results,
+    }
+    with open(args.json_out, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    print(f"wrote {len(results)} arm summar"
+          f"{'ies' if len(results) != 1 else 'y'} -> {args.json_out}")
+
+
+def print_comparison(results: Dict[str, Dict]) -> None:
+    def q(d, k, sub, default=float("nan")):
+        v = d.get(k, {})
+        return v.get(sub, default) if isinstance(v, dict) else default
+
+    print(f"\n{'arm':16s} {'tok/s':>8s} {'ttft p50':>9s} {'ttft p99':>9s} "
+          f"{'tpot p50':>9s} {'IB mean':>8s} {'IB p99':>7s} {'fp4':>5s} "
+          f"{'split':>6s} {'mig MB':>7s}")
+    for name, s in results.items():
+        print(f"{name:16s} {s['throughput_tok_per_s']:8.0f} "
+              f"{q(s, 'ttft', 'p50'):9.4f} {q(s, 'ttft', 'p99'):9.4f} "
+              f"{q(s, 'tpot', 'p50'):9.4f} "
+              f"{q(s, 'ib_global', 'mean'):8.3f} "
+              f"{q(s, 'ib_global', 'p99'):7.3f} "
+              f"{s['fp4_duty']:5.2f} {s['split_duty']:6.2f} "
+              f"{s['migration_bytes_total'] / 1e6:7.2f}")
+
+
 def main(argv=None) -> int:
     import jax
 
@@ -221,6 +323,41 @@ def main(argv=None) -> int:
     else:
         specs = build_stream(args, cfg.vocab_size, max_prompt)
 
+    params = tf.init_model(cfg, jax.random.PRNGKey(args.seed))
+
+    if args.arm == "all":
+        # every arm head-to-head on the same realized stream, one
+        # deterministic invocation (shared logical params, fresh engine
+        # state per arm; migration gathers never mutate the shared tree)
+        if args.virtual_ep is None:
+            args.virtual_ep = 4
+        print(f"comparing {len(ARMS)} arms: workload={args.workload} "
+              f"arrivals={args.arrivals} arch={cfg.name} "
+              f"requests={len(specs)} virtual_ep={args.virtual_ep}")
+        print(f"stream: {stream_stats(specs)}")
+        results: Dict[str, Dict] = {}
+        realized = specs
+        for name in ARMS:
+            sub = argparse.Namespace(**vars(args))
+            sub.arm, sub.record = name, None
+            telemetry, eng, realized, wall = serve(sub, cfg, params, specs)
+            results[name] = summarize_run(telemetry, eng, wall)
+            print(f"  {name}: {results[name]['n_requests_served']} served, "
+                  f"{results[name]['throughput_tok_per_s']:.0f} tok/s, "
+                  f"{wall:.1f}s wall")
+        if args.record:
+            save_stream(args.record, realized,
+                        meta=dict(workload=args.workload,
+                                  arrivals=args.arrivals, seed=args.seed,
+                                  policy="all"))
+            print(f"recorded {len(realized)} requests -> {args.record}")
+        print_comparison(results)
+        if args.json_out:
+            write_json_out(args, results)
+        if args.json:
+            print(json.dumps(results, default=float))
+        return 0
+
     resolve_arm(args)     # idempotent; serve() resolves again
     print(f"workload={args.workload} arrivals={args.arrivals} "
           f"policy={args.policy} arch={cfg.name} "
@@ -231,7 +368,6 @@ def main(argv=None) -> int:
              f"virtual_ep={args.virtual_ep}" if args.arm else ""))
     print(f"stream: {stream_stats(specs)}")
 
-    params = tf.init_model(cfg, jax.random.PRNGKey(args.seed))
     telemetry, eng, realized, wall = serve(args, cfg, params, specs)
 
     if args.record:
@@ -241,12 +377,9 @@ def main(argv=None) -> int:
                               policy=args.policy))
         print(f"recorded {len(realized)} requests -> {args.record}")
 
-    done = eng.scheduler.finished
-    out_toks = sum(len(r.generated) for r in done)
-    in_toks = sum(r.prompt_len for r in done)
-    s = telemetry.summary()
-    s["throughput_tok_per_s"] = (in_toks + out_toks) / max(wall, 1e-9)
-    s["wall_s"] = wall
+    s = summarize_run(telemetry, eng, wall)
+    if args.json_out:
+        write_json_out(args, {args.arm or args.policy: s})
     if args.json:
         print(json.dumps(s, default=float))
         return 0
@@ -254,9 +387,10 @@ def main(argv=None) -> int:
     def fmt(d):
         return " ".join(f"{k}={v:.4f}" for k, v in d.items()) or "(none)"
 
-    print(f"served {len(done)} requests, {in_toks} prompt + {out_toks} "
+    print(f"served {s['n_requests_served']} requests, "
+          f"{s['prompt_tokens']} prompt + {s['generated_tokens']} "
           f"generated tokens in {wall:.1f}s wall "
-          f"({(in_toks + out_toks) / max(wall, 1e-9):.0f} tok/s), "
+          f"({s['throughput_tok_per_s']:.0f} tok/s), "
           f"{s['n_iters']} iterations")
     print(f"TTFT        {fmt(s['ttft'])}")
     print(f"TTFT vision {fmt(s['ttft_vision'])}")
@@ -267,7 +401,8 @@ def main(argv=None) -> int:
     print(f"gate duty: prefill={s['gate_duty_prefill']:.2f} "
           f"decode={s['gate_duty_decode']:.2f}; "
           f"fp4 duty: all={s['fp4_duty']:.2f} "
-          f"prefill={s['fp4_duty_prefill']:.2f}")
+          f"prefill={s['fp4_duty_prefill']:.2f}; "
+          f"split duty: {s['split_duty']:.2f}")
     print(f"migration: {s['n_migrations']} events, "
           f"{s['migration_bytes_total'] / 1e6:.2f} MB moved, "
           f"{s['migration_s_total'] * 1e3:.2f} ms charged")

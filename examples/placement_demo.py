@@ -1,18 +1,26 @@
-"""Placement vs ReaLB vs the hybrid, on one vision-burst routing trace.
+"""Placement vs replication vs ReaLB vs the hybrids, on one vision-burst
+routing trace.
 
 Runs the analytic cost-model simulators (pure numpy, CPU, well under a
 minute) over a single seeded trace with abrupt vision-hot-spot jumps and
-contrasts the four arms of the comparison:
+contrasts the six arms of the comparison:
 
 * ``off``             — contiguous placement, BF16 everywhere
 * ``realb``           — ReaLB's AIMD FP4 compression (zero migration)
 * ``placement``       — predictive least-loaded remapping (pays migration)
 * ``realb+placement`` — remap the slow skew, compress the bursts
+* ``replicate``       — EPLB-style redundant experts: duplicate the
+  hottest (vision-heavy) experts into spare slots and split their tokens
+  round-robin across the replicas (pays replica-slab copies)
+* ``realb+replicate`` — the precision hybrid: replicas flatten the
+  predictable skew, FP4 absorbs the bursts the replica set missed
 
 Prints per-arm IB_d / layer-time / FP4 / migration summaries plus a
 coarse IB_d trajectory so the complementary timescales are visible: after
 each hot-spot jump the placement arm stays imbalanced until its next
-replan, while the hybrid's FP4 duty covers exactly that gap.
+replan, while the hybrid's FP4 duty covers exactly that gap.  Replication
+can go where bijective placement cannot — a single expert hotter than a
+whole rank's fair share is un-placeable but splits cleanly.
 
     PYTHONPATH=src python examples/placement_demo.py
 """
@@ -59,6 +67,10 @@ def main() -> int:
         ("realb+placement", cm.sim_realb_placement(
             cfg, g, rcfg, planner="least_loaded", interval=60,
             name="realb+placement")),
+        ("replicate", cm.sim_replication(cfg, g, interval=60,
+                                         name="replicate")),
+        ("realb+replicate", cm.sim_realb_replication(
+            cfg, g, rcfg, interval=60, name="realb+replicate")),
     ]
     base = arms[0][1]
 
@@ -81,8 +93,11 @@ def main() -> int:
               f"{means.min():.2f}..{means.max():.2f}")
     print("\nreading: 'placement' re-flattens IB only at each replan and "
           "drifts between them; 'realb' leaves IB untouched and pays FP4 "
-          "on every burst; the hybrid reaches the lowest layer time — "
-          "remapping shrinks IB so fewer tokens need compression than "
+          "on every burst; 'replicate' splits the hot experts themselves, "
+          "so it flattens skew that no bijective remap can (an expert "
+          "hotter than a rank's fair share) at a higher slab-copy cost; "
+          "the hybrids reach the lowest layer times — the table absorbs "
+          "the predictable skew so fewer tokens need compression than "
           "under ReaLB alone, at a bounded migration cost.")
     return 0
 

@@ -127,10 +127,13 @@ def restore_group(ckpt_dir: str, group: str,
     """Template-free restore of one flat group (``path -> array``).
 
     For state whose structure is owned by the writer rather than declared
-    up front — e.g. the serving engine's expert-placement plan + predictor
-    EWMA (``group="placement"``), which must survive restarts so a
-    restored engine resumes with the same expert→rank mapping its saved
-    (physically permuted) weights are in.
+    up front — e.g. the serving engine's expert-placement plan
+    (``group="placement"``) or replica set (``group="replication"``) plus
+    predictor EWMA, which must survive restarts so a restored engine
+    resumes with the same expert→slot layout its saved (physically
+    permuted / replica-expanded) weights are in.  The engine also probes
+    these groups to *refuse* a checkpoint written for a different manager
+    kind instead of desynchronizing table and weights.
     """
     step = latest_step(ckpt_dir) if step is None else step
     if step is None:

@@ -16,6 +16,7 @@ from repro.configs.base import (  # noqa: F401
     PlacementConfig,
     PREFILL_32K,
     ReaLBConfig,
+    ReplicationConfig,
     ShapeConfig,
     SINGLE_POD_MESH,
     SSMConfig,

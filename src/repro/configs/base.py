@@ -261,6 +261,32 @@ class PlacementConfig:
 
 
 @dataclass(frozen=True)
+class ReplicationConfig:
+    """Redundant experts with token-split dispatch (repro.replication).
+
+    The third arm of the comparison: instead of *moving* hot experts
+    (placement) or *compressing* them (ReaLB), duplicate them — each rank
+    provisions ``spare_per_rank`` extra weight slots beyond its bijective
+    ``E // n_ranks`` slab, and an EPLB-style planner fills the spares with
+    replicas of the predictor's hottest (vision-weighted) experts.  Routed
+    tokens are split deterministically round-robin across an expert's
+    replicas, so the post-split physical loads — which the ReaLB policy
+    and the capacity packing observe — are flattened.
+    """
+
+    enabled: bool = True
+    spare_per_rank: int = 1        # replica slots per rank beyond E // R
+    max_replicas: int = 2          # replica cap per logical expert (<= ep)
+    vis_weight: float = 1.0        # hotness = load + vis_weight * vis
+    replan_every: int = 32         # engine iterations between replans
+    warmup_iters: int = 4          # observations required before planning
+    ewma_alpha: float = 0.25       # predictor smoothing (shared w/ placement)
+    min_gain: float = 0.02         # skip re-replication below this predicted
+    #                                relative reduction of the max rank load
+    migration_bw: float = 50e9     # bytes/s charged for copied replica slabs
+
+
+@dataclass(frozen=True)
 class TrainConfig:
     lr: float = 3e-4
     warmup_steps: int = 100

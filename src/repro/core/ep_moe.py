@@ -48,6 +48,23 @@ can still be computed over a *virtual* EP topology (``m_state`` of shape
 ``[1, vep]``): per-virtual-rank placed loads drive the ReaLB policy and
 its AIMD state, which makes IB_d / FP4-duty / placement experiments
 meaningful in CPU virtual-time serving runs.
+
+Redundant experts (replication)
+-------------------------------
+The bijective table generalizes to a traced :class:`Replication` set
+(see :mod:`repro.replication`): each logical expert owns up to ``R``
+physical weight slots on distinct ranks, out of ``S >= E`` statically
+shaped slots (``slots_per_rank`` may exceed ``E // n_ranks`` — the spare
+slots hold replicas of hot experts).  Routed assignments are split
+across an expert's replicas by a *deterministic round-robin* rule — the
+``i``-th local assignment of expert ``e`` goes to replica
+``i mod n_rep[e]`` — i.e. a proportional 1/c token split with no
+randomness and no host round-trip.  Everything downstream observes the
+*post-split physical* loads: capacity packing, ``load_d``/``vis_d``, the
+LB gate, IB_d, and therefore the FP4 decision and the AIMD update react
+to the balanced physical topology, not the logical one.  With the
+identity set (one replica per expert, ``S == E``) every intermediate
+equals the bijective-placement path bitwise.
 """
 from __future__ import annotations
 
@@ -101,6 +118,85 @@ def _placed_inverse(pos_e: jax.Array) -> jax.Array:
     e = pos_e.shape[0]
     return jnp.zeros((e,), jnp.int32).at[pos_e].set(
         jnp.arange(e, dtype=jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# expert replication (redundant experts, token-split dispatch)
+# --------------------------------------------------------------------------
+class Replication(NamedTuple):
+    """Traced logical-expert → physical-replica-slot ownership matrix.
+
+    ``rep_pos [E, R]`` — physical slot (``rank * s_loc + slot``) of each
+    replica; entries at ``j >= n_rep[e]`` repeat the primary.
+    ``n_rep [E]`` — valid replica count per expert (>= 1).
+    ``slot_owner [S]`` — logical expert resident in each physical slot
+    (``-1`` = empty spare; such slots are never routed to).
+
+    The host-numpy twin is :class:`repro.replication.ReplicaSet`.
+    """
+    rep_pos: jax.Array
+    n_rep: jax.Array
+    slot_owner: jax.Array
+
+
+def identity_replication(num_experts: int, n_ranks: int) -> Replication:
+    """One replica per expert, no spare slots ≡ the identity placement."""
+    ar = jnp.arange(num_experts, dtype=jnp.int32)
+    return Replication(ar[:, None], jnp.ones_like(ar), ar)
+
+
+def _as_replication(placement, num_experts: int, pol_ep: int) -> Replication:
+    """Normalize the user-facing ``placement`` argument: None (identity),
+    a bijective ``Placement``/2-tuple, or a ``Replication``/3-tuple."""
+    if placement is None:
+        return identity_replication(num_experts, pol_ep)
+    if isinstance(placement, Replication):
+        return placement
+    entries = tuple(placement)
+    if len(entries) == 3:
+        return Replication(*entries)
+    place = placement if isinstance(placement, Placement) \
+        else Placement(*entries)
+    pos_e = _placed_index(place, num_experts // pol_ep)
+    return Replication(pos_e[:, None],
+                       jnp.ones((num_experts,), jnp.int32),
+                       _placed_inverse(pos_e))
+
+
+def _occurrence_index(flat_e: jax.Array, num_experts: int) -> jax.Array:
+    """[n] per-assignment rank among same-expert assignments (original
+    order) — the deterministic round-robin counter of the token split.
+    Entries equal to ``num_experts`` (masked-out assignments) count only
+    against each other, never against real experts."""
+    n = flat_e.shape[0]
+    ord_e = jnp.argsort(flat_e, stable=True)
+    counts = jnp.bincount(flat_e, length=num_experts + 1)
+    offs = (jnp.cumsum(counts) - counts).astype(jnp.int32)
+    occ_sorted = jnp.arange(n, dtype=jnp.int32) - jnp.take(offs,
+                                                           flat_e[ord_e])
+    return jnp.zeros((n,), jnp.int32).at[ord_e].set(occ_sorted)
+
+
+def _split_assignments(rep: Replication, flat_e: jax.Array,
+                       valid_flat: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """(flat_pos [n], is_secondary [n]): the physical slot each routed
+    assignment is dispatched to, round-robin over the expert's replicas.
+
+    The counter runs over *valid* assignments only — invalid ones
+    (chunk-bucket padding, dummy decode rows) pin to the primary replica
+    and are excluded from the count, so padding neither shifts which
+    replica serves a real token nor moves the post-split policy stats
+    (the invariant the valid-weighted counts established in PR 1).
+    """
+    if rep.rep_pos.shape[1] == 1:      # bijective: skip the counter
+        flat_p = jnp.take(rep.rep_pos[:, 0], flat_e)
+        return flat_p, jnp.zeros(flat_e.shape, jnp.bool_)
+    e = rep.rep_pos.shape[0]
+    occ = _occurrence_index(jnp.where(valid_flat, flat_e, e), e)
+    ridx = jnp.where(valid_flat, occ % jnp.take(rep.n_rep, flat_e), 0)
+    flat_p = rep.rep_pos[flat_e, ridx]
+    return flat_p, ridx > 0
 
 
 # --------------------------------------------------------------------------
@@ -256,37 +352,45 @@ def _quantize_experts(w: Dict[str, jax.Array], use_fp4: jax.Array,
 # --------------------------------------------------------------------------
 # dispatch path (train / prefill)
 # --------------------------------------------------------------------------
-def _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, place,
+def _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, rep,
                   pol_ep, train):
     """x_t [t,D] local tokens; mod_t [t] vision flags; val_t [t] real-token
-    flags (False = batch padding); m_vec [pol_ep] AIMD; place maps logical
-    experts onto ``pol_ep`` policy ranks (== comm.ep on a real EP mesh; a
-    virtual topology when comm.ep == 1)."""
+    flags (False = batch padding); m_vec [pol_ep] AIMD; rep maps logical
+    experts onto replica slots strided over ``pol_ep`` policy ranks
+    (== comm.ep on a real EP mesh; a virtual topology when comm.ep == 1)."""
     e_cfg = cfg.moe
     ep, e = comm.ep, cfg.moe.num_experts
-    e_loc = e // ep                      # physical slab size per rank
-    e_pol = e // pol_ep                  # policy-topology slab size
+    n_slots = rep.slot_owner.shape[0]    # physical weight slots (>= E)
+    s_loc = n_slots // ep                # physical slab size per rank
+    s_pol = n_slots // pol_ep            # policy-topology slab size
     t, d = x_t.shape
     k = e_cfg.top_k
-    pos_e = _placed_index(place, e_pol)  # logical expert -> placed position
-    inv = _placed_inverse(pos_e)         # placed position -> logical expert
 
     # ① routing + metadata (the lightweight "S" collection) ---------------
     gates, eidx, probs = _route(p["router"], x_t, e_cfg)
     flat_e = eidx.reshape(t * k)
-    flat_p = jnp.take(pos_e, flat_e)     # placed position per assignment
+    # deterministic round-robin token split over each expert's replicas
+    # (valid assignments only — padding pins to the primary)
+    val_flat = jnp.repeat(val_t.astype(bool), k)
+    flat_p, secondary = _split_assignments(rep, flat_e, val_flat)
     # counts are valid-weighted so the LB gate, IB_d, the AIMD update and
     # the dispatch packing all see only real tokens — chunk-bucket padding
     # neither moves the policy nor claims expert capacity
     w_val = jnp.repeat(val_t.astype(F32), k)
+    w_vis = jnp.repeat((mod_t & val_t).astype(F32), k)
     counts_stat = jnp.bincount(flat_e, weights=w_val, length=e)
-    vis_local = jnp.bincount(flat_e, weights=jnp.repeat(
-        (mod_t & val_t).astype(F32), k), length=e)
+    vis_local = jnp.bincount(flat_e, weights=w_vis, length=e)
     counts_global = comm.psum_model(counts_stat)              # [E] logical
     vis_global = comm.psum_model(vis_local)
-    # per-policy-rank *placed* loads: gather into placed order, then reduce
-    load_d = jnp.take(counts_global, inv).reshape(pol_ep, e_pol).sum(-1)
-    vis_d = jnp.take(vis_global, inv).reshape(pol_ep, e_pol).sum(-1)
+    # per-physical-slot *post-split* loads: the policy, the packing and
+    # the diagnostics all observe the replica-balanced topology
+    slot_stat = jnp.bincount(flat_p, weights=w_val, length=n_slots)
+    slot_load = comm.psum_model(slot_stat)                    # [S] physical
+    slot_vis = comm.psum_model(
+        jnp.bincount(flat_p, weights=w_vis, length=n_slots))
+    load_d = slot_load.reshape(pol_ep, s_pol).sum(-1)
+    vis_d = slot_vis.reshape(pol_ep, s_pol).sum(-1)
+    split = comm.psum_model(jnp.sum(secondary.astype(F32) * w_val))
 
     # ② modality-aware LB scheduling (AIMD policy) -------------------------
     dec = realb_policy(load_d, vis_d, m_vec, rcfg)
@@ -308,13 +412,13 @@ def _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, place,
     # slot, so they cannot crowd real tokens out of the per-rank cap (the
     # cap itself is provisioned from the static t, which over- rather than
     # under-provisions when chunks underfill the bucket)
-    dest = flat_p // e_loc
-    valid_flat = jnp.repeat(val_t.astype(bool), k)
+    dest = flat_p // s_loc
+    valid_flat = val_flat
     order = jnp.argsort(jnp.where(valid_flat, dest, ep), stable=True)
     dest_s = dest[order]
     valid_s = valid_flat[order]
-    send_counts = jnp.take(counts_stat, inv).astype(jnp.int32) \
-        .reshape(ep, e_loc).sum(-1)                            # [ep] valid
+    send_counts = slot_stat.reshape(ep, s_loc).sum(-1) \
+        .astype(jnp.int32)                                     # [ep] valid
     offsets = jnp.cumsum(send_counts) - send_counts
     pos_in_rank = jnp.arange(t * k, dtype=jnp.int32) - offsets[dest_s]
     cap = max(8, -(-math.ceil(t * k / ep * e_cfg.capacity_factor) // 8) * 8)
@@ -324,10 +428,10 @@ def _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, place,
 
     tok_idx_s = (order // k).astype(jnp.int32)
     vals_s = jnp.take(x_t, tok_idx_s, axis=0)
-    leid_s = (flat_p % e_loc)[order]
+    leid_s = (flat_p % s_loc)[order]
     send = jnp.zeros((ep * cap, d), x_t.dtype).at[slot_s].set(
         vals_s, mode="drop")
-    eid_send = jnp.full((ep * cap,), e_loc, jnp.int32).at[slot_s].set(
+    eid_send = jnp.full((ep * cap,), s_loc, jnp.int32).at[slot_s].set(
         leid_s, mode="drop")
     slot_flat = jnp.full((t * k,), big, jnp.int32).at[order].set(
         slot_s.astype(jnp.int32))
@@ -342,7 +446,7 @@ def _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, place,
     # ④ balanced local expert compute ---------------------------------------
     order2 = jnp.argsort(eid_recv, stable=True)
     xs = jnp.take(recv, order2, axis=0)
-    gs = jnp.bincount(eid_recv, length=e_loc + 1).astype(jnp.int32)
+    gs = jnp.bincount(eid_recv, length=s_loc + 1).astype(jnp.int32)
     pad_row = lambda a: jnp.concatenate([a, a[:1]], axis=0)
     w_pad = {n: pad_row(v) for n, v in w.items()}
     if train:
@@ -376,6 +480,8 @@ def _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, place,
                fp4_ranks=jnp.sum(dec.use_fp4.astype(F32)),
                load_d=load_d, vis_d=vis_d,
                expert_load=counts_global, expert_vis=vis_global,
+               slot_load=slot_load, slot_vis=slot_vis,
+               split_frac=split / jnp.maximum(total, 1.0),
                gate_open=dec.gate_open.astype(F32))
     return out.astype(x_t.dtype), dec.m_new, aux
 
@@ -383,27 +489,34 @@ def _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, place,
 # --------------------------------------------------------------------------
 # broadcast path (decode)
 # --------------------------------------------------------------------------
-def _moe_broadcast(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, place,
+def _moe_broadcast(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, rep,
                    pol_ep):
     """Decode-regime MoE: tokens replicated over the EP axis."""
     e_cfg = cfg.moe
     ep, e = comm.ep, e_cfg.num_experts
-    e_loc = e // ep
-    e_pol = e // pol_ep
+    n_slots = rep.slot_owner.shape[0]
+    s_loc = n_slots // ep
+    s_pol = n_slots // pol_ep
     t = x_t.shape[0]
     k = e_cfg.top_k
-    pos_e = _placed_index(place, e_pol)
-    inv = _placed_inverse(pos_e)
 
     gates, eidx, probs = _route(p["router"], x_t, e_cfg)
     flat_e = eidx.reshape(t * k)
+    # every rank sees the full (replicated) token set, so the round-robin
+    # counter is identical on all ranks: each assignment has exactly one
+    # computing replica and the psum combine never double-counts
+    flat_p, secondary = _split_assignments(
+        rep, flat_e, jnp.repeat(val_t.astype(bool), k))
     # valid-weighted: dummy decode rows (inactive slots) don't count
     w_val = jnp.repeat(val_t.astype(F32), k)
+    w_vis = jnp.repeat((mod_t & val_t).astype(F32), k)
     counts = jnp.bincount(flat_e, weights=w_val, length=e)     # row totals
-    vis = jnp.bincount(flat_e, weights=jnp.repeat(
-        (mod_t & val_t).astype(F32), k), length=e)
-    load_d = jnp.take(counts, inv).reshape(pol_ep, e_pol).sum(-1)
-    vis_d = jnp.take(vis, inv).reshape(pol_ep, e_pol).sum(-1)
+    vis = jnp.bincount(flat_e, weights=w_vis, length=e)
+    slot_load = jnp.bincount(flat_p, weights=w_val, length=n_slots)
+    slot_vis = jnp.bincount(flat_p, weights=w_vis, length=n_slots)
+    load_d = slot_load.reshape(pol_ep, s_pol).sum(-1)
+    vis_d = slot_vis.reshape(pol_ep, s_pol).sum(-1)
+    split = jnp.sum(secondary.astype(F32) * w_val)
     dec = realb_policy(load_d, vis_d, m_vec, rcfg)
     if ep == pol_ep:
         use_fp4_me = dec.use_fp4[comm.my_rank]
@@ -413,10 +526,10 @@ def _moe_broadcast(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, place,
     w = _gather_weights(p, comm)
     wq = _quantize_experts(w, use_fp4_me, rcfg, None)
 
-    pidx = jnp.take(pos_e, eidx)                               # [t,K] placed
-    sel = (pidx // e_loc) == comm.my_rank                      # [t,K]
+    pidx = flat_p.reshape(t, k)                                # [t,K] placed
+    sel = (pidx // s_loc) == comm.my_rank                      # [t,K]
     local_gate = jnp.where(sel, gates, 0.0)
-    leid = pidx % e_loc
+    leid = pidx % s_loc
 
     def per_expert(x_all, wg, wu, wd):
         g = jnp.einsum("td,edf->etf", x_all, wg.astype(x_all.dtype))
@@ -440,7 +553,7 @@ def _moe_broadcast(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, place,
 
     y_e = jax.lax.cond(use_fp4_me, fp4_branch, bf16_branch, (x_t, w, wq))
 
-    onehot = jax.nn.one_hot(leid, e_loc, dtype=y_e.dtype)      # [t,K,e_loc]
+    onehot = jax.nn.one_hot(leid, s_loc, dtype=y_e.dtype)      # [t,K,s_loc]
     weight_e = jnp.einsum("tk,tke->te", local_gate.astype(y_e.dtype), onehot)
     y_partial = jnp.einsum("te,etd->td", weight_e, y_e)
     out = comm.psum_model(y_partial)
@@ -451,6 +564,8 @@ def _moe_broadcast(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, place,
                fp4_ranks=jnp.sum(dec.use_fp4.astype(F32)),
                load_d=load_d, vis_d=vis_d,
                expert_load=counts, expert_vis=vis,
+               slot_load=slot_load, slot_vis=slot_vis,
+               split_frac=split / jnp.maximum(total, 1.0),
                gate_open=dec.gate_open.astype(F32))
     return out.astype(x_t.dtype), dec.m_new, aux
 
@@ -459,11 +574,11 @@ def _moe_broadcast(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, place,
 # public entry: shard_map wrapper
 # --------------------------------------------------------------------------
 AUX_SCALARS = ("lb_loss", "z_loss", "drop_frac", "ib_global", "fp4_ranks",
-               "gate_open")
+               "gate_open", "split_frac")
 
 
-def _manual_fn(x, mod, val, m_state, router, w_gate, w_up, w_down, e2r,
-               lslot, *, cfg, rcfg, ep, mode, fsdp, train):
+def _manual_fn(x, mod, val, m_state, router, w_gate, w_up, w_down, rep_pos,
+               n_rep, slot_owner, *, cfg, rcfg, ep, mode, fsdp, train):
     comm = _dist_comm(ep, fsdp)
     b, s, d = x.shape
     x_t = x.reshape(b * s, d)
@@ -475,20 +590,22 @@ def _manual_fn(x, mod, val, m_state, router, w_gate, w_up, w_down, e2r,
         jax.nn.one_hot(comm.my_rank, ep, dtype=F32) * m_state.reshape(()))
     p = {"router": router, "w_gate": w_gate, "w_up": w_up, "w_down": w_down}
     act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
-    place = Placement(e2r, lslot)
+    rep = Replication(rep_pos, n_rep, slot_owner)
     if mode == "broadcast":
         y, m_new, aux = _moe_broadcast(x_t, mod_t, val_t, p, m_vec, cfg,
-                                       rcfg, comm, act, place, ep)
+                                       rcfg, comm, act, rep, ep)
     else:
         y, m_new, aux = _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg,
-                                      rcfg, comm, act, place, ep, train)
+                                      rcfg, comm, act, rep, ep, train)
     y = y.reshape(b, s, d)
     m_out = m_new[comm.my_rank].reshape(m_state.shape)
     aux_s = jnp.stack([aux[n] for n in AUX_SCALARS]).reshape(1, -1)
     stats = jnp.stack([aux["load_d"], aux["vis_d"]]).reshape(1, 2, ep)
     estats = jnp.stack([aux["expert_load"], aux["expert_vis"]]
                        ).reshape(1, 2, -1)
-    return y, m_out, aux_s, stats, estats
+    sstats = jnp.stack([aux["slot_load"], aux["slot_vis"]]
+                       ).reshape(1, 2, -1)
+    return y, m_out, aux_s, stats, estats, sstats
 
 
 def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
@@ -501,17 +618,19 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
     """MoE layer with ReaLB.  x [B,S,D]; m_state [groups, ep] (see
     :func:`moe_state_shape`); valid [B,S] marks real tokens (None = all) —
     padding still computes but is excluded from the routing stats the
-    policy consumes.  ``placement`` maps logical experts onto EP ranks
-    (None = the contiguous identity mapping, bitwise-identical to the
-    pre-placement layer); the expert weight arrays in ``p`` must be stored
-    in the matching *placed* order.  Returns (y, new_m_state, aux_dict)."""
+    policy consumes.  ``placement`` maps logical experts onto EP ranks:
+    None = the contiguous identity mapping (bitwise-identical to the
+    pre-placement layer), a :class:`Placement`/2-tuple = a bijective
+    permutation, a :class:`Replication`/3-tuple = redundant experts with
+    round-robin token splitting.  The expert weight arrays in ``p`` must
+    be stored in the matching *placed* physical-slot order (``[S, ...]``
+    with ``S >= num_experts`` under replication).
+    Returns (y, new_m_state, aux_dict)."""
     mesh = current_mesh()
     if modality is None:
         modality = jnp.zeros(x.shape[:2], jnp.bool_)
     if valid is None:
         valid = jnp.ones(x.shape[:2], jnp.bool_)
-    if placement is not None and not isinstance(placement, Placement):
-        placement = Placement(*placement)
 
     local = (mesh is None or "model" not in mesh.axis_names or
              dict(zip(mesh.axis_names, mesh.devices.shape))["model"] == 1)
@@ -523,8 +642,9 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
         pol_ep = int(m_state.shape[-1]) if m_state.ndim else 1
         assert cfg.moe.num_experts % pol_ep == 0, \
             (cfg.moe.num_experts, pol_ep)
-        place = identity_placement(cfg.moe.num_experts, pol_ep) \
-            if placement is None else placement
+        rep = _as_replication(placement, cfg.moe.num_experts, pol_ep)
+        assert rep.slot_owner.shape[0] % pol_ep == 0, \
+            (rep.slot_owner.shape[0], pol_ep)
         comm = _local_comm()
         b, s, d = x.shape
         act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
@@ -532,7 +652,7 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
             _moe_dispatch, train=train)
         y, m_new, aux = fn(x.reshape(b * s, d), modality.reshape(b * s),
                            valid.reshape(b * s), p, m_state.reshape(-1),
-                           cfg, rcfg, comm, act, place, pol_ep)
+                           cfg, rcfg, comm, act, rep, pol_ep)
         return (y.reshape(b, s, d), m_new.reshape(m_state.shape), aux)
 
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -540,8 +660,9 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
     row_axes = tuple(a for a in mesh.axis_names if a != "model")
     row_entry = row_axes if len(row_axes) > 1 else row_axes[0]
     single_group = m_state.shape[0] == 1
-    place = identity_placement(cfg.moe.num_experts, ep) \
-        if placement is None else placement
+    rep = _as_replication(placement, cfg.moe.num_experts, ep)
+    assert rep.slot_owner.shape[0] % ep == 0, \
+        (rep.slot_owner.shape[0], ep)
 
     x_axes = ("batch", "seq", None) if mode == "dispatch" \
         else ("batch", None, None)
@@ -549,7 +670,8 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
     mod_spec = PartitionSpec(*x_spec[:2])
     m_spec = PartitionSpec(None if single_group else row_entry, "model")
     r_spec = PartitionSpec(None, None)
-    t_spec = PartitionSpec(None)                    # replicated [E] tables
+    t_spec = PartitionSpec(None)        # replicated [E]/[S] tables
+    t2_spec = PartitionSpec(None, None)  # replicated [E, R] replica matrix
     wg_spec = resolve_spec(p["w_gate"].shape,
                            ("expert", "embed" if fsdp else None, None), mesh)
     wd_spec = resolve_spec(p["w_down"].shape,
@@ -560,13 +682,14 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
 
     fn = partial(_manual_fn, cfg=cfg, rcfg=rcfg, ep=ep, mode=mode,
                  fsdp=fsdp, train=train)
-    y, m_new, aux_s, stats, estats = shard_map(
+    y, m_new, aux_s, stats, estats, sstats = shard_map(
         fn, mesh=mesh,
         in_specs=(x_spec, mod_spec, mod_spec, m_spec, r_spec, wg_spec,
-                  wg_spec, wd_spec, t_spec, t_spec),
-        out_specs=(x_spec, m_spec, aux_spec, stats_spec, stats_spec),
+                  wg_spec, wd_spec, t2_spec, t_spec, t_spec),
+        out_specs=(x_spec, m_spec, aux_spec, stats_spec, stats_spec,
+                   stats_spec),
     )(x, modality, valid, m_state, p["router"], p["w_gate"], p["w_up"],
-      p["w_down"], place.e2r, place.local_slot)
+      p["w_down"], rep.rep_pos, rep.n_rep, rep.slot_owner)
 
     aux_mean = aux_s.mean(0)
     aux = {n: aux_mean[i] for i, n in enumerate(AUX_SCALARS)}
@@ -574,6 +697,8 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
     aux["vis_d"] = stats[:, 1, :]
     aux["expert_load"] = estats[:, 0, :].sum(0)
     aux["expert_vis"] = estats[:, 1, :].sum(0)
+    aux["slot_load"] = sstats[:, 0, :].sum(0)
+    aux["slot_vis"] = sstats[:, 1, :].sum(0)
     return y, m_new, aux
 
 

@@ -226,15 +226,28 @@ def _pad_kv(arr: jax.Array, cache_len: int) -> jax.Array:
     return jnp.pad(arr, pad)
 
 
+def n_physical_slots(cfg: ModelConfig, placement=None) -> int:
+    """Physical expert-slot count S of the MoE weight arrays: the logical
+    expert count for bijective tables, the replica-slot count (>= E) when
+    a :class:`~repro.core.ep_moe.Replication` set is threaded through."""
+    n_e = cfg.moe.num_experts if cfg.moe is not None else 1
+    if placement is not None and len(tuple(placement)) == 3:
+        return int(tuple(placement)[2].shape[0])
+    return n_e
+
+
 def apply_layer(lp: Tree, x: jax.Array, cfg: ModelConfig, rcfg: ReaLBConfig,
                 mix: str, ffn: str, *, mode: str, positions, pos,
                 memory, cache_in, m_state, modality, cache_len: int,
                 fsdp: bool, chunk_len=None, valid=None, placement=None):
-    """Returns (x, cache_out, m_state, aux_scalars, stats, estats)."""
+    """Returns (x, cache_out, m_state, aux_scalars, stats, estats,
+    sstats)."""
     n_e = cfg.moe.num_experts if cfg.moe is not None else 1
+    n_slot = n_physical_slots(cfg, placement)
     aux = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
     stats = jnp.zeros((2,) + m_state.shape, jnp.float32)
     estats = jnp.zeros((2, n_e), jnp.float32)
+    sstats = jnp.zeros((2, n_slot), jnp.float32)
     cache_out: Dict[str, jax.Array] = {}
     decode = mode == "decode"
     with_cache = mode in ("prefill", "decode", "chunk")
@@ -324,7 +337,13 @@ def apply_layer(lp: Tree, x: jax.Array, cfg: ModelConfig, rcfg: ReaLBConfig,
             moe_aux["expert_load"].reshape(-1, n_e).sum(0),
             moe_aux["expert_vis"].reshape(-1, n_e).sum(0)]
         ).astype(jnp.float32)
-    return x, cache_out, m_state, aux, stats, estats
+        # per-physical-slot post-split loads: the replica manager's
+        # utilization stream (== estats under a bijective table)
+        sstats = jnp.stack([
+            moe_aux["slot_load"].reshape(-1, n_slot).sum(0),
+            moe_aux["slot_vis"].reshape(-1, n_slot).sum(0)]
+        ).astype(jnp.float32)
+    return x, cache_out, m_state, aux, stats, estats, sstats
 
 
 # --------------------------------------------------------------------------
@@ -376,7 +395,7 @@ def _encode(params, cfg: ModelConfig, enc_embeds: jax.Array,
 
     def body(carry, bp):
         h, m = carry
-        h, _, m, _, _, _ = apply_layer(
+        h, _, m, _, _, _, _ = apply_layer(
             bp["layer0"], h, cfg, rcfg, "attn", "dense", mode="encode",
             positions=positions, pos=None, memory=None, cache_in=None,
             m_state=m, modality=None, cache_len=0, fsdp=False)
@@ -393,6 +412,7 @@ def _run_stack(params, cfg, rcfg, x, *, mode, positions, pos, memory,
                valid=None, placement=None):
     layout, n_blocks, n_prefix = block_structure(cfg)
     n_e = cfg.moe.num_experts if cfg.moe is not None else 1
+    n_slot = n_physical_slots(cfg, placement)
     new_cache: Dict[str, Any] = {}
     aux_acc = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
     with_cache = mode in ("prefill", "decode", "chunk")
@@ -403,7 +423,7 @@ def _run_stack(params, cfg, rcfg, x, *, mode, positions, pos, memory,
         for i in range(n_prefix):
             ci = cache["prefix"][str(i)] if (cache and "prefix" in cache) \
                 else None
-            x, co, m_state, aux, _, _ = apply_layer(
+            x, co, m_state, aux, _, _, _ = apply_layer(
                 params["prefix"][str(i)], x, cfg, rcfg,
                 cfg.layer_kinds()[i], "dense", mode=mode,
                 positions=positions, pos=pos, memory=memory, cache_in=ci,
@@ -420,9 +440,10 @@ def _run_stack(params, cfg, rcfg, x, *, mode, positions, pos, memory,
         aux_b = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
         stats_b = jnp.zeros((2,) + m.shape, jnp.float32)
         estats_b = jnp.zeros((2, n_e), jnp.float32)
+        sstats_b = jnp.zeros((2, n_slot), jnp.float32)
         for i, (mix, f) in enumerate(layout):
             ci = cache_in[f"layer{i}"] if cache_in is not None else None
-            h, co, m, aux, stats, estats = apply_layer(
+            h, co, m, aux, stats, estats, sstats = apply_layer(
                 bp[f"layer{i}"], h, cfg, rcfg, mix, f, mode=mode,
                 positions=positions, pos=pos, memory=memory, cache_in=ci,
                 m_state=m, modality=modality, cache_len=cache_len,
@@ -433,8 +454,9 @@ def _run_stack(params, cfg, rcfg, x, *, mode, positions, pos, memory,
             aux_b = {k: aux_b[k] + aux[k] for k in AUX_KEYS}
             stats_b = stats_b + stats
             estats_b = estats_b + estats
-        outs = (block_cache, aux_b, stats_b, estats_b) if with_cache \
-            else (aux_b, stats_b, estats_b)
+            sstats_b = sstats_b + sstats
+        outs = (block_cache, aux_b, stats_b, estats_b, sstats_b) \
+            if with_cache else (aux_b, stats_b, estats_b, sstats_b)
         return (h, m), outs
 
     if mode == "train" and cfg.remat == "full":
@@ -450,12 +472,14 @@ def _run_stack(params, cfg, rcfg, x, *, mode, positions, pos, memory,
     xs = (params["blocks"], cache["blocks"] if with_cache and cache else None)
     (x, m_state), ys = jax.lax.scan(body, (x, m_state), xs)
     if with_cache:
-        new_cache["blocks"], aux_blocks, stats_blocks, estats_blocks = ys
+        (new_cache["blocks"], aux_blocks, stats_blocks, estats_blocks,
+         sstats_blocks) = ys
     else:
-        aux_blocks, stats_blocks, estats_blocks = ys
+        aux_blocks, stats_blocks, estats_blocks, sstats_blocks = ys
     aux_total = {k: aux_acc[k] + aux_blocks[k].sum() for k in AUX_KEYS}
     aux_total["moe_stats"] = stats_blocks          # [n_blocks, 2, groups, ep]
     aux_total["expert_stats"] = estats_blocks      # [n_blocks, 2, E]
+    aux_total["slot_stats"] = sstats_blocks        # [n_blocks, 2, S]
     return x, (new_cache if with_cache else None), m_state, aux_total
 
 

@@ -23,30 +23,39 @@ from repro.placement.table import PlacementTable
 
 
 class PlacementManager:
-    def __init__(self, cfg: ModelConfig, pcfg: PlacementConfig, ep: int):
+    ckpt_group = "placement"       # engine checkpoint group name
+
+    def __init__(self, cfg: ModelConfig, pcfg: PlacementConfig, ep: int,
+                 cost_gate=None):
         assert cfg.moe is not None, "placement requires an MoE model"
         n_moe = sum(1 for f in cfg.ffn_kinds() if f == "moe")
         self._setup(cfg.moe.num_experts, pcfg, ep,
-                    migrate.expert_bytes(cfg, max(n_moe, 1)))
+                    migrate.expert_bytes(cfg, max(n_moe, 1)), cost_gate)
         self.cfg = cfg
 
     @classmethod
     def from_geometry(cls, num_experts: int, pcfg: PlacementConfig,
-                      ep: int, bytes_per_expert: int = 0
-                      ) -> "PlacementManager":
+                      ep: int, bytes_per_expert: int = 0,
+                      cost_gate=None) -> "PlacementManager":
         """Model-config-free construction (cost-model simulators)."""
         self = cls.__new__(cls)
-        self._setup(num_experts, pcfg, ep, bytes_per_expert)
+        self._setup(num_experts, pcfg, ep, bytes_per_expert, cost_gate)
         self.cfg = None
         return self
 
     def _setup(self, num_experts: int, pcfg: PlacementConfig, ep: int,
-               bytes_per_expert: int):
+               bytes_per_expert: int, cost_gate=None):
         assert num_experts % ep == 0, (num_experts, ep)
         self.pcfg, self.ep = pcfg, ep
         self.table = PlacementTable.identity(num_experts, ep)
         self.predictor = EWMAPredictor(num_experts, alpha=pcfg.ewma_alpha)
         self.bytes_per_expert = bytes_per_expert
+        # optional amortized-gain guard: an object with
+        # accept(old_rank_loads, new_rank_loads, n_moved) -> bool, built
+        # from the analytic latency model (benchmarks.costmodel.
+        # ReplanCostGate) — a replan then fires only when the predicted
+        # layer-time savings over its horizon exceed the migration cost
+        self.cost_gate = cost_gate
         # cumulative accounting
         self.n_migrations = 0
         self.migrated_bytes = 0
@@ -58,7 +67,11 @@ class PlacementManager:
         written by a placement-free engine: weights are identity-ordered
         and there is no plan/predictor state to resume)."""
         self._setup(self.table.num_experts, self.pcfg, self.ep,
-                    self.bytes_per_expert)
+                    self.bytes_per_expert, self.cost_gate)
+
+    def device_tables(self):
+        """(e2r, local_slot) for the traced MoE layer."""
+        return self.table.as_tuple()
 
     # -- engine feeds ------------------------------------------------------
     def observe(self, expert_stats: np.ndarray) -> None:
@@ -89,6 +102,10 @@ class PlacementManager:
             return None
         plan = migrate.diff(self.table, new, self.bytes_per_expert)
         if plan.is_noop:
+            return None
+        if self.cost_gate is not None and not self.cost_gate.accept(
+                self.table.rank_loads(load), new.rank_loads(load),
+                plan.n_moved):
             return None
         self.table = new
         self.n_migrations += 1

@@ -86,13 +86,17 @@ def moe_param_paths(params: Dict[str, Any]) -> List[Tuple[str, str]]:
     return out
 
 
-def apply_to_params(params: Dict[str, Any], plan: MigrationPlan
-                    ) -> Dict[str, Any]:
+def apply_to_params(params: Dict[str, Any], plan) -> Dict[str, Any]:
     """Gather every routed-expert weight slab by the migration plan.
 
     Returns a new params tree (shallow-copied containers; non-MoE leaves
     aliased).  Works on stacked ``[n_blocks, E, ...]`` scan weights and on
     unstacked ``[E, ...]`` ones; the router is left in logical order.
+
+    ``plan`` is anything exposing ``gather_idx`` / ``is_noop``: a
+    bijective :class:`MigrationPlan` (``[E]`` permutation) or a
+    :class:`repro.replication.migrate.ReplicaMigrationPlan` (``[S]``
+    slot gather over the replica-expanded weight layout).
     """
     if plan.is_noop:
         return params
@@ -104,7 +108,7 @@ def apply_to_params(params: Dict[str, Any], plan: MigrationPlan
         moe = dict(lp["moe"])
         for key in MOE_WEIGHT_KEYS:
             w = moe[key]
-            axis = w.ndim - 3          # [.., E, a, b]: expert axis
+            axis = w.ndim - 3          # [.., E|S, a, b]: expert-slot axis
             moe[key] = jnp_take(w, idx, axis)
         lp["moe"] = moe
         grp[lname] = lp

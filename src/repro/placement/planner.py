@@ -19,6 +19,11 @@ simulators in ``benchmarks/costmodel.py``.
   then a bounded swap pass rebalances total load between ranks, swapping
   only expert pairs with similar vision ratio (``vis_tol``) so the
   concentration survives the rebalance.
+
+Every bijective planner is bounded below by the hottest single expert —
+a load no permutation can split.  When that bound binds, use the
+redundant-expert planner (:mod:`repro.replication.planner`) instead,
+which divides hot experts across ranks.
 """
 from __future__ import annotations
 

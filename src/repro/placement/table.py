@@ -14,6 +14,11 @@ row at which expert ``e``'s weights live in the (physically permuted)
 (physical row → logical expert).  Migration between two tables is a
 gather of weight rows by ``owner`` composition — see
 :mod:`repro.placement.migrate`.
+
+A table is the single-replica special case of the redundant-expert
+ownership matrix: :meth:`repro.replication.ReplicaSet.from_placement`
+lifts one into a (possibly spare-padded) replica set, and the identity
+replica set round-trips back to this exact layout.
 """
 from __future__ import annotations
 

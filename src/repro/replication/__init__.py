@@ -1,0 +1,21 @@
+"""Redundant experts: replication with deterministic token splitting.
+
+The third arm of the load-balancing comparison (vs. ReaLB's precision
+switching and ``repro.placement``'s bijective remapping): an EPLB-style
+planner duplicates the predictor's hottest (vision-weighted) experts
+into spare weight slots, the MoE layer splits each hot expert's routed
+tokens round-robin across its replicas (see
+``repro.core.ep_moe.Replication``), and live replica add/drop rides the
+placement weight-slab gather with a two-phase consistency rule — a
+replica becomes routable only after its slab lands.
+"""
+from repro.replication.manager import ReplicaManager
+from repro.replication.migrate import (ReplicaMigrationPlan, diff,
+                                       expand_moe_params)
+from repro.replication.planner import plan_from_config, plan_replication
+from repro.replication.replica_set import ReplicaSet
+
+__all__ = [
+    "ReplicaManager", "ReplicaMigrationPlan", "diff", "expand_moe_params",
+    "plan_from_config", "plan_replication", "ReplicaSet",
+]

@@ -1,0 +1,192 @@
+"""ReplicaManager: the serving-side control loop of expert replication.
+
+The replication twin of :class:`~repro.placement.manager.PlacementManager`
+— same EWMA predictor, same cadence/churn discipline — but the planner
+produces a :class:`ReplicaSet` and the migration path adds/retires
+replica slabs instead of permuting a bijection.
+
+Two-phase consistency (a replica is routable only after its slab lands):
+``maybe_replan`` *stages* a plan and keeps serving the old set; the
+engine gathers the weight slabs (``placement.migrate.apply_to_params``)
+and only then calls ``commit(plan)``, which flips the routable table and
+books the accounting.  A crashed / abandoned apply (``abort``) leaves the
+old set fully consistent with the untouched weights.
+
+Optionally gated by a cost model (``cost_gate``): a replan fires only
+when the predicted layer-time savings over the plan's amortization
+horizon exceed the migration cost — see
+:class:`benchmarks.costmodel.ReplanCostGate`.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ReplicationConfig
+from repro.placement import migrate as pmigrate
+from repro.placement.predictor import EWMAPredictor
+from repro.replication import migrate
+from repro.replication.planner import plan_replication
+from repro.replication.replica_set import ReplicaSet
+
+
+class ReplicaManager:
+    ckpt_group = "replication"     # engine checkpoint group name
+
+    def __init__(self, cfg: ModelConfig, rpcfg: ReplicationConfig, ep: int,
+                 cost_gate=None):
+        assert cfg.moe is not None, "replication requires an MoE model"
+        n_moe = sum(1 for f in cfg.ffn_kinds() if f == "moe")
+        self._setup(cfg.moe.num_experts, rpcfg, ep,
+                    pmigrate.expert_bytes(cfg, max(n_moe, 1)), cost_gate)
+        self.cfg = cfg
+
+    @classmethod
+    def from_geometry(cls, num_experts: int, rpcfg: ReplicationConfig,
+                      ep: int, bytes_per_expert: int = 0,
+                      cost_gate=None) -> "ReplicaManager":
+        """Model-config-free construction (cost-model simulators)."""
+        self = cls.__new__(cls)
+        self._setup(num_experts, rpcfg, ep, bytes_per_expert, cost_gate)
+        self.cfg = None
+        return self
+
+    def _setup(self, num_experts: int, rpcfg: ReplicationConfig, ep: int,
+               bytes_per_expert: int, cost_gate=None):
+        assert num_experts % ep == 0, (num_experts, ep)
+        self.rpcfg, self.ep = rpcfg, ep
+        self.slots_per_rank = num_experts // ep + rpcfg.spare_per_rank
+        self.rset = ReplicaSet.identity(num_experts, ep,
+                                        slots_per_rank=self.slots_per_rank,
+                                        max_replicas=rpcfg.max_replicas)
+        self.predictor = EWMAPredictor(num_experts, alpha=rpcfg.ewma_alpha)
+        self.bytes_per_expert = bytes_per_expert
+        self.cost_gate = cost_gate
+        self._pending: Optional[migrate.ReplicaMigrationPlan] = None
+        # cumulative accounting
+        self.n_migrations = 0
+        self.migrated_bytes = 0
+        self.migrated_slots = 0
+        self.last_replan_iter = -1
+        self.cum_slot_load = np.zeros(self.n_slots, np.float64)
+
+    # -- geometry ----------------------------------------------------------
+    @property
+    def num_experts(self) -> int:
+        return self.rset.num_experts
+
+    @property
+    def n_slots(self) -> int:
+        return self.ep * self.slots_per_rank
+
+    def reset(self) -> None:
+        """Back to a fresh identity state (e.g. restoring a checkpoint
+        written by a replication-free engine: weights are logical-order
+        and there is no replica state to resume)."""
+        self._setup(self.num_experts, self.rpcfg, self.ep,
+                    self.bytes_per_expert, self.cost_gate)
+
+    def device_tables(self):
+        """(rep_pos, n_rep, slot_owner) of the *routable* set — staged
+        plans are invisible here until committed."""
+        return self.rset.as_arrays()
+
+    # -- engine feeds ------------------------------------------------------
+    def observe(self, expert_stats: np.ndarray) -> None:
+        """expert_stats [n_blocks, 2, E]: per-MoE-layer (load, vis) counts
+        per *logical* expert of one engine iteration."""
+        es = np.asarray(expert_stats, np.float64)
+        self.predictor.observe(es[:, 0, :], es[:, 1, :])
+
+    def observe_slots(self, slot_stats: np.ndarray) -> None:
+        """slot_stats [n_blocks, 2, S]: post-split physical-slot loads —
+        cumulative replica-utilization accounting (diagnostics only)."""
+        ss = np.asarray(slot_stats, np.float64)
+        if ss.shape[-1] == self.n_slots:
+            self.cum_slot_load += ss[:, 0, :].sum(0)
+
+    # -- replanning --------------------------------------------------------
+    def maybe_replan(self, it: int
+                     ) -> Optional[migrate.ReplicaMigrationPlan]:
+        """Stage the slab gather to apply at iteration ``it``, or None.
+
+        The returned plan is *pending*: the routable set (and therefore
+        ``device_tables``) is unchanged until :meth:`commit`."""
+        p = self.rpcfg
+        if (self._pending is not None or not p.enabled
+                or self.predictor.n_obs < p.warmup_iters
+                or p.replan_every <= 0 or it % p.replan_every != 0
+                or it == self.last_replan_iter):
+            return None
+        load, vis = self.predictor.predict()
+        if load.sum() <= 0:
+            return None
+        new = plan_replication(load, self.ep, self.slots_per_rank,
+                               max_replicas=p.max_replicas, vis=vis,
+                               vis_weight=p.vis_weight)
+        # churn guard: require a predicted post-split max-rank-load gain
+        old_max = self.rset.rank_loads(load).max()
+        new_max = new.rank_loads(load).max()
+        if old_max <= 0 or (old_max - new_max) / old_max < p.min_gain:
+            return None
+        plan = migrate.diff(self.rset, new, self.bytes_per_expert)
+        if plan.is_noop:
+            return None
+        if self.cost_gate is not None and not self.cost_gate.accept(
+                self.rset.rank_loads(load), new.rank_loads(load),
+                len(plan.crossrank_slots)):
+            return None
+        self._pending = plan
+        self.last_replan_iter = it
+        return plan
+
+    def commit(self, plan: migrate.ReplicaMigrationPlan) -> None:
+        """Make the staged set routable — call only after the weight
+        slabs have been gathered into the new layout."""
+        assert self._pending is plan, "commit of a plan that is not staged"
+        self.rset = plan.new_set
+        self.n_migrations += 1
+        self.migrated_bytes += plan.moved_bytes
+        self.migrated_slots += plan.n_moved
+        self._pending = None
+
+    def abort(self) -> None:
+        """Drop a staged plan (weights untouched, old set stays routable)."""
+        self._pending = None
+
+    def migration_seconds(self, moved_bytes: int) -> float:
+        """Virtual-time cost of copying ``moved_bytes`` over the fabric."""
+        return moved_bytes / max(self.rpcfg.migration_bw, 1.0)
+
+    # -- checkpointing -----------------------------------------------------
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        out = {"rep_pos": self.rset.rep_pos, "n_rep": self.rset.n_rep,
+               "n_ranks": np.int64(self.ep),
+               "slots_per_rank": np.int64(self.slots_per_rank),
+               "n_migrations": np.int64(self.n_migrations),
+               "migrated_bytes": np.int64(self.migrated_bytes),
+               "migrated_slots": np.int64(self.migrated_slots),
+               "cum_slot_load": self.cum_slot_load}
+        for k, v in self.predictor.state_dict().items():
+            out[f"pred_{k}"] = v
+        return out
+
+    def load_state_dict(self, state: Dict[str, np.ndarray]) -> None:
+        assert int(state["n_ranks"]) == self.ep, \
+            (int(state["n_ranks"]), self.ep)
+        assert int(state["slots_per_rank"]) == self.slots_per_rank, \
+            (int(state["slots_per_rank"]), self.slots_per_rank)
+        assert state["rep_pos"].shape[1] == self.rset.max_replicas, \
+            (state["rep_pos"].shape, self.rset.max_replicas)
+        self.rset = ReplicaSet(np.asarray(state["rep_pos"], np.int32),
+                               np.asarray(state["n_rep"], np.int32),
+                               self.ep, self.slots_per_rank)
+        self.n_migrations = int(state["n_migrations"])
+        self.migrated_bytes = int(state["migrated_bytes"])
+        self.migrated_slots = int(state["migrated_slots"])
+        self.cum_slot_load = np.asarray(state["cum_slot_load"], np.float64)
+        self._pending = None
+        self.predictor.load_state_dict(
+            {k[len("pred_"):]: v for k, v in state.items()
+             if k.startswith("pred_")})

@@ -1,0 +1,125 @@
+"""Live replica add/drop: ReplicaSet diff → physical-slot weight gather.
+
+Same mechanism as bijective placement migration
+(:mod:`repro.placement.migrate`): the expert weight arrays are stored in
+physical-slot order ``[S, ...]``, and a new set is applied by one gather
+along the slot axis — ``w_new[..., p, :] = w_old[..., gather_idx[p], :]``.
+The produced :class:`ReplicaMigrationPlan` is interface-compatible with
+:class:`~repro.placement.migrate.MigrationPlan` (``gather_idx`` /
+``is_noop`` / ``n_moved``), so ``placement.migrate.apply_to_params``
+applies it unchanged.
+
+Source selection per changed slot: prefer an old replica of the incoming
+expert that already lives on the *destination* slot's rank (an HBM-local
+copy, zero cross-rank bytes), else the old primary (a cross-rank slab
+transfer, charged ``bytes_per_expert``).  Retiring a replica is free —
+the slot merely stops being routable (its stale weights are unreachable:
+no ``rep_pos`` entry points at it).
+
+Consistency rule: a replica is routable only after its slab lands.  The
+plan carries the *pending* set; :class:`~repro.replication.manager.
+ReplicaManager` keeps serving the old set until ``commit(plan)`` — which
+the engine calls only after ``apply_to_params`` has produced the permuted
+weights — flips the routable table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.placement.migrate import MOE_WEIGHT_KEYS, jnp_take, moe_param_paths
+from repro.replication.replica_set import ReplicaSet
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaMigrationPlan:
+    gather_idx: np.ndarray     # [S] new physical slot -> old physical slot
+    changed_slots: np.ndarray  # slots whose resident expert changed
+    crossrank_slots: np.ndarray  # changed slots sourced from another rank
+    moved_bytes: int           # cross-rank weight bytes of the transition
+    new_set: "ReplicaSet"      # the pending (not yet routable) set
+
+    @property
+    def n_moved(self) -> int:
+        return int(self.changed_slots.shape[0])
+
+    @property
+    def is_noop(self) -> bool:
+        return self.n_moved == 0
+
+
+def diff(old: ReplicaSet, new: ReplicaSet,
+         bytes_per_expert: int = 0) -> ReplicaMigrationPlan:
+    """The slot gather (and cost) taking placed weights from old to new."""
+    assert old.num_experts == new.num_experts, (old, new)
+    assert old.n_ranks == new.n_ranks, (old.n_ranks, new.n_ranks)
+    assert old.slots_per_rank == new.slots_per_rank, \
+        (old.slots_per_rank, new.slots_per_rank)
+    s = old.n_slots
+    own_old, own_new = old.slot_owner, new.slot_owner
+    gather = np.arange(s, dtype=np.int64)
+    changed, cross = [], []
+    for p in range(s):
+        ex = own_new[p]
+        if ex == own_old[p]:
+            continue
+        if ex < 0:
+            # retired slot: content is unreachable, keep it in place
+            continue
+        changed.append(p)
+        srcs = old.rep_pos[ex, : old.n_rep[ex]]
+        same_rank = srcs[srcs // old.slots_per_rank
+                         == p // new.slots_per_rank]
+        if same_rank.shape[0]:
+            gather[p] = int(same_rank[0])          # HBM-local copy
+        else:
+            gather[p] = int(srcs[0])               # cross-rank transfer
+            cross.append(p)
+    changed = np.asarray(changed, np.int64)
+    cross = np.asarray(cross, np.int64)
+    return ReplicaMigrationPlan(
+        gather_idx=gather, changed_slots=changed, crossrank_slots=cross,
+        moved_bytes=int(cross.shape[0]) * bytes_per_expert, new_set=new)
+
+
+def expand_moe_params(params: Dict[str, Any], rset: ReplicaSet
+                      ) -> Dict[str, Any]:
+    """Lay logically-ordered ``[.., E, ..]`` expert weights out into the
+    set's physical ``[.., S, ..]`` slot order (empty spares zeroed).
+
+    The inverse of the identity assumption: a freshly initialised /
+    restored model stores one row per logical expert; a replica engine
+    stores one row per physical slot.  Routers stay logical and are not
+    touched.  Works on stacked ``[n_blocks, E, ...]`` scan weights and on
+    unstacked ``[E, ...]`` ones.
+    """
+    owner = rset.slot_owner
+    idx = np.where(owner >= 0, owner, 0).astype(np.int64)
+    empty = owner < 0
+    out = dict(params)
+    for group, lname in moe_param_paths(params):
+        grp = dict(out[group])
+        lp = dict(grp[lname])
+        moe = dict(lp["moe"])
+        for key in MOE_WEIGHT_KEYS:
+            w = moe[key]
+            axis = w.ndim - 3          # [.., E, a, b]: expert axis
+            assert w.shape[axis] == rset.num_experts, \
+                (key, w.shape, rset.num_experts)
+            w2 = jnp_take(w, idx, axis)
+            if empty.any():
+                mask_shape = [1] * w2.ndim
+                mask_shape[axis] = rset.n_slots
+                if isinstance(w2, np.ndarray):
+                    w2 = w2 * (~empty).reshape(mask_shape)
+                else:
+                    import jax.numpy as jnp
+                    w2 = w2 * jnp.asarray(
+                        (~empty).reshape(mask_shape), w2.dtype)
+            moe[key] = w2
+        lp["moe"] = moe
+        grp[lname] = lp
+        out[group] = grp
+    return out

@@ -29,6 +29,15 @@ next :class:`IterStats`, so the zero-overhead property of ReaLB vs. the
 migration cost of placement is directly measurable.  ``virtual_ep``
 provisions the ReaLB policy statistics over a virtual EP topology on a
 single device (see ``repro.core.ep_moe``).
+
+Redundant experts: a :class:`~repro.replication.ReplicaManager` rides the
+same loop, but its weight arrays hold ``S >= E`` physical slots (expand
+the logical params with ``repro.replication.expand_moe_params`` before
+construction) and its plans are *staged*: the engine gathers the slabs
+first and only then calls ``manager.commit(plan)``, so a replica becomes
+routable (visible to the traced dispatch table) strictly after its slab
+landed in ``self.params`` — the consistency rule that keeps a crashed
+apply from routing tokens into garbage weights.
 """
 from __future__ import annotations
 
@@ -64,6 +73,8 @@ class IterStats:
     drop_frac: float = 0.0       # capacity-dropped fraction of routed tokens
     migration_bytes: float = 0.0  # expert weights moved before this iter
     migration_s: float = 0.0     # virtual-time cost charged for the move
+    split_frac: float = 0.0      # routed fraction served by a non-primary
+    #                              replica (0 under a bijective table)
 
 
 def _bucket(n: int, lo: int = 8) -> int:
@@ -119,6 +130,22 @@ class Engine:
                 f"placement plans {placement.ep} ranks, virtual_ep={virtual_ep}"
         if virtual_ep is None and placement is not None and mesh is None:
             virtual_ep = placement.ep
+        if placement is not None and cfg.moe is not None:
+            # replica managers route over S >= E physical weight slots;
+            # refuse a params tree that was not laid out for the manager
+            # (forgotten expand_moe_params would silently misroute)
+            from repro.placement.migrate import moe_param_paths
+            tables = placement.device_tables()
+            want = int(tables[2].shape[0]) if len(tables) == 3 \
+                else cfg.moe.num_experts
+            paths = moe_param_paths(params)
+            if paths:
+                g0, l0 = paths[0]
+                got = params[g0][l0]["moe"]["w_gate"].shape[-3]
+                assert got == want, \
+                    (f"params hold {got} expert slots but the manager "
+                     f"routes over {want}; lay the weights out with "
+                     "repro.replication.expand_moe_params first")
         self._pending_migration = (0.0, 0.0)      # (bytes, seconds)
         self._place_cache = None                  # device copy of the table
         self._it = 0
@@ -172,14 +199,16 @@ class Engine:
         self._decode = decode
 
     def _place_args(self):
-        """The traced (e2r, local_slot) of the current plan (None = the
-        identity mapping, bitwise-identical to a placement-free engine).
-        Cached on device; invalidated when a migration changes the table."""
+        """The traced table of the current plan — (e2r, local_slot) for a
+        bijective manager, (rep_pos, n_rep, slot_owner) for a replica
+        manager, None = the identity mapping (bitwise-identical to a
+        placement-free engine).  Cached on device; invalidated when a
+        committed migration changes the routable table."""
         if self._placement is None:
             return None
         if self._place_cache is None:
-            e2r, lslot = self._placement.table.as_tuple()
-            self._place_cache = (jnp.asarray(e2r), jnp.asarray(lslot))
+            self._place_cache = tuple(
+                jnp.asarray(a) for a in self._placement.device_tables())
         return self._place_cache
 
     # -- live migration ------------------------------------------------------
@@ -193,7 +222,18 @@ class Engine:
         if plan is None:
             return
         from repro.placement import migrate
-        self.params = migrate.apply_to_params(self.params, plan)
+        try:
+            self.params = migrate.apply_to_params(self.params, plan)
+        except BaseException:
+            if hasattr(self._placement, "abort"):
+                # drop the staged plan so the old set stays routable and
+                # a later cadence point can replan, then surface the error
+                self._placement.abort()
+            raise
+        if hasattr(self._placement, "commit"):
+            # staged replica plans become routable only after the slab
+            # gather above produced the new weights (consistency rule)
+            self._placement.commit(plan)
         self._place_cache = None                  # table changed
         # charge the transfer to the virtual clock; under wall clocks
         # (no .advance) the move is real work already on the wall, so
@@ -262,11 +302,17 @@ class Engine:
             phase=phase, t_wall=self.clock(), batch_tokens=batch_tokens,
             vis_frac=vis_sum / max(load_sum, 1.0),
             drop_frac=float(aux["drop_frac"]) / self._n_moe,
-            migration_bytes=mig_bytes, migration_s=mig_s)
+            migration_bytes=mig_bytes, migration_s=mig_s,
+            split_frac=float(aux.get("split_frac", 0.0)) / self._n_moe)
         self.stats.append(stat)
         if self._placement is not None and "expert_stats" in aux:
             # [n_blocks, 2, E] per-MoE-layer expert loads -> predictor
             self._placement.observe(np.asarray(aux["expert_stats"]))
+            if hasattr(self._placement, "observe_slots") \
+                    and "slot_stats" in aux:
+                # [n_blocks, 2, S] post-split physical-slot loads ->
+                # replica-utilization accounting
+                self._placement.observe_slots(np.asarray(aux["slot_stats"]))
         if self.telemetry is not None:
             self.telemetry.record_iter(stat)
 
@@ -435,13 +481,14 @@ class Engine:
 
     # -- checkpointing --------------------------------------------------------
     def save_checkpoint(self, ckpt_dir: str, step: int, keep: int = 3) -> str:
-        """Persist params + AIMD state (+ the chosen placement plan and
-        predictor state) so a restored engine resumes with the same
-        placement instead of silently reverting to identity."""
+        """Persist params + AIMD state (+ the chosen placement plan /
+        replica set and predictor state, under the manager's own group) so
+        a restored engine resumes with the same expert layout instead of
+        silently reverting to identity."""
         from repro.checkpoint import ckpt
         state = {"serving": {"params": self.params, "m_state": self.m_state}}
         if self._placement is not None:
-            state["placement"] = self._placement.state_dict()
+            state[self._placement.ckpt_group] = self._placement.state_dict()
         return ckpt.save(ckpt_dir, step, state, keep=keep)
 
     def load_checkpoint(self, ckpt_dir: str,
@@ -450,31 +497,42 @@ class Engine:
         templates = {"serving": {"params": self.params,
                                  "m_state": self.m_state}}
         step, out = ckpt.restore(ckpt_dir, templates, step)
-        if self._placement is None:
-            # the saved params may be in a migrated (permuted) order; a
-            # placement-free engine would silently route the identity
-            # table through them — refuse instead of desynchronizing
+
+        def group_state(name):
             try:
-                ckpt.restore_group(ckpt_dir, "placement", step)
+                return ckpt.restore_group(ckpt_dir, name, step)
             except FileNotFoundError:
-                pass
-            else:
+                return None
+
+        # the saved params are laid out for the writer's manager kind: a
+        # bijective permutation ("placement") or a replica-slot order with
+        # S >= E rows ("replication").  Any mismatched reader — manager-
+        # free, or the other kind — would silently route its own table
+        # through foreign weights, so refuse instead of desynchronizing.
+        own = None if self._placement is None \
+            else self._placement.ckpt_group
+        for name, kind in (("placement", "a placement engine"),
+                           ("replication", "a replication engine")):
+            if name != own and group_state(name) is not None:
                 raise ValueError(
-                    f"checkpoint {ckpt_dir} step {step} was written by a "
-                    "placement engine (weights are in placed order); "
-                    "construct this Engine with the same PlacementManager "
-                    "to restore it")
+                    f"checkpoint {ckpt_dir} step {step} was written by "
+                    f"{kind} (weights are in its placed physical order); "
+                    "construct this Engine with the matching manager to "
+                    "restore it")
         self.params = out["serving"]["params"]
         self.m_state = out["serving"]["m_state"]
         if self._placement is not None:
-            # saved params are in the saved plan's placed order — restore
-            # the plan with them.  A checkpoint written by a placement-free
-            # engine has identity-ordered weights and no placement group:
-            # reset the manager to a fresh identity state instead.
-            try:
-                state = ckpt.restore_group(ckpt_dir, "placement", step)
-            except FileNotFoundError:
+            state = group_state(own)
+            if state is None:
+                # written by a manager-free engine: logical-order weights
+                # and no layout state to resume — reset to a fresh
+                # identity state (replica engines re-expand the logical
+                # rows into their physical slot layout)
                 self._placement.reset()
+                if own == "replication":
+                    from repro.replication import expand_moe_params
+                    self.params = expand_moe_params(self.params,
+                                                    self._placement.rset)
             else:
                 self._placement.load_state_dict(state)
             self._place_cache = None

@@ -113,6 +113,20 @@ class Telemetry:
             return 0.0
         return sum(1.0 for s in it if s.fp4_ranks > 0) / len(it)
 
+    def split_duty(self, phase: Optional[str] = None) -> float:
+        """Fraction of iterations on which a non-primary replica served
+        routed tokens (always 0 under a bijective table)."""
+        it = self._phase(phase)
+        if not it:
+            return 0.0
+        return sum(1.0 for s in it
+                   if getattr(s, "split_frac", 0.0) > 0) / len(it)
+
+    def split_summary(self, phase: Optional[str] = None) -> Dict[str, float]:
+        """Rolling-window token-split fraction percentiles."""
+        return summarize([getattr(s, "split_frac", 0.0)
+                          for s in self._phase(phase)])
+
     def ib_summary(self, phase: Optional[str] = None) -> Dict[str, float]:
         return summarize([s.ib_global for s in self._phase(phase)])
 
@@ -149,6 +163,8 @@ class Telemetry:
             "fp4_duty_prefill": self.fp4_duty("prefill"),
             "drop_frac": self.drop_summary(),
             "drop_frac_prefill": self.drop_summary("prefill"),
+            "split_duty": self.split_duty(),
+            "split_frac": self.split_summary(),
             "migration_bytes_total": self.migration_bytes_total,
             "migration_s_total": self.migration_s_total,
             "n_migrations": self.n_migrations,

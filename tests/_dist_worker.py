@@ -182,6 +182,131 @@ def check_placement_permuted_matches_local_under_ep():
                                        err_msg=mode)
 
 
+def check_virtual_ep_policy_parity():
+    """ROADMAP satellite: the single-device *virtual* EP topology must
+    produce the same policy statistics as the real EP mesh on the same
+    token stream — the virtual-ep serving experiments are only meaningful
+    if IB_d / LB gate / FP4 duty / AIMD updates agree with the hardware
+    topology they emulate.
+
+    Batch 3 is indivisible by the data axis, so the mesh run keeps one
+    replicated policy group ([1, 4] M-state) — exactly the virtual
+    topology's shape — and every scalar must match, not just the counts.
+    """
+    cfg, p, _, _ = _moe_setup()
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    x = jax.random.normal(ks[0], (3, 16, cfg.d_model)) * 0.5
+    mod = jax.random.bernoulli(ks[1], 0.6, (3, 16))
+    rcfg = ReaLBConfig(gate_gamma=8)      # open the gate: policy active
+    m_virt = jnp.zeros((1, 4))            # virtual 4-rank topology, M=0
+    y_v, m_v, aux_v = ep_moe.ep_moe_forward(p, x, cfg, rcfg, m_virt, mod,
+                                            mode="dispatch")
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    with use_mesh(mesh):
+        shape = ep_moe.moe_state_shape(mesh, 3)
+        assert shape == (1, 4), shape     # batch 3 -> replicated group
+        m = jnp.zeros(shape)
+        y_d, m_d, aux_d = jax.jit(
+            lambda p, x, m, mod: ep_moe.ep_moe_forward(
+                p, x, cfg, rcfg, m, mod, mode="dispatch"))(p, x, m, mod)
+    # routed counts are integers: exact equality across topologies
+    for k in ("load_d", "vis_d", "expert_load", "expert_vis",
+              "slot_load", "slot_vis"):
+        a = np.asarray(aux_v[k]).reshape(-1)
+        b = np.asarray(aux_d[k]).reshape(-1)
+        assert np.array_equal(a, b), (k, a, b)
+    # policy decisions and AIMD state evolve identically
+    for k in ("ib_global", "gate_open", "fp4_ranks", "drop_frac",
+              "split_frac"):
+        a, b = float(aux_v[k]), float(aux_d[k])
+        assert abs(a - b) < 1e-6, (k, a, b)
+    assert np.allclose(np.asarray(m_v), np.asarray(m_d)), (m_v, m_d)
+    # NOTE: outputs are *not* compared here — the policy decided FP4 for
+    # the same virtual ranks, but a single device applies compression to
+    # its whole (virtual) group while the mesh compresses per physical
+    # rank; numerical output parity (policy off) is pinned by
+    # ep_dispatch_matches_local.
+
+
+def check_replication_identity_bitwise_under_ep():
+    """Under a real EP mesh, the explicit identity replica set is
+    bitwise-equal to the default (placement=None) path."""
+    cfg, p, x, mod = _moe_setup()
+    rcfg = ReaLBConfig(gate_gamma=10 ** 9)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    ident = ep_moe.identity_replication(cfg.moe.num_experts, 4)
+    with use_mesh(mesh):
+        m = jnp.full(ep_moe.moe_state_shape(mesh, 4), 0.9)
+        for mode, xx, mm in (("dispatch", x, mod),
+                             ("broadcast", x[:, :1], mod[:, :1])):
+            y0, m0, _ = jax.jit(lambda p, x, m, mod: ep_moe.ep_moe_forward(
+                p, x, cfg, rcfg, m, mod, mode=mode))(p, xx, m, mm)
+            y1, m1, aux1 = jax.jit(
+                lambda p, x, m, mod, pl: ep_moe.ep_moe_forward(
+                    p, x, cfg, rcfg, m, mod, mode=mode, placement=pl))(
+                p, xx, m, mm, ident)
+            assert np.array_equal(np.asarray(y0), np.asarray(y1)), mode
+            assert np.array_equal(np.asarray(m0), np.asarray(m1)), mode
+            assert float(aux1["split_frac"]) == 0.0, mode
+
+
+def check_replication_split_under_ep():
+    """A replicated hot expert on a (2,4) mesh: outputs match the
+    local single-device reference, the EP ranks exchange split tokens,
+    and the post-split rank loads flatten the hot rank."""
+    from repro.replication import ReplicaSet, expand_moe_params
+
+    cfg, p, x, mod = _moe_setup()
+    e = cfg.moe.num_experts
+    p = dict(p, router=p["router"].at[:, 0].add(4.0))    # expert 0 hot
+    rcfg = ReaLBConfig(gate_gamma=10 ** 9)
+    # expert 0 replicated onto rank 2's spare slot (slots_per_rank=3)
+    rep_pos = np.zeros((e, 2), np.int32)
+    for ex in range(e):
+        rep_pos[ex] = (ex // 2) * 3 + (ex % 2)
+    rep_pos[0, 1] = 2 * 3 + 2
+    n_rep = np.ones(e, np.int32)
+    n_rep[0] = 2
+    rs = ReplicaSet(rep_pos, n_rep, 4, 3)
+    wrapped = {"blocks": {"l0": {"moe": p}}}
+    p_rep = dict(expand_moe_params(wrapped, rs)["blocks"]["l0"]["moe"],
+                 router=p["router"])
+    place = tuple(jnp.asarray(a) for a in rs.as_arrays())
+
+    y_ref, _, aux_ref = ep_moe.ep_moe_forward(
+        p, x, cfg, rcfg, jnp.full((1, 1), 0.9), mod, mode="dispatch")
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    with use_mesh(mesh):
+        m = jnp.full(ep_moe.moe_state_shape(mesh, 4), 0.9)
+        y, _, aux = jax.jit(
+            lambda p, x, m, mod, pl: ep_moe.ep_moe_forward(
+                p, x, cfg, rcfg, m, mod, mode="dispatch", placement=pl))(
+            p_rep, x, m, mod, place)
+    err = float(jnp.max(jnp.abs(y - y_ref)))
+    assert err < 5e-5, err
+    assert float(aux["split_frac"]) > 0.0
+    el = np.asarray(aux["expert_load"])
+    assert np.array_equal(el, np.asarray(aux_ref["expert_load"]))
+    sl = np.asarray(aux["slot_load"])
+    a, b = sl[rs.rep_pos[0, 0]], sl[rs.rep_pos[0, 1]]
+    assert a + b == el[0] and a > 0 and b > 0, (a, b, el[0])
+    # the hot rank sheds (about) half the hot expert's load to rank 2 —
+    # each of the 8 shard-local round-robin counters keeps its odd
+    # remainder on the primary, so allow one assignment per shard
+    load_d = np.asarray(aux["load_d"]).reshape(-1, 4).sum(0)
+    want = rs.rank_loads(el)
+    assert np.abs(load_d - want).max() <= 8.0, (load_d, want)
+    ident = ep_moe.identity_replication(e, 4)
+    with use_mesh(mesh):
+        m = jnp.full(ep_moe.moe_state_shape(mesh, 4), 0.9)
+        _, _, aux_i = jax.jit(
+            lambda p, x, m, mod, pl: ep_moe.ep_moe_forward(
+                p, x, cfg, rcfg, m, mod, mode="dispatch", placement=pl))(
+            p, x, m, mod, ident)
+    load_i = np.asarray(aux_i["load_d"]).reshape(-1, 4).sum(0)
+    assert load_d[0] < load_i[0], (load_d, load_i)   # hot rank shed load
+
+
 def check_model_train_step_under_mesh():
     """Tiny full model: distributed train step ≈ single-device step."""
     from repro.optim import adamw

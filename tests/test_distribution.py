@@ -18,6 +18,9 @@ CHECKS = [
     "chunk_padding_isolated_under_ep",
     "placement_identity_bitwise_under_ep",
     "placement_permuted_matches_local_under_ep",
+    "virtual_ep_policy_parity",
+    "replication_identity_bitwise_under_ep",
+    "replication_split_under_ep",
     "model_train_step_under_mesh",
     "decode_under_mesh",
     "elastic_reshard",

@@ -240,6 +240,35 @@ def test_manager_replans_on_skew_and_respects_cadence():
     assert mgr.maybe_replan(4) is None            # plan already optimal
 
 
+def test_manager_cost_gate_amortized_gain_guard():
+    """ROADMAP satellite: replans fire only when the cost model predicts
+    layer-time savings over the replan horizon above the migration cost."""
+    from benchmarks import costmodel as cm
+    cfg = reduced(get_config("olmoe-1b-7b"))
+    es = np.zeros((4, 2, 8))
+    es[:, 0] = np.array([10, 8, 1, 1, 1, 1, 1, 1.0])
+
+    def mgr_with(gate):
+        m = PlacementManager(cfg, PlacementConfig(
+            replan_every=2, warmup_iters=1, min_gain=0.0), 4,
+            cost_gate=gate)
+        m.observe(es)
+        return m
+
+    g = cm.KIMI_VL
+    # a generous horizon amortizes the move -> the replan fires
+    open_gate = cm.ReplanCostGate(g, 4, horizon_iters=10_000)
+    assert mgr_with(open_gate).maybe_replan(2) is not None
+    # a one-iteration horizon cannot pay for a full-stack migration
+    tight_gate = cm.ReplanCostGate(g, 4, horizon_iters=1,
+                                   tokens_per_iter=64.0)
+    m = mgr_with(tight_gate)
+    assert m.maybe_replan(2) is None
+    assert m.n_migrations == 0
+    # ... and without a gate the same skew migrates immediately
+    assert mgr_with(None).maybe_replan(2) is not None
+
+
 def test_manager_identity_planner_never_migrates():
     cfg = reduced(get_config("olmoe-1b-7b"))
     mgr = PlacementManager(cfg, PlacementConfig(planner="identity",
