@@ -96,6 +96,23 @@ def migration_time(n_moved: int, g: MoEGeometry) -> float:
     return migration_bytes(n_moved, g) / ICI_BW
 
 
+def migration_bytes_layers(n_moved_pairs: int, g: MoEGeometry,
+                           n_tables: int) -> float:
+    """Weight bytes of a *layer-diff* migration: ``n_moved_pairs``
+    (expert, layer) pairs changed owner, each dragging only its own
+    table-layer's share of the stack (``n_moe_layers / n_tables`` MoE
+    layers) instead of the whole stack."""
+    from repro.placement.migrate import expert_bytes_raw
+    per_table = g.n_moe_layers / max(n_tables, 1)
+    return n_moved_pairs * expert_bytes_raw(g.d_model, g.d_ff, BYTES_BF16,
+                                            per_table)
+
+
+def migration_time_layers(n_moved_pairs: int, g: MoEGeometry,
+                          n_tables: int) -> float:
+    return migration_bytes_layers(n_moved_pairs, g, n_tables) / ICI_BW
+
+
 @dataclasses.dataclass(frozen=True)
 class ReplanCostGate:
     """Amortized-gain guard coupling the replan cadence to the latency
@@ -130,6 +147,90 @@ class ReplanCostGate:
                   - self.layer_seconds(new_rank_loads))
         horizon = saving * self.g.n_moe_layers * max(self.horizon_iters, 1)
         return horizon > migration_time(n_moved, self.g)
+
+    def accept_layers(self, old_rank_loads: np.ndarray,
+                      new_rank_loads: np.ndarray, n_moved: int) -> bool:
+        """Per-layer variant: ``old/new_rank_loads`` are ``[L, ep]``
+        stacks and ``n_moved`` counts (expert, layer) pairs.  Savings sum
+        over the per-layer plans; the migration side charges only the
+        changed layers' slabs (``migration_time_layers``), so a plan that
+        touches 2 of 48 layers amortizes ~24× faster than a full-stack
+        one."""
+        if n_moved <= 0:
+            return True
+        old = np.atleast_2d(np.asarray(old_rank_loads, np.float64))
+        new = np.atleast_2d(np.asarray(new_rank_loads, np.float64))
+        n_tables = old.shape[0]
+        saving = sum(self.layer_seconds(old[l]) - self.layer_seconds(new[l])
+                     for l in range(n_tables))
+        # each table layer stands for n_moe_layers / n_tables model layers
+        scale = self.g.n_moe_layers / max(n_tables, 1)
+        horizon = saving * scale * max(self.horizon_iters, 1)
+        return horizon > migration_time_layers(n_moved, self.g, n_tables)
+
+
+class CalibratedReplanCostGate:
+    """A :class:`ReplanCostGate` whose ``tokens_per_iter`` is calibrated
+    from *measured* engine iterations instead of the static TPU-v5e
+    roofline constant (ROADMAP "Cost-gate calibration on hardware").
+
+    The engine feeds ``observe_iter(tokens, t_wall)`` from every recorded
+    :class:`~repro.serving.engine.IterStats`; the gate keeps a bounded
+    window and evaluates replan savings at the measured mean routed
+    tokens per iteration (``tokens_per_s`` is exposed for diagnostics).
+    Before the first observation it falls back to ``default_tokens``.
+    """
+
+    def __init__(self, g: MoEGeometry, ep: int, horizon_iters: int,
+                 default_tokens: float = 4096.0, window: int = 64):
+        self.g, self.ep = g, ep
+        self.horizon_iters = int(horizon_iters)
+        self.default_tokens = float(default_tokens)
+        self.window = int(window)
+        self._tokens: List[float] = []
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+        self._total_tokens = 0.0
+        self.n_obs = 0
+
+    def observe_iter(self, tokens: float, t_wall: float = 0.0) -> None:
+        self._tokens.append(float(tokens))
+        if len(self._tokens) > self.window:
+            self._tokens.pop(0)
+        if self._t_first is None:
+            self._t_first = float(t_wall)
+        self._t_last = float(t_wall)
+        self._total_tokens += float(tokens)
+        self.n_obs += 1
+
+    @property
+    def tokens_per_iter(self) -> float:
+        if not self._tokens:
+            return self.default_tokens
+        return float(np.mean(self._tokens))
+
+    @property
+    def tokens_per_s(self) -> float:
+        """Measured throughput over the observed span (diagnostics)."""
+        if self._t_first is None or self._t_last is None \
+                or self._t_last <= self._t_first:
+            return 0.0
+        return self._total_tokens / (self._t_last - self._t_first)
+
+    def _gate(self) -> ReplanCostGate:
+        return ReplanCostGate(self.g, self.ep, self.horizon_iters,
+                              tokens_per_iter=self.tokens_per_iter)
+
+    def layer_seconds(self, rank_loads: np.ndarray) -> float:
+        return self._gate().layer_seconds(rank_loads)
+
+    def accept(self, old_rank_loads, new_rank_loads, n_moved: int) -> bool:
+        return self._gate().accept(old_rank_loads, new_rank_loads, n_moved)
+
+    def accept_layers(self, old_rank_loads, new_rank_loads,
+                      n_moved: int) -> bool:
+        return self._gate().accept_layers(old_rank_loads, new_rank_loads,
+                                          n_moved)
 
 
 def nongemm_time(tokens_r: float, g: MoEGeometry) -> float:
@@ -401,3 +502,117 @@ def sim_realb_replication(cfg, g, rcfg, interval=50,
                      "m_mean": r_diag.get("m_mean", 1.0)}
 
     return _attach_migration(_sim(cfg, g, decide, name), mgr)
+
+
+# --------------------------------------------------------------------------
+# per-layer strategies: depth-varying skew, one table per layer
+# --------------------------------------------------------------------------
+def generate_layers(cfg: tr.TraceConfig, n_layers: int,
+                    seed_stride: int = 101):
+    """Zip ``n_layers`` traces with depth-varying skew (layer ``l``
+    re-seeded, so each layer's hot-expert set drifts independently —
+    the paper's Fig. 2 observation that vision-token concentration varies
+    sharply across depth).  Yields ``[L]`` tuples of TraceSteps."""
+    gens = [tr.generate(dataclasses.replace(cfg,
+                                            seed=cfg.seed + seed_stride * l))
+            for l in range(n_layers)]
+    yield from zip(*gens)
+
+
+def _sim_layers(cfg: tr.TraceConfig, g: MoEGeometry, n_layers: int,
+                mgr, rank_view, commit_staged: bool, name: str
+                ) -> SimResult:
+    """Shared harness of the per-layer strategy sims: feed the real
+    manager stacked ``[L, 2, E]`` stats, apply its (layer-diff) plans,
+    and score the depth-peak rank imbalance plus the mean layer time.
+    ``rank_view(mgr, l)`` exposes the current table of layer ``l`` as a
+    ``traces.rank_loads`` placement argument."""
+    ep = cfg.ep
+    times: List[float] = []
+    extra: Dict[str, List[float]] = {"ib_global": [], "fp4_ranks": [],
+                                     "m_d": []}
+    for steps in generate_layers(cfg, n_layers):
+        es = np.stack([np.stack([s.expert_load, s.expert_vis])
+                       for s in steps])                       # [L, 2, E]
+        mgr.observe(es)
+        it = steps[0].it
+        extra_s = 0.0
+        plan = mgr.maybe_replan(it) if it > 0 else None
+        if plan is not None:
+            if commit_staged:
+                mgr.commit(plan)       # sim: the slab copy is atomic
+            # amortized per model MoE layer; layer-diff plans already
+            # charge changed layers only
+            extra_s = (plan.moved_bytes / ICI_BW) / max(g.n_moe_layers, 1)
+        t_layers, ib_layers = [], []
+        for l, s in enumerate(steps):
+            load, _ = tr.rank_loads(s, rank_view(mgr, l), ep)
+            t, _ = moe_layer_time(load, np.zeros(ep), g, ep, s.tokens,
+                                  extra_s)
+            t_layers.append(t)
+            ib_layers.append(float(load.max() / max(load.mean(), 1e-9)))
+        times.append(float(np.mean(t_layers)))
+        # the acceptance metric: PEAK rank imbalance across depth — the
+        # straggler layer sets the iteration time
+        extra["ib_global"].append(float(np.max(ib_layers)))
+        extra["fp4_ranks"].append(0.0)
+        extra["m_d"].append(1.0)
+    return _attach_migration(SimResult(name, np.array(times), 0.0, extra),
+                             mgr)
+
+
+def sim_placement_layers(cfg, g, n_layers: int = 4, per_layer: bool = True,
+                         planner: str = "least_loaded", interval: int = 50,
+                         warmup: int = 8, min_gain: float = 0.02,
+                         name: Optional[str] = None) -> SimResult:
+    """Placement on a depth-varying trace: ``per_layer=True`` plans one
+    table per layer (layer-diff migration), ``False`` is the shared-table
+    baseline that balances the depth-summed skew no single layer has."""
+    from repro.configs.base import PlacementConfig
+    from repro.placement import PlacementManager
+
+    pcfg = PlacementConfig(planner=planner, replan_every=interval,
+                           warmup_iters=warmup, min_gain=min_gain,
+                           per_layer=per_layer)
+    bpe = int(migration_bytes_layers(1, g, n_layers)) if per_layer \
+        else int(migration_bytes(1, g))
+    mgr = PlacementManager.from_geometry(g.n_experts, pcfg, cfg.ep,
+                                         bytes_per_expert=bpe,
+                                         n_layers=n_layers)
+
+    def rank_view(m, l):
+        return m.tables[l if m.per_layer else 0].e2r
+
+    return _sim_layers(cfg, g, n_layers, mgr, rank_view,
+                       commit_staged=False,
+                       name=name or ("Placement/L" if per_layer
+                                     else "Placement(shared)"))
+
+
+def sim_replication_layers(cfg, g, n_layers: int = 4,
+                           per_layer: bool = True, interval: int = 50,
+                           warmup: int = 8, min_gain: float = 0.02,
+                           spare_per_rank: int = 1, max_replicas: int = 2,
+                           name: Optional[str] = None) -> SimResult:
+    """Redundant experts on a depth-varying trace, per-layer replica sets
+    vs one shared set (token split modeled as fractional ownership)."""
+    from repro.configs.base import ReplicationConfig
+    from repro.replication import ReplicaManager
+
+    rpcfg = ReplicationConfig(replan_every=interval, warmup_iters=warmup,
+                              min_gain=min_gain, per_layer=per_layer,
+                              spare_per_rank=spare_per_rank,
+                              max_replicas=max_replicas)
+    bpe = int(migration_bytes_layers(1, g, n_layers)) if per_layer \
+        else int(migration_bytes(1, g))
+    mgr = ReplicaManager.from_geometry(g.n_experts, rpcfg, cfg.ep,
+                                       bytes_per_expert=bpe,
+                                       n_layers=n_layers)
+
+    def rank_view(m, l):
+        return m.rsets[l if m.per_layer else 0].ownership_matrix()
+
+    return _sim_layers(cfg, g, n_layers, mgr, rank_view,
+                       commit_staged=True,
+                       name=name or ("Replicate/L" if per_layer
+                                     else "Replicate(shared)"))

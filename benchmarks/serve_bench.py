@@ -19,17 +19,18 @@ pin the exact request stream for policy A/Bs:
         --record /tmp/mmmu.jsonl
     python benchmarks/serve_bench.py --replay /tmp/mmmu.jsonl --policy off
 
-``--arm`` selects one of the six comparison arms of the paper's baseline
+``--arm`` selects one of the comparison arms of the paper's baseline
 axis (off / realb / placement / realb+placement / replicate /
-realb+replicate) and implies a virtual EP topology (``--virtual-ep``,
-default 4) so IB_d, FP4 duty, token-split duty and migration bytes are
-meaningful in a single-device virtual-time run; the plain ``--policy``
-flag keeps the original placement-free behavior.  ``--arm all`` runs
-every arm head-to-head on the *same* realized request stream in one
-deterministic invocation and prints a comparison table;
-``--json-out BENCH_serve.json`` writes the per-arm summaries (throughput,
-TTFT/TPOT percentiles, IB, migration bytes) as a machine-readable CI
-artifact.
+realb+replicate, plus the ``/L`` per-layer variants that plan one table
+per scanned MoE block with layer-diff migration) and implies a virtual
+EP topology (``--virtual-ep``, default 4) so IB_d, FP4 duty, token-split
+duty and migration bytes are meaningful in a single-device virtual-time
+run; the plain ``--policy`` flag keeps the original placement-free
+behavior.  ``--arm all`` runs every arm head-to-head on the *same*
+realized request stream in one deterministic invocation and prints a
+comparison table; ``--json-out BENCH_serve.json`` writes the per-arm
+summaries (throughput, TTFT/TPOT percentiles, IB, migration bytes —
+per-layer migration bytes included) as a machine-readable CI artifact.
 """
 from __future__ import annotations
 
@@ -61,14 +62,20 @@ POLICIES = {
 }
 
 # the serving arms of the load-balancing comparison:
-# (policy, expert-layout manager kind)
+# (policy, expert-layout manager kind, per-layer tables)
 ARMS = {
-    "off": ("off", None),
-    "realb": ("realb", None),
-    "placement": ("off", "placement"),
-    "realb+placement": ("realb", "placement"),
-    "replicate": ("off", "replication"),
-    "realb+replicate": ("realb", "replication"),
+    "off": ("off", None, False),
+    "realb": ("realb", None, False),
+    "placement": ("off", "placement", False),
+    "realb+placement": ("realb", "placement", False),
+    "replicate": ("off", "replication", False),
+    "realb+replicate": ("realb", "replication", False),
+    # per-layer variants: one table per scanned MoE block, layer-diff
+    # migration (changed layers only)
+    "placement/L": ("off", "placement", True),
+    "realb+placement/L": ("realb", "placement", True),
+    "replicate/L": ("off", "replication", True),
+    "realb+replicate/L": ("realb", "replication", True),
 }
 
 
@@ -88,15 +95,36 @@ def parse_args(argv=None):
                     choices=["identity", "least_loaded", "modality_aware"])
     ap.add_argument("--replan-every", type=int, default=32,
                     help="engine iterations between placement replans")
+    ap.add_argument("--per-layer", action="store_true",
+                    help="per-MoE-layer placement/replication tables "
+                         "(one table per scanned block, layer-diff "
+                         "migration); the /L arms imply this")
+    ap.add_argument("--decode-replan-every", type=int, default=0,
+                    help="decode iterations between decode-regime "
+                         "replans, planned from the predictor's decode "
+                         "window (0 = prefill cadence only)")
+    ap.add_argument("--decode-halflife", type=float, default=8.0,
+                    help="decode-window EWMA half-life in decode "
+                         "iterations (used when --decode-replan-every "
+                         "is set)")
     ap.add_argument("--spare-per-rank", type=int, default=1,
                     help="replica slots per rank beyond E // ranks "
                          "(replicate arms)")
     ap.add_argument("--max-replicas", type=int, default=2,
                     help="replica cap per logical expert (replicate arms)")
+    ap.add_argument("--replica-capacity-margin", type=float, default=0.0,
+                    help="replica-aware dispatch capacity: shrink "
+                         "capacity_factor to margin x the post-split "
+                         "predicted peak rank load at each committed "
+                         "replan (0 = static capacity_factor)")
     ap.add_argument("--cost-gate", action="store_true",
                     help="gate replans on the analytic cost model: fire "
                          "only when predicted layer-time savings over the "
                          "replan interval exceed the migration time")
+    ap.add_argument("--cost-gate-calibrated", action="store_true",
+                    help="like --cost-gate, but tokens/iter is calibrated "
+                         "from measured engine IterStats instead of the "
+                         "static roofline constant")
     ap.add_argument("--virtual-ep", type=int, default=None,
                     help="virtual EP topology for the policy statistics on "
                          "a single device (default: 4 when --arm is given, "
@@ -141,17 +169,21 @@ def build_stream(args, vocab_size: int, max_prompt: int
 
 
 def resolve_arm(args):
-    """Apply --arm to (policy, manager kind, virtual_ep) in place."""
+    """Apply --arm to (policy, manager kind, per-layer, virtual_ep) in
+    place; returns the manager kind."""
     kind = None
     if args.arm is not None and args.arm != "all":
-        args.policy, kind = ARMS[args.arm]
+        args.policy, kind, per_layer = ARMS[args.arm]
+        args.per_layer = args.per_layer or per_layer
         if args.virtual_ep is None:
             args.virtual_ep = 4
     return kind
 
 
 def make_cost_gate(args, cfg, ep: int):
-    """An analytic-cost-model replan gate for this model's MoE geometry."""
+    """An analytic-cost-model replan gate for this model's MoE geometry
+    (``--cost-gate-calibrated`` swaps the static tokens/iter constant for
+    a window of measured engine iterations)."""
     try:
         from benchmarks import costmodel as cm
     except ImportError:     # run as `python benchmarks/serve_bench.py`:
@@ -162,6 +194,10 @@ def make_cost_gate(args, cfg, ep: int):
     n_moe = max(sum(1 for f in cfg.ffn_kinds() if f == "moe"), 1)
     geom = cm.MoEGeometry(cfg.name, cfg.d_model, cfg.moe.d_ff,
                           cfg.moe.num_experts, cfg.moe.top_k, n_moe)
+    if args.cost_gate_calibrated:
+        return cm.CalibratedReplanCostGate(
+            geom, ep, horizon_iters=args.replan_every,
+            default_tokens=float(args.prefill_budget))
     return cm.ReplanCostGate(geom, ep, horizon_iters=args.replan_every,
                              tokens_per_iter=float(args.prefill_budget))
 
@@ -174,18 +210,27 @@ def serve(args, cfg, params, specs: List[RequestSpec]):
     manager = None
     vep = args.virtual_ep or 4
     gate = make_cost_gate(args, cfg, vep) \
-        if (args.cost_gate and kind is not None) else None
+        if ((args.cost_gate or args.cost_gate_calibrated)
+            and kind is not None) else None
+    decode_hl = args.decode_halflife if args.decode_replan_every else 0.0
     if kind == "placement":
         pcfg = PlacementConfig(planner=args.planner,
-                               replan_every=args.replan_every)
+                               replan_every=args.replan_every,
+                               per_layer=args.per_layer,
+                               decode_halflife=decode_hl,
+                               decode_replan_every=args.decode_replan_every)
         manager = PlacementManager(cfg, pcfg, ep=vep, cost_gate=gate)
     elif kind == "replication":
         rpcfg = ReplicationConfig(replan_every=args.replan_every,
                                   spare_per_rank=args.spare_per_rank,
-                                  max_replicas=args.max_replicas)
+                                  max_replicas=args.max_replicas,
+                                  per_layer=args.per_layer,
+                                  decode_halflife=decode_hl,
+                                  decode_replan_every=args.decode_replan_every)
         manager = ReplicaManager(cfg, rpcfg, ep=vep, cost_gate=gate)
         # lay the logical expert rows out into the replica slot space
-        params = expand_moe_params(params, manager.rset)
+        # (each scanned block by its own layer's set when per-layer)
+        params = expand_moe_params(params, manager.rsets)
     telemetry = Telemetry()
     if args.wall_time:
         # zero the wall clock at run start so it is comparable with the
@@ -199,7 +244,9 @@ def serve(args, cfg, params, specs: List[RequestSpec]):
                  max_len=args.max_len, prefill_budget=args.prefill_budget,
                  text_reserve=args.text_reserve, clock=clock,
                  telemetry=telemetry, cost_model=cost,
-                 placement=manager, virtual_ep=args.virtual_ep)
+                 placement=manager, virtual_ep=args.virtual_ep,
+                 capacity_margin=(args.replica_capacity_margin or None)
+                 if kind == "replication" else None)
 
     closed = None
     prof = profile(args.workload)
@@ -261,6 +308,14 @@ def summarize_run(telemetry: Telemetry, eng: Engine, wall: float) -> Dict:
     s["generated_tokens"] = out_toks
     s["throughput_tok_per_s"] = (in_toks + out_toks) / max(wall, 1e-9)
     s["wall_s"] = wall
+    mgr = eng._placement
+    if mgr is not None:
+        # per-layer migration traffic: [n_tables] cumulative bytes, so
+        # the CI perf trajectory captures WHERE the migration cost lands
+        # (changed layers only under layer-diff plans)
+        s["n_tables"] = int(getattr(mgr, "n_tables", 1))
+        s["migration_bytes_per_layer"] = [
+            float(b) for b in getattr(mgr, "migrated_bytes_per_layer", [])]
     return s
 
 
@@ -276,7 +331,12 @@ def write_json_out(args, results: Dict[str, Dict]) -> None:
                      virtual_ep=args.virtual_ep or 4,
                      spare_per_rank=args.spare_per_rank,
                      max_replicas=args.max_replicas,
-                     cost_gate=args.cost_gate, replay=args.replay),
+                     per_layer=args.per_layer,
+                     decode_replan_every=args.decode_replan_every,
+                     replica_capacity_margin=args.replica_capacity_margin,
+                     cost_gate=args.cost_gate,
+                     cost_gate_calibrated=args.cost_gate_calibrated,
+                     replay=args.replay),
         "arms": results,
     }
     with open(args.json_out, "w") as f:
@@ -339,7 +399,10 @@ def main(argv=None) -> int:
         realized = specs
         for name in ARMS:
             sub = argparse.Namespace(**vars(args))
-            sub.arm, sub.record = name, None
+            # per-layer is the arm's own property here: a sticky
+            # --per-layer would silently turn the shared-table baseline
+            # arms into mislabeled duplicates of the /L arms
+            sub.arm, sub.record, sub.per_layer = name, None, False
             telemetry, eng, realized, wall = serve(sub, cfg, params, specs)
             results[name] = summarize_run(telemetry, eng, wall)
             print(f"  {name}: {results[name]['n_requests_served']} served, "

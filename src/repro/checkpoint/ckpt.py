@@ -122,6 +122,19 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return int(json.loads((steps[-1] / "meta.json").read_text())["step"])
 
 
+def has_group(ckpt_dir: str, group: str,
+              step: Optional[int] = None) -> bool:
+    """Whether a saved step carries the named state group — the cheap
+    probe the serving engine uses to detect which manager kind (and, via
+    the group's own ``n_tables`` entry, which per-layer/shared layout)
+    wrote a checkpoint before committing to restore it."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        return False
+    return (pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+            / f"{group}.npz").exists()
+
+
 def restore_group(ckpt_dir: str, group: str,
                   step: Optional[int] = None) -> Dict[str, np.ndarray]:
     """Template-free restore of one flat group (``path -> array``).
@@ -131,9 +144,12 @@ def restore_group(ckpt_dir: str, group: str,
     (``group="placement"``) or replica set (``group="replication"``) plus
     predictor EWMA, which must survive restarts so a restored engine
     resumes with the same expert→slot layout its saved (physically
-    permuted / replica-expanded) weights are in.  The engine also probes
-    these groups to *refuse* a checkpoint written for a different manager
-    kind instead of desynchronizing table and weights.
+    permuted / replica-expanded) weights are in.  Placement groups are
+    layout-versioned by their ``n_tables`` entry (1 = shared table,
+    ``n_blocks`` = per-layer): the manager's ``load_state_dict`` refuses
+    a per-layer↔shared mismatch rather than desynchronizing table and
+    weights.  The engine also probes these groups (:func:`has_group`) to
+    *refuse* a checkpoint written for a different manager kind.
     """
     step = latest_step(ckpt_dir) if step is None else step
     if step is None:

@@ -133,6 +133,27 @@ class ModelConfig:
                 kinds.append("dense")
         return tuple(kinds)
 
+    @property
+    def scan_period(self) -> int:
+        """Layers per scanned block of the decoder stack (the repeating
+        unit of the ``lax.scan`` block layout) — the single source both
+        ``repro.models.transformer.block_structure`` and the host-side
+        planners derive block counts from."""
+        return {"jamba": 8, "cross5": 5}.get(self.layer_pattern, 1)
+
+    def moe_block_structure(self) -> Tuple[int, int]:
+        """(n_scan_blocks, n_moe_layers_per_block) of the scanned decoder
+        stack — the granularity of per-layer placement/replication tables
+        (one table per scan block; the stacked ``[n_blocks, ...]`` tables
+        ride the layer scan alongside the block params).  Matches
+        ``repro.models.transformer.block_structure`` without importing the
+        model stack, so host-side planners stay jax-free."""
+        period = self.scan_period
+        rest = self.ffn_kinds()[self.n_dense_layers:]
+        assert len(rest) % period == 0, (len(rest), period)
+        return len(rest) // period, sum(1 for f in rest[:period]
+                                        if f == "moe")
+
     # parameter counting ------------------------------------------------
     def param_count(self) -> int:
         """Total parameters (embedding + decoder [+ encoder])."""
@@ -258,6 +279,13 @@ class PlacementConfig:
     max_swaps: int = 64            # modality_aware: refinement swap budget
     migration_bw: float = 50e9     # bytes/s charged for moved expert slabs
     #                                in virtual-time serving runs (ICI-class)
+    per_layer: bool = False        # one table per scanned MoE block instead
+    #                                of one shared table; migration becomes
+    #                                a layer-diff (changed layers only)
+    decode_halflife: float = 0.0   # decode-window EWMA half-life in decode
+    #                                iterations (0 = single shared window)
+    decode_replan_every: int = 0   # decode iterations between decode-regime
+    #                                replans (0 = prefill cadence only)
 
 
 @dataclass(frozen=True)
@@ -284,6 +312,12 @@ class ReplicationConfig:
     min_gain: float = 0.02         # skip re-replication below this predicted
     #                                relative reduction of the max rank load
     migration_bw: float = 50e9     # bytes/s charged for copied replica slabs
+    per_layer: bool = False        # one replica set per scanned MoE block;
+    #                                replica adds/drops diff per layer
+    decode_halflife: float = 0.0   # decode-window EWMA half-life in decode
+    #                                iterations (0 = single shared window)
+    decode_replan_every: int = 0   # decode iterations between decode-regime
+    #                                replans (0 = prefill cadence only)
 
 
 @dataclass(frozen=True)

@@ -65,6 +65,17 @@ LB gate, IB_d, and therefore the FP4 decision and the AIMD update react
 to the balanced physical topology, not the logical one.  With the
 identity set (one replica per expert, ``S == E``) every intermediate
 equals the bijective-placement path bitwise.
+
+Per-layer tables
+----------------
+This layer always consumes ONE table — the table of the layer being
+computed.  Per-layer placement/replication (multimodal routing skew is
+per-layer; paper Fig. 2) is realized one level up: the transformer stacks
+the tables along a leading ``[n_blocks]`` axis and threads the slice
+through its ``lax.scan`` xs alongside the block params (see
+``repro.models.transformer.split_placement``), so each scanned block
+routes through its own table while this module stays table-shape
+agnostic.
 """
 from __future__ import annotations
 

@@ -16,6 +16,12 @@ Three entry points (all pure):
 
 The AIMD ``m_state`` of ReaLB threads through the layer scan (each MoE
 layer applies one synchronous control update) and across serve steps.
+
+Expert placement/replication tables enter here too: a *shared* table is
+closed over by the scan body (every block routes identically), while
+*per-layer* tables — stacked along a leading ``[n_blocks]`` axis — ride
+the scan ``xs`` alongside the block params, so each block consumes its
+own slice (see :func:`split_placement`).
 """
 from __future__ import annotations
 
@@ -54,7 +60,7 @@ def block_structure(cfg: ModelConfig) -> Tuple[Tuple[Tuple[str, str], ...],
              for m, f in zip(mixes, ffns)]
     n_prefix = cfg.n_dense_layers
     rest = kinds[n_prefix:]
-    period = {"jamba": 8, "cross5": 5}.get(cfg.layer_pattern, 1)
+    period = cfg.scan_period
     assert len(rest) % period == 0, (len(rest), period)
     layout = tuple(rest[:period])
     for i in range(0, len(rest), period):
@@ -229,11 +235,40 @@ def _pad_kv(arr: jax.Array, cache_len: int) -> jax.Array:
 def n_physical_slots(cfg: ModelConfig, placement=None) -> int:
     """Physical expert-slot count S of the MoE weight arrays: the logical
     expert count for bijective tables, the replica-slot count (>= E) when
-    a :class:`~repro.core.ep_moe.Replication` set is threaded through."""
+    a :class:`~repro.core.ep_moe.Replication` set is threaded through.
+    Per-layer (stacked ``[n_blocks, ...]``) tables share S across layers,
+    so the trailing axis is authoritative either way."""
     n_e = cfg.moe.num_experts if cfg.moe is not None else 1
     if placement is not None and len(tuple(placement)) == 3:
-        return int(tuple(placement)[2].shape[0])
+        return int(tuple(placement)[2].shape[-1])
     return n_e
+
+
+def split_placement(placement, n_blocks: int):
+    """(shared, stacked) view of a placement/replication argument.
+
+    A *shared* table — ``(e2r [E], local_slot [E])`` or ``(rep_pos
+    [E, R], n_rep [E], slot_owner [S])`` — serves every scanned block and
+    is closed over by the scan body (the PR 3 path, and the ``n_blocks=1``
+    degenerate case of per-layer planning).  A *per-layer* table carries a
+    leading ``[n_blocks]`` axis on every entry and is threaded through the
+    scan ``xs`` alongside the block params, so each block consumes its own
+    slice — ``repro.core.ep_moe`` sees per-layer and shared tables
+    identically.  Exactly one of the returned values is non-None (both
+    None when ``placement`` is None)."""
+    if placement is None:
+        return None, None
+    entries = tuple(placement)
+    base_ndim = 1 if len(entries) == 2 else 2   # e2r [E] / rep_pos [E, R]
+    if entries[0].ndim == base_ndim:
+        return entries, None
+    assert entries[0].ndim == base_ndim + 1, \
+        f"placement entry ndim {entries[0].ndim}, want {base_ndim} " \
+        f"(shared) or {base_ndim + 1} (per-layer)"
+    for a in entries:
+        assert int(a.shape[0]) == n_blocks, \
+            (tuple(int(s) for s in a.shape), n_blocks)
+    return None, entries
 
 
 def apply_layer(lp: Tree, x: jax.Array, cfg: ModelConfig, rcfg: ReaLBConfig,
@@ -413,6 +448,7 @@ def _run_stack(params, cfg, rcfg, x, *, mode, positions, pos, memory,
     layout, n_blocks, n_prefix = block_structure(cfg)
     n_e = cfg.moe.num_experts if cfg.moe is not None else 1
     n_slot = n_physical_slots(cfg, placement)
+    place_shared, place_stacked = split_placement(placement, n_blocks)
     new_cache: Dict[str, Any] = {}
     aux_acc = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
     with_cache = mode in ("prefill", "decode", "chunk")
@@ -435,7 +471,9 @@ def _run_stack(params, cfg, rcfg, x, *, mode, positions, pos, memory,
 
     def body(carry, xs):
         h, m = carry
-        bp, cache_in = xs
+        bp, cache_in, place_b = xs
+        if place_b is None:      # shared table (or none): same every block
+            place_b = place_shared
         block_cache = {}
         aux_b = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
         stats_b = jnp.zeros((2,) + m.shape, jnp.float32)
@@ -448,7 +486,7 @@ def _run_stack(params, cfg, rcfg, x, *, mode, positions, pos, memory,
                 positions=positions, pos=pos, memory=memory, cache_in=ci,
                 m_state=m, modality=modality, cache_len=cache_len,
                 fsdp=fsdp, chunk_len=chunk_len, valid=valid,
-                placement=placement)
+                placement=place_b)
             if with_cache:
                 block_cache[f"layer{i}"] = co
             aux_b = {k: aux_b[k] + aux[k] for k in AUX_KEYS}
@@ -469,7 +507,8 @@ def _run_stack(params, cfg, rcfg, x, *, mode, positions, pos, memory,
             body, policy=jax.checkpoint_policies.save_only_these_names(
                 "attn_out"))
 
-    xs = (params["blocks"], cache["blocks"] if with_cache and cache else None)
+    xs = (params["blocks"], cache["blocks"] if with_cache and cache else None,
+          place_stacked)
     (x, m_state), ys = jax.lax.scan(body, (x, m_state), xs)
     if with_cache:
         (new_cache["blocks"], aux_blocks, stats_blocks, estats_blocks,

@@ -10,7 +10,8 @@ compression absorbs the bursts no plan can anticipate.  See
 ``repro.serving.engine`` for the serving-side loop.
 """
 from repro.placement.manager import PlacementManager
-from repro.placement.migrate import (MigrationPlan, apply_to_params, diff,
+from repro.placement.migrate import (LayerMigrationPlan, MigrationPlan,
+                                     apply_to_params, diff, diff_layers,
                                      expert_bytes, moe_param_paths)
 from repro.placement.planner import (PLANNERS, plan_identity,
                                      plan_least_loaded, plan_modality_aware,
@@ -19,7 +20,8 @@ from repro.placement.predictor import EWMAPredictor
 from repro.placement.table import PlacementTable
 
 __all__ = [
-    "PlacementManager", "MigrationPlan", "apply_to_params", "diff",
+    "PlacementManager", "MigrationPlan", "LayerMigrationPlan",
+    "apply_to_params", "diff", "diff_layers",
     "expert_bytes", "moe_param_paths", "PLANNERS", "plan_identity",
     "plan_least_loaded", "plan_modality_aware", "plan_placement",
     "EWMAPredictor", "PlacementTable",

@@ -1,17 +1,32 @@
 """PlacementManager: the serving-side control loop of the subsystem.
 
-Owns the current :class:`PlacementTable`, the EWMA predictor and the
-replan cadence.  The engine feeds it per-iteration expert stats
-(`observe`), asks it every iteration whether a replan is due
-(`maybe_replan` → a :class:`MigrationPlan` or None) and applies the
-returned weight permutation itself (the manager never touches device
-arrays).  Cumulative migration accounting lives here so telemetry and
-benchmarks can report the placement-vs-ReaLB overhead trade-off
-directly.
+Owns the current placement tables, the EWMA predictor and the replan
+cadence.  The engine feeds it per-iteration expert stats (`observe`),
+asks it every iteration whether a replan is due (`maybe_replan` → a
+migration plan or None) and applies the returned weight permutation
+itself (the manager never touches device arrays).  Cumulative migration
+accounting lives here so telemetry and benchmarks can report the
+placement-vs-ReaLB overhead trade-off directly.
+
+Per-layer tables (``PlacementConfig.per_layer``): one table per scanned
+MoE block instead of one shared table.  The predictor's per-layer state
+stops being summed away — each layer is planned independently from its
+own EWMA row (MoE-GPS: prediction granularity decides the gains) — and
+migration becomes a *layer-diff*: only layers whose plan changed move
+weight slabs (HarMoEny-style layer-wise rebalancing), so migration
+traffic scales with the number of changed layers rather than
+``n_layers×``.  ``device_tables`` then returns stacked ``[L, E]`` arrays
+that the transformer threads through its layer scan.  With ``n_tables ==
+1`` everything degenerates to the shared-table behavior bitwise.
+
+Decode-regime replanning: with ``decode_halflife`` the predictor keeps a
+separate decode window, and ``decode_replan_every`` arms an additional
+cadence counted in *decode* iterations that plans from that window — so
+decode-regime drift is not drowned by prefill-dominated statistics.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Union
 
 import numpy as np
 
@@ -21,37 +36,175 @@ from repro.placement.planner import plan_placement
 from repro.placement.predictor import EWMAPredictor
 from repro.placement.table import PlacementTable
 
+Plan = Union[migrate.MigrationPlan, migrate.LayerMigrationPlan]
 
-class PlacementManager:
+
+class ReplanDiscipline:
+    """Replan cadence + decode-window + cost-gate discipline shared by
+    :class:`PlacementManager` and
+    :class:`~repro.replication.manager.ReplicaManager` — their configs
+    carry the same ``enabled`` / ``replan_every`` / ``warmup_iters`` /
+    ``decode_replan_every`` fields.  Hosts the manager-agnostic half of
+    ``maybe_replan`` so the two control loops cannot drift apart."""
+
+    # filled in by the concrete manager's _setup
+    predictor: EWMAPredictor
+    cost_gate = None
+    last_replan_iter = -1
+    _decode_since_replan = 0
+
+    def _discipline_cfg(self):
+        """The PlacementConfig / ReplicationConfig of the manager."""
+        raise NotImplementedError
+
+    def _replan_blocked(self) -> bool:
+        """Manager-specific extra guard (identity planner, staged plan)."""
+        return False
+
+    def _cadence(self, it: int) -> Optional[str]:
+        """The prediction regime a replan at ``it`` should plan from, or
+        None when no cadence is due."""
+        p = self._discipline_cfg()
+        if not p.enabled or self._replan_blocked() \
+                or self.predictor.n_obs < p.warmup_iters \
+                or it == self.last_replan_iter:
+            return None
+        if p.replan_every > 0 and it % p.replan_every == 0:
+            return "mixed"
+        if (p.decode_replan_every > 0
+                and self._decode_since_replan >= p.decode_replan_every
+                and self.predictor.n_obs_decode > 0):
+            # the decode cadence point fires exactly once: reset the
+            # counter even when the attempt is later rejected (min_gain /
+            # noop / cost gate), so a rejected plan does not re-run the
+            # full planner on every subsequent iteration
+            self._decode_since_replan = 0
+            return "decode"
+        return None
+
+    def _gate_accept(self, old_loads: np.ndarray, new_loads: np.ndarray,
+                     n_moved: int) -> bool:
+        """old/new_loads: [ep] for shared, [L, ep] stacks for per-layer."""
+        if self.cost_gate is None:
+            return True
+        if old_loads.ndim == 2:
+            if hasattr(self.cost_gate, "accept_layers"):
+                return self.cost_gate.accept_layers(old_loads, new_loads,
+                                                    n_moved)
+            old_loads, new_loads = old_loads.sum(0), new_loads.sum(0)
+        return self.cost_gate.accept(old_loads, new_loads, n_moved)
+
+    # -- per-layer replan loop (hooks below are manager-specific) ---------
+    def _layer_states(self) -> list:
+        """Current per-layer tables / replica sets."""
+        raise NotImplementedError
+
+    def _plan_one_layer(self, load: np.ndarray, vis: np.ndarray):
+        """One layer's planner call on its own [E] load row."""
+        raise NotImplementedError
+
+    def _diff_layer_states(self, old_states: list, new_states: list):
+        """The layer-diff plan between two per-layer state stacks."""
+        raise NotImplementedError
+
+    def _layer_gate_moved(self, plan) -> int:
+        """The move count the cost gate prices (cross-rank for replicas)."""
+        return plan.n_moved
+
+    def _accept_layer_plan(self, plan, new_states: list):
+        """Adopt (placement) or stage (replication) the accepted plan."""
+        raise NotImplementedError
+
+    def _replan_layers(self, it: int, regime: str):
+        """Plan each layer independently from its own EWMA row; layers
+        below the churn guard keep their current state, so the diff (and
+        the migration traffic) covers changed layers only."""
+        pred = self.predictor.predict_layers(regime)
+        if pred is None:
+            return None
+        loads, viss = pred
+        states = self._layer_states()
+        if loads.sum() <= 0 or loads.shape[0] != len(states):
+            return None
+        p = self._discipline_cfg()
+        new_states = list(states)
+        for l, state in enumerate(states):
+            load_l, vis_l = loads[l], viss[l]
+            if load_l.sum() <= 0:
+                continue
+            new = self._plan_one_layer(load_l, vis_l)
+            old_max = state.rank_loads(load_l).max()
+            new_max = new.rank_loads(load_l).max()
+            # per-layer churn guard: strictly positive gain required
+            # (a zero-gain re-permutation of one layer is pure migration
+            # churn the layer-diff would otherwise ship)
+            if old_max <= 0 or (old_max - new_max) / old_max <= p.min_gain:
+                continue
+            new_states[l] = new
+        plan = self._diff_layer_states(states, new_states)
+        if plan.is_noop:
+            return None
+        old_rl = np.stack([s.rank_loads(loads[l])
+                           for l, s in enumerate(states)])
+        new_rl = np.stack([s.rank_loads(loads[l])
+                           for l, s in enumerate(new_states)])
+        if not self._gate_accept(old_rl, new_rl,
+                                 self._layer_gate_moved(plan)):
+            return None
+        self.last_replan_iter = it
+        return self._accept_layer_plan(plan, new_states)
+
+
+class PlacementManager(ReplanDiscipline):
     ckpt_group = "placement"       # engine checkpoint group name
 
     def __init__(self, cfg: ModelConfig, pcfg: PlacementConfig, ep: int,
                  cost_gate=None):
         assert cfg.moe is not None, "placement requires an MoE model"
-        n_moe = sum(1 for f in cfg.ffn_kinds() if f == "moe")
-        self._setup(cfg.moe.num_experts, pcfg, ep,
-                    migrate.expert_bytes(cfg, max(n_moe, 1)), cost_gate)
+        n_blocks, n_moe_per_block = cfg.moe_block_structure()
+        n_moe = n_blocks * n_moe_per_block
+        if pcfg.per_layer:
+            # one table per scanned block; a moved expert drags only that
+            # block's slice of its weights
+            n_tables = n_blocks
+            bpe = migrate.expert_bytes(cfg, max(n_moe_per_block, 1))
+        else:
+            n_tables = 1
+            bpe = migrate.expert_bytes(cfg, max(n_moe, 1))
+        self._setup(cfg.moe.num_experts, pcfg, ep, bpe, cost_gate,
+                    n_tables=n_tables)
         self.cfg = cfg
 
     @classmethod
     def from_geometry(cls, num_experts: int, pcfg: PlacementConfig,
                       ep: int, bytes_per_expert: int = 0,
-                      cost_gate=None) -> "PlacementManager":
-        """Model-config-free construction (cost-model simulators)."""
+                      cost_gate=None, n_layers: int = 1
+                      ) -> "PlacementManager":
+        """Model-config-free construction (cost-model simulators).
+
+        ``bytes_per_expert`` is per-table granularity: the whole stack for
+        a shared manager, one scanned block for a per-layer one."""
         self = cls.__new__(cls)
-        self._setup(num_experts, pcfg, ep, bytes_per_expert, cost_gate)
+        self._setup(num_experts, pcfg, ep, bytes_per_expert, cost_gate,
+                    n_tables=n_layers if pcfg.per_layer else 1)
         self.cfg = None
         return self
 
     def _setup(self, num_experts: int, pcfg: PlacementConfig, ep: int,
-               bytes_per_expert: int, cost_gate=None):
+               bytes_per_expert: int, cost_gate=None, n_tables: int = 1):
         assert num_experts % ep == 0, (num_experts, ep)
+        assert n_tables >= 1, n_tables
         self.pcfg, self.ep = pcfg, ep
-        self.table = PlacementTable.identity(num_experts, ep)
-        self.predictor = EWMAPredictor(num_experts, alpha=pcfg.ewma_alpha)
+        self.n_tables = n_tables
+        self.tables: List[PlacementTable] = [
+            PlacementTable.identity(num_experts, ep)
+            for _ in range(n_tables)]
+        self.predictor = EWMAPredictor(num_experts, alpha=pcfg.ewma_alpha,
+                                       decode_halflife=pcfg.decode_halflife)
         self.bytes_per_expert = bytes_per_expert
         # optional amortized-gain guard: an object with
-        # accept(old_rank_loads, new_rank_loads, n_moved) -> bool, built
+        # accept(old_rank_loads, new_rank_loads, n_moved) -> bool (and
+        # accept_layers([L, ep] stacks) for per-layer managers), built
         # from the analytic latency model (benchmarks.costmodel.
         # ReplanCostGate) — a replan then fires only when the predicted
         # layer-time savings over its horizon exceed the migration cost
@@ -60,40 +213,88 @@ class PlacementManager:
         self.n_migrations = 0
         self.migrated_bytes = 0
         self.migrated_experts = 0
+        self.migrated_bytes_per_layer = np.zeros(n_tables, np.int64)
         self.last_replan_iter = -1
+        self._decode_since_replan = 0
+
+    @property
+    def per_layer(self) -> bool:
+        return self.n_tables > 1
+
+    @property
+    def table(self) -> PlacementTable:
+        """The shared table (first table of a per-layer manager)."""
+        return self.tables[0]
+
+    @table.setter
+    def table(self, t: PlacementTable) -> None:
+        self.tables[0] = t
+
+    @property
+    def num_experts(self) -> int:
+        return self.tables[0].num_experts
 
     def reset(self) -> None:
         """Back to a fresh identity state (e.g. restoring a checkpoint
         written by a placement-free engine: weights are identity-ordered
         and there is no plan/predictor state to resume)."""
-        self._setup(self.table.num_experts, self.pcfg, self.ep,
-                    self.bytes_per_expert, self.cost_gate)
+        self._setup(self.num_experts, self.pcfg, self.ep,
+                    self.bytes_per_expert, self.cost_gate,
+                    n_tables=self.n_tables)
 
     def device_tables(self):
-        """(e2r, local_slot) for the traced MoE layer."""
-        return self.table.as_tuple()
+        """(e2r, local_slot) for the traced MoE layer — ``[E]`` arrays for
+        a shared table, stacked ``[L, E]`` for per-layer tables (threaded
+        through the transformer's layer scan)."""
+        if not self.per_layer:
+            return self.tables[0].as_tuple()
+        return (np.stack([t.e2r for t in self.tables]),
+                np.stack([t.local_slot for t in self.tables]))
 
     # -- engine feeds ------------------------------------------------------
-    def observe(self, expert_stats: np.ndarray) -> None:
+    def observe(self, expert_stats: np.ndarray,
+                decode: bool = False) -> None:
         """expert_stats [n_blocks, 2, E]: per-MoE-layer (load, vis) counts
         of one engine iteration (the transformer's ``aux["expert_stats"]``).
-        """
+        ``decode`` routes the observation into the decode window when one
+        is configured."""
         es = np.asarray(expert_stats, np.float64)
-        self.predictor.observe(es[:, 0, :], es[:, 1, :])
+        self.predictor.observe(es[:, 0, :], es[:, 1, :], decode=decode)
+        if decode:
+            self._decode_since_replan += 1
 
-    def maybe_replan(self, it: int) -> Optional[migrate.MigrationPlan]:
+    # -- replanning --------------------------------------------------------
+    def _discipline_cfg(self) -> PlacementConfig:
+        return self.pcfg
+
+    def _replan_blocked(self) -> bool:
+        return self.pcfg.planner == "identity"
+
+    def _book(self, plan: Plan) -> Plan:
+        self.n_migrations += 1
+        self.migrated_bytes += plan.moved_bytes
+        self.migrated_experts += plan.n_moved
+        if isinstance(plan, migrate.LayerMigrationPlan):
+            self.migrated_bytes_per_layer += \
+                plan.moved_per_layer * self.bytes_per_expert
+        else:
+            self.migrated_bytes_per_layer[0] += plan.moved_bytes
+        self._decode_since_replan = 0
+        return plan
+
+    def maybe_replan(self, it: int) -> Optional[Plan]:
         """Return the weight permutation to apply at iteration ``it``, or
-        None.  Updates the current table and the migration accounting when
-        a plan is returned."""
-        p = self.pcfg
-        if (not p.enabled or p.planner == "identity"
-                or self.predictor.n_obs < p.warmup_iters
-                or p.replan_every <= 0 or it % p.replan_every != 0
-                or it == self.last_replan_iter):
+        None.  Updates the current table(s) and the migration accounting
+        when a plan is returned."""
+        regime = self._cadence(it)
+        if regime is None:
             return None
-        load, vis = self.predictor.predict()
+        if self.per_layer:
+            return self._replan_layers(it, regime)
+        load, vis = self.predictor.predict(regime)
         if load.sum() <= 0:
             return None
+        p = self.pcfg
         new = plan_placement(p.planner, load, self.ep, vis=vis, cfg=p)
         # skip churn: require a predicted max-rank-load improvement
         old_max = self.table.rank_loads(load).max()
@@ -103,16 +304,31 @@ class PlacementManager:
         plan = migrate.diff(self.table, new, self.bytes_per_expert)
         if plan.is_noop:
             return None
-        if self.cost_gate is not None and not self.cost_gate.accept(
-                self.table.rank_loads(load), new.rank_loads(load),
-                plan.n_moved):
+        if not self._gate_accept(self.table.rank_loads(load),
+                                 new.rank_loads(load), plan.n_moved):
             return None
         self.table = new
-        self.n_migrations += 1
-        self.migrated_bytes += plan.moved_bytes
-        self.migrated_experts += plan.n_moved
         self.last_replan_iter = it
-        return plan
+        return self._book(plan)
+
+    # per-layer replan hooks (loop lives in ReplanDiscipline)
+    def _layer_states(self) -> list:
+        return self.tables
+
+    def _plan_one_layer(self, load: np.ndarray,
+                        vis: np.ndarray) -> PlacementTable:
+        return plan_placement(self.pcfg.planner, load, self.ep, vis=vis,
+                              cfg=self.pcfg)
+
+    def _diff_layer_states(self, old_states: list, new_states: list
+                           ) -> migrate.LayerMigrationPlan:
+        return migrate.diff_layers(old_states, new_states,
+                                   self.bytes_per_expert)
+
+    def _accept_layer_plan(self, plan: migrate.LayerMigrationPlan,
+                           new_states: list) -> migrate.LayerMigrationPlan:
+        self.tables = new_states
+        return self._book(plan)
 
     def migration_seconds(self, moved_bytes: int) -> float:
         """Virtual-time cost of moving ``moved_bytes`` over the EP fabric."""
@@ -120,11 +336,14 @@ class PlacementManager:
 
     # -- checkpointing -----------------------------------------------------
     def state_dict(self) -> Dict[str, np.ndarray]:
-        out = {"e2r": self.table.e2r, "local_slot": self.table.local_slot,
-               "n_ranks": np.int64(self.table.n_ranks),
+        out = {"e2r": np.stack([t.e2r for t in self.tables]),
+               "local_slot": np.stack([t.local_slot for t in self.tables]),
+               "n_ranks": np.int64(self.ep),
+               "n_tables": np.int64(self.n_tables),
                "n_migrations": np.int64(self.n_migrations),
                "migrated_bytes": np.int64(self.migrated_bytes),
-               "migrated_experts": np.int64(self.migrated_experts)}
+               "migrated_experts": np.int64(self.migrated_experts),
+               "migrated_bytes_per_layer": self.migrated_bytes_per_layer}
         for k, v in self.predictor.state_dict().items():
             out[f"pred_{k}"] = v
         return out
@@ -132,12 +351,25 @@ class PlacementManager:
     def load_state_dict(self, state: Dict[str, np.ndarray]) -> None:
         assert int(state["n_ranks"]) == self.ep, \
             (int(state["n_ranks"]), self.ep)
-        self.table = PlacementTable(np.asarray(state["e2r"], np.int32),
-                                    np.asarray(state["local_slot"],
-                                               np.int32), self.ep)
+        nt = int(state.get("n_tables", 1))
+        if nt != self.n_tables:
+            raise ValueError(
+                f"checkpoint holds {nt} placement table(s) but this "
+                f"manager plans {self.n_tables} — per-layer and "
+                "shared-table checkpoints are not interchangeable (the "
+                "saved weights are permuted per the writer's tables)")
+        e2r = np.atleast_2d(np.asarray(state["e2r"], np.int32))
+        ls = np.atleast_2d(np.asarray(state["local_slot"], np.int32))
+        self.tables = [PlacementTable(e2r[l], ls[l], self.ep)
+                       for l in range(self.n_tables)]
         self.n_migrations = int(state["n_migrations"])
         self.migrated_bytes = int(state["migrated_bytes"])
         self.migrated_experts = int(state["migrated_experts"])
+        self.migrated_bytes_per_layer = np.asarray(
+            state.get("migrated_bytes_per_layer",
+                      np.zeros(self.n_tables)), np.int64).reshape(
+            self.n_tables)
+        self._decode_since_replan = 0
         self.predictor.load_state_dict(
             {k[len("pred_"):]: v for k, v in state.items()
              if k.startswith("pred_")})

@@ -45,6 +45,38 @@ class MigrationPlan:
         return self.n_moved == 0
 
 
+@dataclasses.dataclass(frozen=True)
+class LayerMigrationPlan:
+    """Layer-diff migration across per-layer placement tables.
+
+    ``gather_idx [L, E]`` permutes each scanned block's weight slab
+    independently; unchanged layers carry the identity row, so migration
+    traffic scales with the number of *changed* layers rather than
+    ``n_layers×`` (HarMoEny-style layer-wise rebalancing).
+    ``moved_per_layer [L]`` counts experts whose rank changed in each
+    layer; ``moved_bytes`` charges only those (expert, layer) pairs."""
+    gather_idx: np.ndarray      # [L, E] per-layer new row -> old row
+    moved_per_layer: np.ndarray  # [L] experts that changed rank per layer
+    moved_bytes: int            # cross-rank bytes, changed layers only
+
+    @property
+    def n_layers(self) -> int:
+        return int(self.gather_idx.shape[0])
+
+    @property
+    def changed_layers(self) -> np.ndarray:
+        return np.flatnonzero(self.moved_per_layer)
+
+    @property
+    def n_moved(self) -> int:
+        """Total (expert, layer) pairs that changed rank."""
+        return int(self.moved_per_layer.sum())
+
+    @property
+    def is_noop(self) -> bool:
+        return self.n_moved == 0
+
+
 def expert_bytes_raw(d_model: int, d_ff: int, bytes_per_param: float,
                      n_moe_layers: int) -> float:
     """Weight bytes of ONE expert (gate+up+down) across the MoE stack —
@@ -73,6 +105,27 @@ def diff(old: PlacementTable, new: PlacementTable,
                          moved_bytes=int(moved.shape[0]) * bytes_per_expert)
 
 
+def diff_layers(old_tables, new_tables,
+                bytes_per_expert: int = 0) -> LayerMigrationPlan:
+    """Layer-diff between two per-layer table stacks.
+
+    ``bytes_per_expert`` is the weight bytes of one expert in ONE scanned
+    block (not the whole stack): only (expert, layer) pairs whose rank
+    changed are charged."""
+    assert len(old_tables) == len(new_tables), \
+        (len(old_tables), len(new_tables))
+    gather, moved = [], []
+    for old, new in zip(old_tables, new_tables):
+        p = diff(old, new)
+        gather.append(p.gather_idx)
+        moved.append(p.n_moved)
+    moved = np.asarray(moved, np.int64)
+    return LayerMigrationPlan(
+        gather_idx=np.stack(gather).astype(np.int64),
+        moved_per_layer=moved,
+        moved_bytes=int(moved.sum()) * bytes_per_expert)
+
+
 def moe_param_paths(params: Dict[str, Any]) -> List[Tuple[str, str]]:
     """(block_group, layer_key) pairs holding routed-expert weights."""
     out = []
@@ -94,9 +147,12 @@ def apply_to_params(params: Dict[str, Any], plan) -> Dict[str, Any]:
     unstacked ``[E, ...]`` ones; the router is left in logical order.
 
     ``plan`` is anything exposing ``gather_idx`` / ``is_noop``: a
-    bijective :class:`MigrationPlan` (``[E]`` permutation) or a
+    bijective :class:`MigrationPlan` (``[E]`` permutation), a
     :class:`repro.replication.migrate.ReplicaMigrationPlan` (``[S]``
-    slot gather over the replica-expanded weight layout).
+    slot gather over the replica-expanded weight layout), or a per-layer
+    :class:`LayerMigrationPlan` / :class:`repro.replication.migrate.
+    LayerReplicaMigrationPlan` (``[L, E|S]`` — each stacked scan block's
+    slab gathered by its own layer's row).
     """
     if plan.is_noop:
         return params
@@ -108,8 +164,19 @@ def apply_to_params(params: Dict[str, Any], plan) -> Dict[str, Any]:
         moe = dict(lp["moe"])
         for key in MOE_WEIGHT_KEYS:
             w = moe[key]
-            axis = w.ndim - 3          # [.., E|S, a, b]: expert-slot axis
-            moe[key] = jnp_take(w, idx, axis)
+            if idx.ndim == 2:          # per-layer gather over scan stack
+                if w.ndim == 3:        # unstacked layer: only L == 1 fits
+                    assert idx.shape[0] == 1, \
+                        (idx.shape, w.shape, "per-layer plan needs "
+                         "stacked [n_blocks, ...] weights")
+                    moe[key] = jnp_take(w, idx[0], 0)
+                else:
+                    assert w.ndim == 4 and w.shape[0] == idx.shape[0], \
+                        (w.shape, idx.shape)
+                    moe[key] = jnp_take_layers(w, idx)
+            else:
+                axis = w.ndim - 3      # [.., E|S, a, b]: expert-slot axis
+                moe[key] = jnp_take(w, idx, axis)
         lp["moe"] = moe
         grp[lname] = lp
         out[group] = grp
@@ -123,3 +190,14 @@ def jnp_take(w, idx, axis: int):
         return np.take(w, idx, axis=axis)
     import jax.numpy as jnp
     return jnp.take(w, jnp.asarray(idx), axis=axis)
+
+
+def jnp_take_layers(w, idx):
+    """Per-layer slot gather: ``out[l, p] = w[l, idx[l, p]]`` for stacked
+    ``[L, S, a, b]`` scan weights and an ``[L, S]`` layer-diff index."""
+    idx_r = np.asarray(idx, np.int64).reshape(
+        idx.shape + (1,) * (w.ndim - 2))
+    if isinstance(w, np.ndarray):
+        return np.take_along_axis(w, idx_r, axis=1)
+    import jax.numpy as jnp
+    return jnp.take_along_axis(w, jnp.asarray(idx_r), axis=1)

@@ -24,6 +24,11 @@ Every bijective planner is bounded below by the hottest single expert —
 a load no permutation can split.  When that bound binds, use the
 redundant-expert planner (:mod:`repro.replication.planner`) instead,
 which divides hot experts across ranks.
+
+All planners consume ONE ``[E]`` load row, so per-layer planning
+(``PlacementConfig.per_layer``) is simply the manager mapping them over
+the predictor's ``[L, E]`` rows — one independent plan per scanned MoE
+block, diffed into a layer-diff migration.
 """
 from __future__ import annotations
 

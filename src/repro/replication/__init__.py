@@ -10,12 +10,14 @@ placement weight-slab gather with a two-phase consistency rule — a
 replica becomes routable only after its slab lands.
 """
 from repro.replication.manager import ReplicaManager
-from repro.replication.migrate import (ReplicaMigrationPlan, diff,
-                                       expand_moe_params)
+from repro.replication.migrate import (LayerReplicaMigrationPlan,
+                                       ReplicaMigrationPlan, diff,
+                                       diff_layers, expand_moe_params)
 from repro.replication.planner import plan_from_config, plan_replication
 from repro.replication.replica_set import ReplicaSet
 
 __all__ = [
-    "ReplicaManager", "ReplicaMigrationPlan", "diff", "expand_moe_params",
+    "ReplicaManager", "ReplicaMigrationPlan", "LayerReplicaMigrationPlan",
+    "diff", "diff_layers", "expand_moe_params",
     "plan_from_config", "plan_replication", "ReplicaSet",
 ]

@@ -12,6 +12,18 @@ and only then calls ``commit(plan)``, which flips the routable table and
 books the accounting.  A crashed / abandoned apply (``abort``) leaves the
 old set fully consistent with the untouched weights.
 
+Per-layer replica sets (``ReplicationConfig.per_layer``): one set per
+scanned MoE block, each planned from its own predictor row; the staged
+plan is a layer-diff (:class:`~repro.replication.migrate.
+LayerReplicaMigrationPlan`) whose slab traffic covers changed layers
+only, and ``device_tables`` returns stacked ``[L, ...]`` arrays for the
+transformer's layer scan.  ``n_tables == 1`` degrades bitwise to the
+shared-set behavior.
+
+Decode-regime replanning mirrors placement: a separate decode EWMA
+window (``decode_halflife``) plus a decode-iteration cadence
+(``decode_replan_every``).
+
 Optionally gated by a cost model (``cost_gate``): a replan fires only
 when the predicted layer-time savings over the plan's amortization
 horizon exceed the migration cost — see
@@ -19,62 +31,96 @@ horizon exceed the migration cost — see
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Union
 
 import numpy as np
 
 from repro.configs.base import ModelConfig, ReplicationConfig
 from repro.placement import migrate as pmigrate
+from repro.placement.manager import ReplanDiscipline
 from repro.placement.predictor import EWMAPredictor
 from repro.replication import migrate
 from repro.replication.planner import plan_replication
 from repro.replication.replica_set import ReplicaSet
 
+Plan = Union[migrate.ReplicaMigrationPlan, migrate.LayerReplicaMigrationPlan]
 
-class ReplicaManager:
+
+class ReplicaManager(ReplanDiscipline):
     ckpt_group = "replication"     # engine checkpoint group name
 
     def __init__(self, cfg: ModelConfig, rpcfg: ReplicationConfig, ep: int,
                  cost_gate=None):
         assert cfg.moe is not None, "replication requires an MoE model"
-        n_moe = sum(1 for f in cfg.ffn_kinds() if f == "moe")
-        self._setup(cfg.moe.num_experts, rpcfg, ep,
-                    pmigrate.expert_bytes(cfg, max(n_moe, 1)), cost_gate)
+        n_blocks, n_moe_per_block = cfg.moe_block_structure()
+        n_moe = n_blocks * n_moe_per_block
+        if rpcfg.per_layer:
+            n_tables = n_blocks
+            bpe = pmigrate.expert_bytes(cfg, max(n_moe_per_block, 1))
+        else:
+            n_tables = 1
+            bpe = pmigrate.expert_bytes(cfg, max(n_moe, 1))
+        self._setup(cfg.moe.num_experts, rpcfg, ep, bpe, cost_gate,
+                    n_tables=n_tables)
         self.cfg = cfg
 
     @classmethod
     def from_geometry(cls, num_experts: int, rpcfg: ReplicationConfig,
                       ep: int, bytes_per_expert: int = 0,
-                      cost_gate=None) -> "ReplicaManager":
-        """Model-config-free construction (cost-model simulators)."""
+                      cost_gate=None, n_layers: int = 1) -> "ReplicaManager":
+        """Model-config-free construction (cost-model simulators).
+
+        ``bytes_per_expert`` is per-table granularity: the whole stack for
+        a shared manager, one scanned block for a per-layer one."""
         self = cls.__new__(cls)
-        self._setup(num_experts, rpcfg, ep, bytes_per_expert, cost_gate)
+        self._setup(num_experts, rpcfg, ep, bytes_per_expert, cost_gate,
+                    n_tables=n_layers if rpcfg.per_layer else 1)
         self.cfg = None
         return self
 
     def _setup(self, num_experts: int, rpcfg: ReplicationConfig, ep: int,
-               bytes_per_expert: int, cost_gate=None):
+               bytes_per_expert: int, cost_gate=None, n_tables: int = 1):
         assert num_experts % ep == 0, (num_experts, ep)
+        assert n_tables >= 1, n_tables
         self.rpcfg, self.ep = rpcfg, ep
+        self.n_tables = n_tables
         self.slots_per_rank = num_experts // ep + rpcfg.spare_per_rank
-        self.rset = ReplicaSet.identity(num_experts, ep,
-                                        slots_per_rank=self.slots_per_rank,
-                                        max_replicas=rpcfg.max_replicas)
-        self.predictor = EWMAPredictor(num_experts, alpha=rpcfg.ewma_alpha)
+        self.rsets: List[ReplicaSet] = [
+            ReplicaSet.identity(num_experts, ep,
+                                slots_per_rank=self.slots_per_rank,
+                                max_replicas=rpcfg.max_replicas)
+            for _ in range(n_tables)]
+        self.predictor = EWMAPredictor(num_experts, alpha=rpcfg.ewma_alpha,
+                                       decode_halflife=rpcfg.decode_halflife)
         self.bytes_per_expert = bytes_per_expert
         self.cost_gate = cost_gate
-        self._pending: Optional[migrate.ReplicaMigrationPlan] = None
+        self._pending: Optional[Plan] = None
         # cumulative accounting
         self.n_migrations = 0
         self.migrated_bytes = 0
         self.migrated_slots = 0
+        self.migrated_bytes_per_layer = np.zeros(n_tables, np.int64)
         self.last_replan_iter = -1
+        self._decode_since_replan = 0
         self.cum_slot_load = np.zeros(self.n_slots, np.float64)
 
     # -- geometry ----------------------------------------------------------
     @property
+    def per_layer(self) -> bool:
+        return self.n_tables > 1
+
+    @property
+    def rset(self) -> ReplicaSet:
+        """The shared set (first set of a per-layer manager)."""
+        return self.rsets[0]
+
+    @rset.setter
+    def rset(self, rs: ReplicaSet) -> None:
+        self.rsets[0] = rs
+
+    @property
     def num_experts(self) -> int:
-        return self.rset.num_experts
+        return self.rsets[0].num_experts
 
     @property
     def n_slots(self) -> int:
@@ -85,19 +131,30 @@ class ReplicaManager:
         written by a replication-free engine: weights are logical-order
         and there is no replica state to resume)."""
         self._setup(self.num_experts, self.rpcfg, self.ep,
-                    self.bytes_per_expert, self.cost_gate)
+                    self.bytes_per_expert, self.cost_gate,
+                    n_tables=self.n_tables)
 
     def device_tables(self):
-        """(rep_pos, n_rep, slot_owner) of the *routable* set — staged
-        plans are invisible here until committed."""
-        return self.rset.as_arrays()
+        """(rep_pos, n_rep, slot_owner) of the *routable* set(s) — staged
+        plans are invisible here until committed.  Stacked ``[L, ...]``
+        arrays for a per-layer manager (scanned alongside the block
+        params), plain arrays for a shared one."""
+        if not self.per_layer:
+            return self.rsets[0].as_arrays()
+        return (np.stack([rs.rep_pos for rs in self.rsets]),
+                np.stack([rs.n_rep for rs in self.rsets]),
+                np.stack([rs.slot_owner for rs in self.rsets]))
 
     # -- engine feeds ------------------------------------------------------
-    def observe(self, expert_stats: np.ndarray) -> None:
+    def observe(self, expert_stats: np.ndarray,
+                decode: bool = False) -> None:
         """expert_stats [n_blocks, 2, E]: per-MoE-layer (load, vis) counts
-        per *logical* expert of one engine iteration."""
+        per *logical* expert of one engine iteration.  ``decode`` routes
+        the observation into the decode window when one is configured."""
         es = np.asarray(expert_stats, np.float64)
-        self.predictor.observe(es[:, 0, :], es[:, 1, :])
+        self.predictor.observe(es[:, 0, :], es[:, 1, :], decode=decode)
+        if decode:
+            self._decode_since_replan += 1
 
     def observe_slots(self, slot_stats: np.ndarray) -> None:
         """slot_stats [n_blocks, 2, S]: post-split physical-slot loads —
@@ -106,20 +163,54 @@ class ReplicaManager:
         if ss.shape[-1] == self.n_slots:
             self.cum_slot_load += ss[:, 0, :].sum(0)
 
+    # -- replica-aware dispatch capacity -----------------------------------
+    def capacity_factor(self, margin: float = 1.25,
+                        floor: float = 1.0) -> float:
+        """Effective dispatch ``capacity_factor`` from the post-split
+        predicted loads — the replica-aware shrink of the per-rank
+        dispatch buffer.  Conservative on both axes: the worst layer
+        (per-layer manager) and the worst prediction *window* price the
+        buffer, so a decode-regime drift the main window cannot see
+        still re-grows it.  Before any observation there is nothing to
+        justify a shrink: returns +inf (the engine clamps to its static
+        provision), never the floor."""
+        out = 0.0
+        seen = False
+        for regime in ("mixed", "decode"):
+            pred = self.predictor.predict_layers(regime)
+            if pred is None:
+                continue
+            loads, _ = pred
+            if loads.sum() <= 0:
+                continue
+            seen = True
+            if self.per_layer and loads.shape[0] == self.n_tables:
+                f = max(rs.capacity_factor(loads[l], margin, floor)
+                        for l, rs in enumerate(self.rsets))
+            else:
+                f = self.rset.capacity_factor(loads.sum(0), margin, floor)
+            out = max(out, f)
+        return out if seen else float("inf")
+
     # -- replanning --------------------------------------------------------
-    def maybe_replan(self, it: int
-                     ) -> Optional[migrate.ReplicaMigrationPlan]:
+    def _discipline_cfg(self) -> ReplicationConfig:
+        return self.rpcfg
+
+    def _replan_blocked(self) -> bool:
+        return self._pending is not None
+
+    def maybe_replan(self, it: int) -> Optional[Plan]:
         """Stage the slab gather to apply at iteration ``it``, or None.
 
-        The returned plan is *pending*: the routable set (and therefore
-        ``device_tables``) is unchanged until :meth:`commit`."""
-        p = self.rpcfg
-        if (self._pending is not None or not p.enabled
-                or self.predictor.n_obs < p.warmup_iters
-                or p.replan_every <= 0 or it % p.replan_every != 0
-                or it == self.last_replan_iter):
+        The returned plan is *pending*: the routable set(s) (and
+        therefore ``device_tables``) are unchanged until :meth:`commit`."""
+        regime = self._cadence(it)
+        if regime is None:
             return None
-        load, vis = self.predictor.predict()
+        if self.per_layer:
+            return self._replan_layers(it, regime)
+        p = self.rpcfg
+        load, vis = self.predictor.predict(regime)
         if load.sum() <= 0:
             return None
         new = plan_replication(load, self.ep, self.slots_per_rank,
@@ -133,22 +224,56 @@ class ReplicaManager:
         plan = migrate.diff(self.rset, new, self.bytes_per_expert)
         if plan.is_noop:
             return None
-        if self.cost_gate is not None and not self.cost_gate.accept(
-                self.rset.rank_loads(load), new.rank_loads(load),
-                len(plan.crossrank_slots)):
+        if not self._gate_accept(self.rset.rank_loads(load),
+                                 new.rank_loads(load),
+                                 len(plan.crossrank_slots)):
             return None
         self._pending = plan
         self.last_replan_iter = it
         return plan
 
-    def commit(self, plan: migrate.ReplicaMigrationPlan) -> None:
-        """Make the staged set routable — call only after the weight
+    # per-layer replan hooks (loop lives in ReplanDiscipline); the staged
+    # layer-diff copies slabs for changed layers only, priced cross-rank
+    def _layer_states(self) -> list:
+        return self.rsets
+
+    def _plan_one_layer(self, load: np.ndarray,
+                        vis: np.ndarray) -> ReplicaSet:
+        p = self.rpcfg
+        return plan_replication(load, self.ep, self.slots_per_rank,
+                                max_replicas=p.max_replicas, vis=vis,
+                                vis_weight=p.vis_weight)
+
+    def _diff_layer_states(self, old_states: list, new_states: list
+                           ) -> migrate.LayerReplicaMigrationPlan:
+        return migrate.diff_layers(old_states, new_states,
+                                   self.bytes_per_expert)
+
+    def _layer_gate_moved(self,
+                          plan: migrate.LayerReplicaMigrationPlan) -> int:
+        return plan.n_crossrank
+
+    def _accept_layer_plan(self, plan: migrate.LayerReplicaMigrationPlan,
+                           new_states: list
+                           ) -> migrate.LayerReplicaMigrationPlan:
+        self._pending = plan               # staged, routable only on commit
+        return plan
+
+    def commit(self, plan: Plan) -> None:
+        """Make the staged set(s) routable — call only after the weight
         slabs have been gathered into the new layout."""
         assert self._pending is plan, "commit of a plan that is not staged"
-        self.rset = plan.new_set
+        if isinstance(plan, migrate.LayerReplicaMigrationPlan):
+            self.rsets = list(plan.new_sets)
+            self.migrated_bytes_per_layer += \
+                plan.crossrank_per_layer * self.bytes_per_expert
+        else:
+            self.rsets[0] = plan.new_set
+            self.migrated_bytes_per_layer[0] += plan.moved_bytes
         self.n_migrations += 1
         self.migrated_bytes += plan.moved_bytes
         self.migrated_slots += plan.n_moved
+        self._decode_since_replan = 0
         self._pending = None
 
     def abort(self) -> None:
@@ -161,12 +286,15 @@ class ReplicaManager:
 
     # -- checkpointing -----------------------------------------------------
     def state_dict(self) -> Dict[str, np.ndarray]:
-        out = {"rep_pos": self.rset.rep_pos, "n_rep": self.rset.n_rep,
+        out = {"rep_pos": np.stack([rs.rep_pos for rs in self.rsets]),
+               "n_rep": np.stack([rs.n_rep for rs in self.rsets]),
                "n_ranks": np.int64(self.ep),
+               "n_tables": np.int64(self.n_tables),
                "slots_per_rank": np.int64(self.slots_per_rank),
                "n_migrations": np.int64(self.n_migrations),
                "migrated_bytes": np.int64(self.migrated_bytes),
                "migrated_slots": np.int64(self.migrated_slots),
+               "migrated_bytes_per_layer": self.migrated_bytes_per_layer,
                "cum_slot_load": self.cum_slot_load}
         for k, v in self.predictor.state_dict().items():
             out[f"pred_{k}"] = v
@@ -177,16 +305,32 @@ class ReplicaManager:
             (int(state["n_ranks"]), self.ep)
         assert int(state["slots_per_rank"]) == self.slots_per_rank, \
             (int(state["slots_per_rank"]), self.slots_per_rank)
-        assert state["rep_pos"].shape[1] == self.rset.max_replicas, \
-            (state["rep_pos"].shape, self.rset.max_replicas)
-        self.rset = ReplicaSet(np.asarray(state["rep_pos"], np.int32),
-                               np.asarray(state["n_rep"], np.int32),
-                               self.ep, self.slots_per_rank)
+        nt = int(state.get("n_tables", 1))
+        if nt != self.n_tables:
+            raise ValueError(
+                f"checkpoint holds {nt} replica set(s) but this manager "
+                f"plans {self.n_tables} — per-layer and shared "
+                "checkpoints are not interchangeable (the saved weights "
+                "are slot-ordered per the writer's sets)")
+        rep_pos = np.asarray(state["rep_pos"], np.int32)
+        n_rep = np.asarray(state["n_rep"], np.int32)
+        if rep_pos.ndim == 2:          # legacy single-set layout
+            rep_pos, n_rep = rep_pos[None], n_rep[None]
+        assert rep_pos.shape[-1] == self.rsets[0].max_replicas, \
+            (rep_pos.shape, self.rsets[0].max_replicas)
+        self.rsets = [ReplicaSet(rep_pos[l], n_rep[l], self.ep,
+                                 self.slots_per_rank)
+                      for l in range(self.n_tables)]
         self.n_migrations = int(state["n_migrations"])
         self.migrated_bytes = int(state["migrated_bytes"])
         self.migrated_slots = int(state["migrated_slots"])
+        self.migrated_bytes_per_layer = np.asarray(
+            state.get("migrated_bytes_per_layer",
+                      np.zeros(self.n_tables)), np.int64).reshape(
+            self.n_tables)
         self.cum_slot_load = np.asarray(state["cum_slot_load"], np.float64)
         self._pending = None
+        self._decode_since_replan = 0
         self.predictor.load_state_dict(
             {k[len("pred_"):]: v for k, v in state.items()
              if k.startswith("pred_")})

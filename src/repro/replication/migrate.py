@@ -29,7 +29,8 @@ from typing import Any, Dict
 
 import numpy as np
 
-from repro.placement.migrate import MOE_WEIGHT_KEYS, jnp_take, moe_param_paths
+from repro.placement.migrate import (MOE_WEIGHT_KEYS, jnp_take,
+                                     jnp_take_layers, moe_param_paths)
 from repro.replication.replica_set import ReplicaSet
 
 
@@ -44,6 +45,42 @@ class ReplicaMigrationPlan:
     @property
     def n_moved(self) -> int:
         return int(self.changed_slots.shape[0])
+
+    @property
+    def is_noop(self) -> bool:
+        return self.n_moved == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerReplicaMigrationPlan:
+    """Layer-diff replica transition across per-layer replica sets.
+
+    Same staged-commit semantics as :class:`ReplicaMigrationPlan` (the
+    pending ``new_sets`` become routable only on ``commit``), but each
+    scanned block's slot slab is gathered by its own ``gather_idx`` row;
+    unchanged layers carry the identity row and cost nothing."""
+    gather_idx: np.ndarray        # [L, S] per-layer new slot -> old slot
+    changed_per_layer: np.ndarray  # [L] slots whose resident changed
+    crossrank_per_layer: np.ndarray  # [L] changed slots crossing ranks
+    moved_bytes: int              # cross-rank bytes, changed layers only
+    new_sets: tuple               # the pending per-layer ReplicaSets
+
+    @property
+    def n_layers(self) -> int:
+        return int(self.gather_idx.shape[0])
+
+    @property
+    def changed_layers(self) -> np.ndarray:
+        return np.flatnonzero(self.changed_per_layer)
+
+    @property
+    def n_moved(self) -> int:
+        """Total (slot, layer) pairs whose resident expert changed."""
+        return int(self.changed_per_layer.sum())
+
+    @property
+    def n_crossrank(self) -> int:
+        return int(self.crossrank_per_layer.sum())
 
     @property
     def is_noop(self) -> bool:
@@ -84,8 +121,29 @@ def diff(old: ReplicaSet, new: ReplicaSet,
         moved_bytes=int(cross.shape[0]) * bytes_per_expert, new_set=new)
 
 
-def expand_moe_params(params: Dict[str, Any], rset: ReplicaSet
-                      ) -> Dict[str, Any]:
+def diff_layers(old_sets, new_sets,
+                bytes_per_expert: int = 0) -> LayerReplicaMigrationPlan:
+    """Layer-diff between two per-layer replica-set stacks.
+
+    ``bytes_per_expert`` is the slab bytes of one expert in ONE scanned
+    block; only cross-rank (slot, layer) sources are charged."""
+    assert len(old_sets) == len(new_sets), (len(old_sets), len(new_sets))
+    gather, changed, cross = [], [], []
+    for old, new in zip(old_sets, new_sets):
+        p = diff(old, new)
+        gather.append(p.gather_idx)
+        changed.append(p.n_moved)
+        cross.append(int(p.crossrank_slots.shape[0]))
+    cross = np.asarray(cross, np.int64)
+    return LayerReplicaMigrationPlan(
+        gather_idx=np.stack(gather).astype(np.int64),
+        changed_per_layer=np.asarray(changed, np.int64),
+        crossrank_per_layer=cross,
+        moved_bytes=int(cross.sum()) * bytes_per_expert,
+        new_sets=tuple(new_sets))
+
+
+def expand_moe_params(params: Dict[str, Any], rset) -> Dict[str, Any]:
     """Lay logically-ordered ``[.., E, ..]`` expert weights out into the
     set's physical ``[.., S, ..]`` slot order (empty spares zeroed).
 
@@ -94,7 +152,17 @@ def expand_moe_params(params: Dict[str, Any], rset: ReplicaSet
     stores one row per physical slot.  Routers stay logical and are not
     touched.  Works on stacked ``[n_blocks, E, ...]`` scan weights and on
     unstacked ``[E, ...]`` ones.
+
+    ``rset`` is a single :class:`ReplicaSet` (shared across layers) or a
+    sequence of per-layer sets — the latter requires stacked
+    ``[n_blocks, E, ...]`` weights and expands each block by its own
+    layer's slot layout.
     """
+    rsets = list(rset) if isinstance(rset, (list, tuple)) else None
+    if rsets is not None and len(rsets) == 1:
+        rset, rsets = rsets[0], None
+    if rsets is not None:
+        return _expand_layers(params, rsets)
     owner = rset.slot_owner
     idx = np.where(owner >= 0, owner, 0).astype(np.int64)
     empty = owner < 0
@@ -118,6 +186,37 @@ def expand_moe_params(params: Dict[str, Any], rset: ReplicaSet
                     import jax.numpy as jnp
                     w2 = w2 * jnp.asarray(
                         (~empty).reshape(mask_shape), w2.dtype)
+            moe[key] = w2
+        lp["moe"] = moe
+        grp[lname] = lp
+        out[group] = grp
+    return out
+
+
+def _expand_layers(params: Dict[str, Any], rsets) -> Dict[str, Any]:
+    """Per-layer expansion: block ``l``'s ``[E, ...]`` slab laid out by
+    ``rsets[l]``'s slot order."""
+    owner = np.stack([rs.slot_owner for rs in rsets])        # [L, S]
+    idx = np.where(owner >= 0, owner, 0).astype(np.int64)
+    empty = owner < 0
+    n_e = rsets[0].num_experts
+    out = dict(params)
+    for group, lname in moe_param_paths(params):
+        grp = dict(out[group])
+        lp = dict(grp[lname])
+        moe = dict(lp["moe"])
+        for key in MOE_WEIGHT_KEYS:
+            w = moe[key]
+            assert w.ndim == 4 and w.shape[0] == len(rsets) \
+                and w.shape[1] == n_e, (key, w.shape, len(rsets), n_e)
+            w2 = jnp_take_layers(w, idx)
+            if empty.any():
+                mask = (~empty).reshape(empty.shape + (1, 1))
+                if isinstance(w2, np.ndarray):
+                    w2 = w2 * mask
+                else:
+                    import jax.numpy as jnp
+                    w2 = w2 * jnp.asarray(mask, w2.dtype)
             moe[key] = w2
         lp["moe"] = moe
         grp[lname] = lp

@@ -18,6 +18,11 @@ identical sets and the diff is a no-op:
    on the same rank.  When every remaining feasible rank already hosts
    the expert, the instance is dropped (count reduced) rather than
    violating the distinct-rank invariant.
+
+The planner consumes ONE ``[E]`` load row; per-layer replication
+(``ReplicationConfig.per_layer``) maps it over the predictor's
+``[L, E]`` rows — one independent replica set per scanned MoE block,
+staged and committed as a layer-diff.
 """
 from __future__ import annotations
 

@@ -130,6 +130,28 @@ class ReplicaSet:
         np.add.at(out, self.rep_rank[valid], share[valid])
         return out
 
+    def capacity_factor(self, expert_load: np.ndarray,
+                        margin: float = 1.25,
+                        floor: float = 1.0) -> float:
+        """Dispatch ``capacity_factor`` sized from the *post-split*
+        worst-case rank load instead of the bijective worst case.
+
+        The per-rank dispatch buffer holds ``t*k/ep × capacity_factor``
+        entries, so the factor must cover the peak rank's share of the
+        routed load.  Under replication the hot experts are split across
+        replicas, so the post-split peak (``rank_loads(load).max()`` over
+        the equal-split model) is flatter than the bijective peak — the
+        buffer (and its HBM) can shrink by the same ratio.  ``margin``
+        is the safety headroom over the predicted peak; ``floor`` the
+        minimum factor (1.0 = perfectly balanced provisioning).
+        """
+        rl = self.rank_loads(expert_load)
+        tot = rl.sum()
+        if tot <= 0:
+            return float(floor)
+        ib = rl.max() / (tot / self.n_ranks)   # post-split peak / ideal
+        return float(max(floor, margin * ib))
+
     def slot_loads(self, expert_load: np.ndarray) -> np.ndarray:
         """Post-split per-physical-slot loads [S] (empty slots 0)."""
         load = np.asarray(expert_load, np.float64)

@@ -38,6 +38,13 @@ first and only then calls ``manager.commit(plan)``, so a replica becomes
 routable (visible to the traced dispatch table) strictly after its slab
 landed in ``self.params`` — the consistency rule that keeps a crashed
 apply from routing tokens into garbage weights.
+
+Per-layer tables: managers constructed with ``per_layer=True`` return
+stacked ``[n_blocks, ...]`` tables from ``device_tables()``; the model
+threads the per-layer slice through its layer scan, and the manager's
+plans are layer-diffs whose slab traffic covers changed layers only.
+The engine code is identical either way — ``_place_args``/
+``_maybe_migrate`` are shape-agnostic.
 """
 from __future__ import annotations
 
@@ -93,7 +100,8 @@ class Engine:
                  clock: Callable[[], float] = time.monotonic,
                  telemetry: Optional[Telemetry] = None,
                  cost_model=None, placement=None,
-                 virtual_ep: Optional[int] = None):
+                 virtual_ep: Optional[int] = None,
+                 capacity_margin: Optional[float] = None):
         self.cfg, self.params, self.rcfg = cfg, params, rcfg
         self.max_slots, self.max_len = max_slots, max_len
         self.temperature = temperature
@@ -136,7 +144,7 @@ class Engine:
             # (forgotten expand_moe_params would silently misroute)
             from repro.placement.migrate import moe_param_paths
             tables = placement.device_tables()
-            want = int(tables[2].shape[0]) if len(tables) == 3 \
+            want = int(tables[2].shape[-1]) if len(tables) == 3 \
                 else cfg.moe.num_experts
             paths = moe_param_paths(params)
             if paths:
@@ -146,6 +154,12 @@ class Engine:
                     (f"params hold {got} expert slots but the manager "
                      f"routes over {want}; lay the weights out with "
                      "repro.replication.expand_moe_params first")
+        # replica-aware dispatch capacity: with a margin set, every
+        # committed replica replan re-derives capacity_factor from the
+        # post-split predicted peak rank load and re-jits the steps —
+        # the dispatch buffer shrinks to the flattened topology
+        self.capacity_margin = capacity_margin
+        self._base_capacity = cfg.moe.capacity_factor if cfg.moe else 0.0
         self._pending_migration = (0.0, 0.0)      # (bytes, seconds)
         self._place_cache = None                  # device copy of the table
         self._it = 0
@@ -245,6 +259,27 @@ class Engine:
         b, s = self._pending_migration
         self._pending_migration = (b + plan.moved_bytes, s + secs)
 
+    def _maybe_resize_capacity(self):
+        """Replica-aware capacity: shrink (or restore) the dispatch
+        ``capacity_factor`` to the post-split predicted peak rank load.
+        Re-checked every iteration — not only on committed migrations —
+        so load drifting under an unchanged replica set (replan rejected
+        or noop) re-grows the buffer before it overflows.  The factor is
+        jit-static, so a change re-builds the step fns; the 5% band
+        keeps drift from re-jitting every step."""
+        if (self.capacity_margin is None or self.cfg.moe is None
+                or not hasattr(self._placement, "capacity_factor")):
+            return
+        eff = min(self._placement.capacity_factor(self.capacity_margin),
+                  self._base_capacity)
+        cur = self.cfg.moe.capacity_factor
+        if abs(eff - cur) / max(cur, 1e-9) < 0.05:
+            return
+        self.cfg = dataclasses.replace(
+            self.cfg, moe=dataclasses.replace(self.cfg.moe,
+                                              capacity_factor=eff))
+        self._build()
+
     # -- cache slot insertion ----------------------------------------------
     def _insert_cache(self, slot: int, new_cache):
         """Copy a batch-1 prefill cache into slot `slot` of the engine cache.
@@ -307,12 +342,19 @@ class Engine:
         self.stats.append(stat)
         if self._placement is not None and "expert_stats" in aux:
             # [n_blocks, 2, E] per-MoE-layer expert loads -> predictor
-            self._placement.observe(np.asarray(aux["expert_stats"]))
+            # (decode iterations feed the decode window when configured)
+            self._placement.observe(np.asarray(aux["expert_stats"]),
+                                    decode=(phase == "decode"))
             if hasattr(self._placement, "observe_slots") \
                     and "slot_stats" in aux:
                 # [n_blocks, 2, S] post-split physical-slot loads ->
                 # replica-utilization accounting
                 self._placement.observe_slots(np.asarray(aux["slot_stats"]))
+            gate = getattr(self._placement, "cost_gate", None)
+            if gate is not None and hasattr(gate, "observe_iter"):
+                # calibrated replan gate: measured routed tokens (and the
+                # engine clock) replace the static roofline constant
+                gate.observe_iter(tokens, stat.t_wall)
         if self.telemetry is not None:
             self.telemetry.record_iter(stat)
 
@@ -412,8 +454,13 @@ class Engine:
         """One continuous-batching iteration. Returns #active sequences."""
         self._it += 1
         # -1) placement: apply a due replan before any forward of this
-        # iteration sees the weights (plan and slabs move atomically)
+        # iteration sees the weights (plan and slabs move atomically),
+        # then re-derive the replica-aware dispatch capacity from the
+        # current prediction (migrated or not — drift under an unchanged
+        # set must still re-grow a shrunk buffer)
         self._maybe_migrate()
+        if self._placement is not None:
+            self._maybe_resize_capacity()
         # 0) purge slots freed by a mid-prefill retirement (e.g. a
         # max_new_tokens=0 request) before they can be re-admitted
         if self._prefill_fifo:
@@ -499,10 +546,9 @@ class Engine:
         step, out = ckpt.restore(ckpt_dir, templates, step)
 
         def group_state(name):
-            try:
-                return ckpt.restore_group(ckpt_dir, name, step)
-            except FileNotFoundError:
+            if not ckpt.has_group(ckpt_dir, name, step):
                 return None
+            return ckpt.restore_group(ckpt_dir, name, step)
 
         # the saved params are laid out for the writer's manager kind: a
         # bijective permutation ("placement") or a replica-slot order with
@@ -532,7 +578,7 @@ class Engine:
                 if own == "replication":
                     from repro.replication import expand_moe_params
                     self.params = expand_moe_params(self.params,
-                                                    self._placement.rset)
+                                                    self._placement.rsets)
             else:
                 self._placement.load_state_dict(state)
             self._place_cache = None

@@ -307,6 +307,152 @@ def check_replication_split_under_ep():
     assert load_d[0] < load_i[0], (load_d, load_i)   # hot rank shed load
 
 
+def check_perlayer_identity_bitwise_under_ep():
+    """Per-layer tentpole on a real (2,4) mesh: stacked identity tables
+    threaded through the layer scan are bitwise-equal to the shared
+    identity table AND to the table-free path — full model, prefill and
+    decode."""
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=2)
+    rcfg = ReaLBConfig(gate_gamma=10 ** 9)
+    params = tf.init_model(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16)), jnp.int32)
+    batch = {"tokens": tokens}
+    _, n_blocks, _ = tf.block_structure(cfg)
+    ident = ep_moe.identity_replication(cfg.moe.num_experts, 4)
+    stacked = tuple(jnp.broadcast_to(a, (n_blocks,) + a.shape)
+                    for a in ident)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    with use_mesh(mesh):
+        m = jnp.full(ep_moe.moe_state_shape(mesh, 4), 0.9)
+        outs = {}
+        for name, pl in (("none", None), ("shared", tuple(ident)),
+                         ("stacked", stacked)):
+            res = jax.jit(lambda p, m, pl=pl: tf.prefill_forward(
+                p, cfg, rcfg, batch, m, cache_len=20,
+                placement=pl))(params, m)
+            db = {"tokens": tokens[:, :1],
+                  "pos": jnp.full((4,), 16, jnp.int32)}
+            dec = jax.jit(lambda p, c, m, pl=pl: tf.decode_forward(
+                p, cfg, rcfg, db, c, m, placement=pl))(
+                params, res.cache, res.m_state)
+            outs[name] = (np.asarray(res.logits), np.asarray(res.m_state),
+                          np.asarray(dec.logits))
+        for name in ("none", "shared"):
+            for a, b in zip(outs[name], outs["stacked"]):
+                assert np.array_equal(a, b), name
+
+
+def check_perlayer_tables_matches_local_under_ep():
+    """Depth-varying per-layer permutation tables (each block's weights
+    permuted by its own table) on the (2,4) mesh match the local
+    single-device per-layer run and the table-free reference."""
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=2)
+    rcfg = ReaLBConfig(gate_gamma=10 ** 9)
+    params = tf.init_model(cfg, jax.random.PRNGKey(0))
+    e = cfg.moe.num_experts
+    rng = np.random.default_rng(5)
+    _, n_blocks, _ = tf.block_structure(cfg)
+    owners, e2r, slot = [], [], []
+    for l in range(n_blocks):
+        owner = rng.permutation(e)
+        pos = np.empty(e, np.int64)
+        pos[owner] = np.arange(e)
+        owners.append(owner)
+        e2r.append(pos // 2)
+        slot.append(pos % 2)
+    place = (jnp.asarray(np.stack(e2r), jnp.int32),
+             jnp.asarray(np.stack(slot), jnp.int32))
+    own = np.stack(owners)
+    perm = dict(params)
+    blocks = dict(perm["blocks"])
+    lp = dict(blocks["layer0"])
+    moe = dict(lp["moe"])
+    for key in ("w_gate", "w_up", "w_down"):
+        w = np.asarray(moe[key])
+        moe[key] = jnp.asarray(np.take_along_axis(
+            w, own.reshape(own.shape + (1, 1)), axis=1))
+    lp["moe"] = moe
+    blocks["layer0"] = lp
+    perm["blocks"] = blocks
+    rng2 = np.random.default_rng(1)
+    tokens = jnp.asarray(rng2.integers(0, cfg.vocab_size, (4, 16)),
+                         jnp.int32)
+    batch = {"tokens": tokens}
+    m1 = jnp.full((1, 4), 0.9)
+    ref = tf.prefill_forward(params, cfg, rcfg, batch, m1, cache_len=20)
+    loc = tf.prefill_forward(perm, cfg, rcfg, batch, m1, cache_len=20,
+                             placement=place)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    with use_mesh(mesh):
+        m = jnp.full(ep_moe.moe_state_shape(mesh, 4), 0.9)
+        res = jax.jit(lambda p, m: tf.prefill_forward(
+            p, cfg, rcfg, batch, m, cache_len=20,
+            placement=place))(perm, m)
+    e1 = float(jnp.max(jnp.abs(loc.logits - ref.logits)))
+    e2 = float(jnp.max(jnp.abs(res.logits - ref.logits)))
+    assert e1 < 5e-3 and e2 < 5e-3, (e1, e2)
+
+
+def check_replica_capacity_reduced_cap():
+    """Replica-aware capacity on the (2,4) mesh: at the post-split-derived
+    reduced ``capacity_factor`` the skewed stream routes with zero drops
+    through the replicated dispatch, while the bijective layout at the
+    same cap overflows its per-rank buffer."""
+    from repro.replication import ReplicaSet, expand_moe_params
+
+    cfg, p, x, mod = _moe_setup()
+    e = cfg.moe.num_experts
+    # a deterministically hot expert 0: feature 0 of every token is a
+    # constant 1.0 and only expert 0's router column reads it
+    p = dict(p)
+    p["router"] = p["router"].at[0, :].set(0.0).at[0, 0].set(8.0)
+    x = x.at[..., 0].set(1.0)
+    rcfg = ReaLBConfig(gate_gamma=10 ** 9)
+    # expert 0 replicated onto rank 2's spare slot
+    rep_pos = np.zeros((e, 2), np.int32)
+    for ex in range(e):
+        rep_pos[ex] = (ex // 2) * 3 + (ex % 2)
+    rep_pos[0, 1] = 3 * 3 + 2        # replica on the coldest rank's spare
+    n_rep = np.ones(e, np.int32)
+    n_rep[0] = 2
+    rs = ReplicaSet(rep_pos, n_rep, 4, 3)
+    # observe the skew at the generous default cap, then derive the
+    # reduced factor from the post-split peak rank load
+    _, _, aux = ep_moe.ep_moe_forward(
+        p, x, cfg, rcfg, jnp.full((1, 1), 0.9), mod, mode="dispatch")
+    el = np.asarray(aux["expert_load"])
+    assert el[0] / el.sum() > 0.4, el           # genuinely hot
+    f_red = rs.capacity_factor(el, margin=1.2)
+    # the bijective peak does NOT fit the reduced buffer
+    ident = ReplicaSet.identity(e, 4, slots_per_rank=3, max_replicas=2)
+    assert ident.rank_loads(el).max() > el.sum() / 4 * f_red
+    cfg_red = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=f_red))
+    wrapped = {"blocks": {"l0": {"moe": p}}}
+    place_rep = tuple(jnp.asarray(a) for a in rs.as_arrays())
+    place_bij = tuple(jnp.asarray(a) for a in ident.as_arrays())
+    p_rep = dict(expand_moe_params(wrapped, rs)["blocks"]["l0"]["moe"],
+                 router=p["router"])
+    p_bij = dict(expand_moe_params(wrapped, ident)["blocks"]["l0"]["moe"],
+                 router=p["router"])
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    with use_mesh(mesh):
+        m = jnp.full(ep_moe.moe_state_shape(mesh, 4), 0.9)
+        _, _, aux_rep = jax.jit(
+            lambda p, x, m, mod, pl: ep_moe.ep_moe_forward(
+                p, x, cfg_red, rcfg, m, mod, mode="dispatch",
+                placement=pl))(p_rep, x, m, mod, place_rep)
+        _, _, aux_bij = jax.jit(
+            lambda p, x, m, mod, pl: ep_moe.ep_moe_forward(
+                p, x, cfg_red, rcfg, m, mod, mode="dispatch",
+                placement=pl))(p_bij, x, m, mod, place_bij)
+    drop_rep = float(aux_rep["drop_frac"])
+    drop_bij = float(aux_bij["drop_frac"])
+    assert drop_rep == 0.0, drop_rep            # split fits the reduced cap
+    assert drop_bij > 0.0, (drop_bij, f_red)    # bijective overflows it
+
+
 def check_model_train_step_under_mesh():
     """Tiny full model: distributed train step ≈ single-device step."""
     from repro.optim import adamw

@@ -21,6 +21,9 @@ CHECKS = [
     "virtual_ep_policy_parity",
     "replication_identity_bitwise_under_ep",
     "replication_split_under_ep",
+    "perlayer_identity_bitwise_under_ep",
+    "perlayer_tables_matches_local_under_ep",
+    "replica_capacity_reduced_cap",
     "model_train_step_under_mesh",
     "decode_under_mesh",
     "elastic_reshard",
