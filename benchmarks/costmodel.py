@@ -29,11 +29,15 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from benchmarks import traces as tr
+from repro.configs.base import MIGRATION_BW_DEFAULT
 
 PEAK_BF16 = 197e12
 PEAK_INT8 = 394e12            # TPU v5e int8 MXU rate (w4a8 execution)
 HBM_BW = 819e9
-ICI_BW = 50e9                 # per link
+ICI_BW = MIGRATION_BW_DEFAULT  # per link — single-sourced with the
+#                                managers' migration_bw default, so sims,
+#                                replan gates and engine accounting price
+#                                the same bytes at the same rate
 FIXED_US = 12.0               # dispatch/kernel fixed overhead per stage
 BYTES_BF16 = 2.0
 BYTES_FP4 = 0.53125           # 4 bits + e4m3 scale per 16-group = 4.25 b
@@ -90,10 +94,19 @@ def migration_bytes(n_moved: int, g: MoEGeometry) -> float:
                                       g.n_moe_layers)
 
 
-def migration_time(n_moved: int, g: MoEGeometry) -> float:
+def _bw_of(bw) -> float:
+    """bytes/s of a bandwidth argument: None = the static ICI constant,
+    else anything float()-able — in particular a live
+    :class:`repro.placement.migrate.MigrationBandwidth` EWMA, so measured
+    apply_to_params wall clocks re-price the migration side of the gates
+    the same way CalibratedReplanCostGate re-prices the savings side."""
+    return ICI_BW if bw is None else max(float(bw), 1.0)
+
+
+def migration_time(n_moved: int, g: MoEGeometry, bw=None) -> float:
     """Serial transfer time of a migration over the EP fabric — the cost
     term placement pays and ReaLB's precision switch does not."""
-    return migration_bytes(n_moved, g) / ICI_BW
+    return migration_bytes(n_moved, g) / _bw_of(bw)
 
 
 def migration_bytes_layers(n_moved_pairs: int, g: MoEGeometry,
@@ -109,11 +122,11 @@ def migration_bytes_layers(n_moved_pairs: int, g: MoEGeometry,
 
 
 def migration_time_layers(n_moved_pairs: int, g: MoEGeometry,
-                          n_tables: int) -> float:
-    return migration_bytes_layers(n_moved_pairs, g, n_tables) / ICI_BW
+                          n_tables: int, bw=None) -> float:
+    return migration_bytes_layers(n_moved_pairs, g, n_tables) / _bw_of(bw)
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass
 class ReplanCostGate:
     """Amortized-gain guard coupling the replan cadence to the latency
     model: accept a migration only when the predicted per-iteration MoE
@@ -126,6 +139,9 @@ class ReplanCostGate:
     horizon_iters: int              # replan_every of the manager
     tokens_per_iter: float = 4096.0  # typical routed batch the savings
     #                                  are evaluated at
+    bandwidth: object = None        # None = static ICI_BW; the managers
+    #                                 wire their measured-bandwidth EWMA
+    #                                 in here so gate pricing tracks it
 
     def layer_seconds(self, rank_loads: np.ndarray) -> float:
         """MoE layer time of one iteration under the given (relative)
@@ -146,7 +162,7 @@ class ReplanCostGate:
         saving = (self.layer_seconds(old_rank_loads)
                   - self.layer_seconds(new_rank_loads))
         horizon = saving * self.g.n_moe_layers * max(self.horizon_iters, 1)
-        return horizon > migration_time(n_moved, self.g)
+        return horizon > migration_time(n_moved, self.g, bw=self.bandwidth)
 
     def accept_layers(self, old_rank_loads: np.ndarray,
                       new_rank_loads: np.ndarray, n_moved: int) -> bool:
@@ -166,7 +182,8 @@ class ReplanCostGate:
         # each table layer stands for n_moe_layers / n_tables model layers
         scale = self.g.n_moe_layers / max(n_tables, 1)
         horizon = saving * scale * max(self.horizon_iters, 1)
-        return horizon > migration_time_layers(n_moved, self.g, n_tables)
+        return horizon > migration_time_layers(n_moved, self.g, n_tables,
+                                               bw=self.bandwidth)
 
 
 class CalibratedReplanCostGate:
@@ -182,11 +199,16 @@ class CalibratedReplanCostGate:
     """
 
     def __init__(self, g: MoEGeometry, ep: int, horizon_iters: int,
-                 default_tokens: float = 4096.0, window: int = 64):
+                 default_tokens: float = 4096.0, window: int = 64,
+                 bandwidth=None):
         self.g, self.ep = g, ep
         self.horizon_iters = int(horizon_iters)
         self.default_tokens = float(default_tokens)
         self.window = int(window)
+        # migration-side calibration twin of tokens_per_iter: None until
+        # a manager wires its measured-bandwidth EWMA in (then replans
+        # are priced at observed apply_to_params bytes/s, not ICI_BW)
+        self.bandwidth = bandwidth
         self._tokens: List[float] = []
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
@@ -219,7 +241,8 @@ class CalibratedReplanCostGate:
 
     def _gate(self) -> ReplanCostGate:
         return ReplanCostGate(self.g, self.ep, self.horizon_iters,
-                              tokens_per_iter=self.tokens_per_iter)
+                              tokens_per_iter=self.tokens_per_iter,
+                              bandwidth=self.bandwidth)
 
     def layer_seconds(self, rank_loads: np.ndarray) -> float:
         return self._gate().layer_seconds(rank_loads)
@@ -401,6 +424,7 @@ def make_placement(g: MoEGeometry, ep: int, planner: str = "least_loaded",
         extra = 0.0
         plan = mgr.maybe_replan(step.it) if step.it > 0 else None
         if plan is not None:
+            mgr.commit(plan)           # sim: the slab copy is atomic
             state["place"] = mgr.table.e2r        # rank_loads view
             # amortized per MoE layer (the trace step is one layer)
             extra = migration_time(plan.n_moved, g) / g.n_moe_layers
@@ -520,35 +544,68 @@ def generate_layers(cfg: tr.TraceConfig, n_layers: int,
 
 
 def _sim_layers(cfg: tr.TraceConfig, g: MoEGeometry, n_layers: int,
-                mgr, rank_view, commit_staged: bool, name: str
-                ) -> SimResult:
+                mgr, rank_view, name: str,
+                drain_bytes_per_iter: Optional[int] = None) -> SimResult:
     """Shared harness of the per-layer strategy sims: feed the real
     manager stacked ``[L, 2, E]`` stats, apply its (layer-diff) plans,
     and score the depth-peak rank imbalance plus the mean layer time.
-    ``rank_view(mgr, l)`` exposes the current table of layer ``l`` as a
-    ``traces.rank_loads`` placement argument."""
+    ``rank_view(mgr, l)`` exposes the current *routable* table of layer
+    ``l`` as a ``traces.rank_loads`` placement argument.
+
+    ``drain_bytes_per_iter`` selects the async overlapped-migration
+    mode: a staged plan's chunks land over the following iterations (at
+    most the budget of bytes per iteration, each landed layer committed
+    independently), so serving keeps routing old tables for layers still
+    in flight and the per-iteration stall is the transfer seconds of
+    the *excess* over the budget only (the budgeted share hides under
+    the iteration's compute).  ``None`` is the synchronous baseline: the
+    whole plan lands — and stalls — in the iteration it fired."""
     ep = cfg.ep
     times: List[float] = []
     extra: Dict[str, List[float]] = {"ib_global": [], "fp4_ranks": [],
-                                     "m_d": []}
+                                     "m_d": [], "mig_stall_s": [],
+                                     "mig_hidden_s": []}
+    pending = None                     # (plan, [SlabChunk-like queue])
     for steps in generate_layers(cfg, n_layers):
         es = np.stack([np.stack([s.expert_load, s.expert_vis])
                        for s in steps])                       # [L, 2, E]
         mgr.observe(es)
         it = steps[0].it
-        extra_s = 0.0
-        plan = mgr.maybe_replan(it) if it > 0 else None
-        if plan is not None:
-            if commit_staged:
-                mgr.commit(plan)       # sim: the slab copy is atomic
-            # amortized per model MoE layer; layer-diff plans already
-            # charge changed layers only
-            extra_s = (plan.moved_bytes / ICI_BW) / max(g.n_moe_layers, 1)
+        stall_s = hidden_s = 0.0
+        if pending is None:
+            plan = mgr.maybe_replan(it) if it > 0 else None
+            if plan is not None:
+                chunks = [(l, mgr.layer_bytes(plan, l))
+                          for l in mgr.plan_layers(plan)]
+                if drain_bytes_per_iter is None:
+                    # synchronous: whole plan lands now, whole transfer
+                    # stalls this iteration (amortized per model layer;
+                    # layer-diff plans already cover changed layers only)
+                    mgr.commit(plan)
+                    stall_s = (plan.moved_bytes / ICI_BW) \
+                        / max(g.n_moe_layers, 1)
+                else:
+                    pending = (plan, chunks)
+        if pending is not None:
+            plan, chunks = pending
+            budget = max(int(drain_bytes_per_iter), 1)
+            batch = [chunks.pop(0)]
+            while chunks and sum(b for _, b in batch) + chunks[0][1] \
+                    <= budget:
+                batch.append(chunks.pop(0))
+            nbytes = sum(b for _, b in batch)
+            mgr.commit_layers(plan, [l for l, _ in batch])
+            excess = max(0, nbytes - budget)
+            stall_s = (excess / ICI_BW) / max(g.n_moe_layers, 1)
+            hidden_s = ((nbytes - excess) / ICI_BW) \
+                / max(g.n_moe_layers, 1)
+            if not chunks:
+                pending = None
         t_layers, ib_layers = [], []
         for l, s in enumerate(steps):
             load, _ = tr.rank_loads(s, rank_view(mgr, l), ep)
             t, _ = moe_layer_time(load, np.zeros(ep), g, ep, s.tokens,
-                                  extra_s)
+                                  stall_s)
             t_layers.append(t)
             ib_layers.append(float(load.max() / max(load.mean(), 1e-9)))
         times.append(float(np.mean(t_layers)))
@@ -557,8 +614,29 @@ def _sim_layers(cfg: tr.TraceConfig, g: MoEGeometry, n_layers: int,
         extra["ib_global"].append(float(np.max(ib_layers)))
         extra["fp4_ranks"].append(0.0)
         extra["m_d"].append(1.0)
+        extra["mig_stall_s"].append(stall_s)
+        extra["mig_hidden_s"].append(hidden_s)
     return _attach_migration(SimResult(name, np.array(times), 0.0, extra),
                              mgr)
+
+
+def _placement_layers_mgr(cfg, g, n_layers, per_layer, planner, interval,
+                          warmup, min_gain):
+    from repro.configs.base import PlacementConfig
+    from repro.placement import PlacementManager
+
+    pcfg = PlacementConfig(planner=planner, replan_every=interval,
+                           warmup_iters=warmup, min_gain=min_gain,
+                           per_layer=per_layer)
+    bpe = int(migration_bytes_layers(1, g, n_layers)) if per_layer \
+        else int(migration_bytes(1, g))
+    return PlacementManager.from_geometry(g.n_experts, pcfg, cfg.ep,
+                                          bytes_per_expert=bpe,
+                                          n_layers=n_layers)
+
+
+def _placement_rank_view(m, l):
+    return m.tables[l if m.per_layer else 0].e2r
 
 
 def sim_placement_layers(cfg, g, n_layers: int = 4, per_layer: bool = True,
@@ -568,34 +646,35 @@ def sim_placement_layers(cfg, g, n_layers: int = 4, per_layer: bool = True,
     """Placement on a depth-varying trace: ``per_layer=True`` plans one
     table per layer (layer-diff migration), ``False`` is the shared-table
     baseline that balances the depth-summed skew no single layer has."""
-    from repro.configs.base import PlacementConfig
-    from repro.placement import PlacementManager
-
-    pcfg = PlacementConfig(planner=planner, replan_every=interval,
-                           warmup_iters=warmup, min_gain=min_gain,
-                           per_layer=per_layer)
-    bpe = int(migration_bytes_layers(1, g, n_layers)) if per_layer \
-        else int(migration_bytes(1, g))
-    mgr = PlacementManager.from_geometry(g.n_experts, pcfg, cfg.ep,
-                                         bytes_per_expert=bpe,
-                                         n_layers=n_layers)
-
-    def rank_view(m, l):
-        return m.tables[l if m.per_layer else 0].e2r
-
-    return _sim_layers(cfg, g, n_layers, mgr, rank_view,
-                       commit_staged=False,
+    mgr = _placement_layers_mgr(cfg, g, n_layers, per_layer, planner,
+                                interval, warmup, min_gain)
+    return _sim_layers(cfg, g, n_layers, mgr, _placement_rank_view,
                        name=name or ("Placement/L" if per_layer
                                      else "Placement(shared)"))
 
 
-def sim_replication_layers(cfg, g, n_layers: int = 4,
-                           per_layer: bool = True, interval: int = 50,
-                           warmup: int = 8, min_gain: float = 0.02,
-                           spare_per_rank: int = 1, max_replicas: int = 2,
-                           name: Optional[str] = None) -> SimResult:
-    """Redundant experts on a depth-varying trace, per-layer replica sets
-    vs one shared set (token split modeled as fractional ownership)."""
+def sim_placement_async(cfg, g, n_layers: int = 4,
+                        bytes_per_iter: Optional[int] = None,
+                        planner: str = "least_loaded", interval: int = 50,
+                        warmup: int = 8, min_gain: float = 0.02,
+                        name: str = "Placement/L/async") -> SimResult:
+    """Async overlapped placement migration: the per-layer plan's chunks
+    drain one byte-budgeted batch per iteration (default budget: one
+    layer's worst-case slab, so every per-layer chunk fits), each landed
+    layer committed independently — per-iteration stall is bounded by
+    the budget excess while the synchronous arm charges the whole
+    transfer in the iteration the plan fired."""
+    mgr = _placement_layers_mgr(cfg, g, n_layers, True, planner,
+                                interval, warmup, min_gain)
+    if bytes_per_iter is None:
+        bytes_per_iter = int(g.n_experts
+                             * migration_bytes_layers(1, g, n_layers))
+    return _sim_layers(cfg, g, n_layers, mgr, _placement_rank_view,
+                       name=name, drain_bytes_per_iter=bytes_per_iter)
+
+
+def _replication_layers_mgr(cfg, g, n_layers, per_layer, interval, warmup,
+                            min_gain, spare_per_rank, max_replicas):
     from repro.configs.base import ReplicationConfig
     from repro.replication import ReplicaManager
 
@@ -605,14 +684,46 @@ def sim_replication_layers(cfg, g, n_layers: int = 4,
                               max_replicas=max_replicas)
     bpe = int(migration_bytes_layers(1, g, n_layers)) if per_layer \
         else int(migration_bytes(1, g))
-    mgr = ReplicaManager.from_geometry(g.n_experts, rpcfg, cfg.ep,
-                                       bytes_per_expert=bpe,
-                                       n_layers=n_layers)
+    return ReplicaManager.from_geometry(g.n_experts, rpcfg, cfg.ep,
+                                        bytes_per_expert=bpe,
+                                        n_layers=n_layers)
 
-    def rank_view(m, l):
-        return m.rsets[l if m.per_layer else 0].ownership_matrix()
 
-    return _sim_layers(cfg, g, n_layers, mgr, rank_view,
-                       commit_staged=True,
+def _replication_rank_view(m, l):
+    return m.rsets[l if m.per_layer else 0].ownership_matrix()
+
+
+def sim_replication_layers(cfg, g, n_layers: int = 4,
+                           per_layer: bool = True, interval: int = 50,
+                           warmup: int = 8, min_gain: float = 0.02,
+                           spare_per_rank: int = 1, max_replicas: int = 2,
+                           name: Optional[str] = None) -> SimResult:
+    """Redundant experts on a depth-varying trace, per-layer replica sets
+    vs one shared set (token split modeled as fractional ownership)."""
+    mgr = _replication_layers_mgr(cfg, g, n_layers, per_layer, interval,
+                                  warmup, min_gain, spare_per_rank,
+                                  max_replicas)
+    return _sim_layers(cfg, g, n_layers, mgr, _replication_rank_view,
                        name=name or ("Replicate/L" if per_layer
                                      else "Replicate(shared)"))
+
+
+def sim_replication_async(cfg, g, n_layers: int = 4,
+                          bytes_per_iter: Optional[int] = None,
+                          interval: int = 50, warmup: int = 8,
+                          min_gain: float = 0.02, spare_per_rank: int = 1,
+                          max_replicas: int = 2,
+                          name: str = "Replicate/L/async") -> SimResult:
+    """Async overlapped replica add/drop: staged per-layer replica plans
+    drain chunk-by-chunk (a replica becomes routable as its layer's slab
+    lands), bounding the per-iteration stall by the byte budget."""
+    mgr = _replication_layers_mgr(cfg, g, n_layers, True, interval,
+                                  warmup, min_gain, spare_per_rank,
+                                  max_replicas)
+    if bytes_per_iter is None:
+        # worst-case layer chunk: every slot of one layer sourced
+        # cross-rank — any real chunk fits the budget
+        bytes_per_iter = int((g.n_experts + cfg.ep * spare_per_rank)
+                             * migration_bytes_layers(1, g, n_layers))
+    return _sim_layers(cfg, g, n_layers, mgr, _replication_rank_view,
+                       name=name, drain_bytes_per_iter=bytes_per_iter)

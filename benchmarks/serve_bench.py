@@ -21,8 +21,12 @@ pin the exact request stream for policy A/Bs:
 
 ``--arm`` selects one of the comparison arms of the paper's baseline
 axis (off / realb / placement / realb+placement / replicate /
-realb+replicate, plus the ``/L`` per-layer variants that plan one table
-per scanned MoE block with layer-diff migration) and implies a virtual
+realb+replicate, the ``/L`` per-layer variants that plan one table per
+scanned MoE block with layer-diff migration, and the ``/async`` arms
+that drain each staged plan as byte-budgeted per-layer slab chunks
+overlapped with serving — ``--migrate-async`` /
+``--migrate-bytes-per-iter``, stall vs hidden migration seconds split
+out in the summary) and implies a virtual
 EP topology (``--virtual-ep``, default 4) so IB_d, FP4 duty, token-split
 duty and migration bytes are meaningful in a single-device virtual-time
 run; the plain ``--policy`` flag keeps the original placement-free
@@ -62,20 +66,24 @@ POLICIES = {
 }
 
 # the serving arms of the load-balancing comparison:
-# (policy, expert-layout manager kind, per-layer tables)
+# (policy, expert-layout manager kind, per-layer tables, async migration)
 ARMS = {
-    "off": ("off", None, False),
-    "realb": ("realb", None, False),
-    "placement": ("off", "placement", False),
-    "realb+placement": ("realb", "placement", False),
-    "replicate": ("off", "replication", False),
-    "realb+replicate": ("realb", "replication", False),
+    "off": ("off", None, False, False),
+    "realb": ("realb", None, False, False),
+    "placement": ("off", "placement", False, False),
+    "realb+placement": ("realb", "placement", False, False),
+    "replicate": ("off", "replication", False, False),
+    "realb+replicate": ("realb", "replication", False, False),
     # per-layer variants: one table per scanned MoE block, layer-diff
     # migration (changed layers only)
-    "placement/L": ("off", "placement", True),
-    "realb+placement/L": ("realb", "placement", True),
-    "replicate/L": ("off", "replication", True),
-    "realb+replicate/L": ("realb", "replication", True),
+    "placement/L": ("off", "placement", True, False),
+    "realb+placement/L": ("realb", "placement", True, False),
+    "replicate/L": ("off", "replication", True, False),
+    "realb+replicate/L": ("realb", "replication", True, False),
+    # async overlapped migration: per-layer slab chunks drain one
+    # byte-budgeted batch per iteration; stall vs hidden seconds split
+    "placement/L/async": ("off", "placement", True, True),
+    "replicate/L/async": ("off", "replication", True, True),
 }
 
 
@@ -99,6 +107,17 @@ def parse_args(argv=None):
                     help="per-MoE-layer placement/replication tables "
                          "(one table per scanned block, layer-diff "
                          "migration); the /L arms imply this")
+    ap.add_argument("--migrate-async", action="store_true",
+                    help="asynchronous overlapped migration: drain a "
+                         "staged plan as byte-budgeted per-layer slab "
+                         "chunks across serving iterations (each layer's "
+                         "table commits as its slab lands) instead of one "
+                         "synchronous whole-plan stall; the /async arms "
+                         "imply this")
+    ap.add_argument("--migrate-bytes-per-iter", type=int, default=0,
+                    help="explicit async chunk budget in bytes per "
+                         "iteration (0 = derive from the measured "
+                         "bytes/s EWMA x recent iteration seconds)")
     ap.add_argument("--decode-replan-every", type=int, default=0,
                     help="decode iterations between decode-regime "
                          "replans, planned from the predictor's decode "
@@ -169,12 +188,13 @@ def build_stream(args, vocab_size: int, max_prompt: int
 
 
 def resolve_arm(args):
-    """Apply --arm to (policy, manager kind, per-layer, virtual_ep) in
-    place; returns the manager kind."""
+    """Apply --arm to (policy, manager kind, per-layer, async migration,
+    virtual_ep) in place; returns the manager kind."""
     kind = None
     if args.arm is not None and args.arm != "all":
-        args.policy, kind, per_layer = ARMS[args.arm]
+        args.policy, kind, per_layer, migrate_async = ARMS[args.arm]
         args.per_layer = args.per_layer or per_layer
+        args.migrate_async = args.migrate_async or migrate_async
         if args.virtual_ep is None:
             args.virtual_ep = 4
     return kind
@@ -246,7 +266,10 @@ def serve(args, cfg, params, specs: List[RequestSpec]):
                  telemetry=telemetry, cost_model=cost,
                  placement=manager, virtual_ep=args.virtual_ep,
                  capacity_margin=(args.replica_capacity_margin or None)
-                 if kind == "replication" else None)
+                 if kind == "replication" else None,
+                 migrate_async=args.migrate_async,
+                 migrate_bytes_per_iter=args.migrate_bytes_per_iter
+                 or None)
 
     closed = None
     prof = profile(args.workload)
@@ -294,6 +317,9 @@ def serve(args, cfg, params, specs: List[RequestSpec]):
                     pending.append(spec)
             pending.sort(key=lambda s: s.arrival)
             n_finished_seen = len(eng.scheduler.finished)
+    # finish any in-flight async chunk queue so the migration accounting
+    # is complete and the engine is left in a checkpointable state
+    eng.drain_migrations()
     return telemetry, eng, realized, time.monotonic() - t0
 
 
@@ -308,14 +334,26 @@ def summarize_run(telemetry: Telemetry, eng: Engine, wall: float) -> Dict:
     s["generated_tokens"] = out_toks
     s["throughput_tok_per_s"] = (in_toks + out_toks) / max(wall, 1e-9)
     s["wall_s"] = wall
+    # engine-side cumulative accounting covers tail drains (e.g. the
+    # post-loop drain_migrations()) that never reached a recorded
+    # iteration — telemetry only sees IterStats, so its totals would
+    # under-count async arms and disagree with migration_bytes_per_layer
+    s["migration_bytes_total"] = int(eng.migration_bytes_moved)
+    s["migration_stall_s"] = eng.migration_stall_s
+    s["migration_s_total"] = eng.migration_stall_s
+    s["migration_hidden_s"] = eng.migration_hidden_s
     mgr = eng._placement
     if mgr is not None:
         # per-layer migration traffic: [n_tables] cumulative bytes, so
         # the CI perf trajectory captures WHERE the migration cost lands
-        # (changed layers only under layer-diff plans)
+        # (changed layers only under layer-diff plans); byte counts are
+        # integral end-to-end
         s["n_tables"] = int(getattr(mgr, "n_tables", 1))
+        s["n_migrations"] = int(mgr.n_migrations)
         s["migration_bytes_per_layer"] = [
-            float(b) for b in getattr(mgr, "migrated_bytes_per_layer", [])]
+            int(b) for b in getattr(mgr, "migrated_bytes_per_layer", [])]
+        s["migration_bw_measured"] = float(mgr.bandwidth) \
+            if mgr.bandwidth.calibrated else None
     return s
 
 
@@ -332,6 +370,8 @@ def write_json_out(args, results: Dict[str, Dict]) -> None:
                      spare_per_rank=args.spare_per_rank,
                      max_replicas=args.max_replicas,
                      per_layer=args.per_layer,
+                     migrate_async=args.migrate_async,
+                     migrate_bytes_per_iter=args.migrate_bytes_per_iter,
                      decode_replan_every=args.decode_replan_every,
                      replica_capacity_margin=args.replica_capacity_margin,
                      cost_gate=args.cost_gate,
@@ -350,17 +390,19 @@ def print_comparison(results: Dict[str, Dict]) -> None:
         v = d.get(k, {})
         return v.get(sub, default) if isinstance(v, dict) else default
 
-    print(f"\n{'arm':16s} {'tok/s':>8s} {'ttft p50':>9s} {'ttft p99':>9s} "
+    print(f"\n{'arm':18s} {'tok/s':>8s} {'ttft p50':>9s} {'ttft p99':>9s} "
           f"{'tpot p50':>9s} {'IB mean':>8s} {'IB p99':>7s} {'fp4':>5s} "
-          f"{'split':>6s} {'mig MB':>7s}")
+          f"{'split':>6s} {'mig MB':>7s} {'stall ms':>9s} {'hidden ms':>9s}")
     for name, s in results.items():
-        print(f"{name:16s} {s['throughput_tok_per_s']:8.0f} "
+        print(f"{name:18s} {s['throughput_tok_per_s']:8.0f} "
               f"{q(s, 'ttft', 'p50'):9.4f} {q(s, 'ttft', 'p99'):9.4f} "
               f"{q(s, 'tpot', 'p50'):9.4f} "
               f"{q(s, 'ib_global', 'mean'):8.3f} "
               f"{q(s, 'ib_global', 'p99'):7.3f} "
               f"{s['fp4_duty']:5.2f} {s['split_duty']:6.2f} "
-              f"{s['migration_bytes_total'] / 1e6:7.2f}")
+              f"{s['migration_bytes_total'] / 1e6:7.2f} "
+              f"{s['migration_stall_s'] * 1e3:9.2f} "
+              f"{s['migration_hidden_s'] * 1e3:9.2f}")
 
 
 def main(argv=None) -> int:
@@ -399,10 +441,12 @@ def main(argv=None) -> int:
         realized = specs
         for name in ARMS:
             sub = argparse.Namespace(**vars(args))
-            # per-layer is the arm's own property here: a sticky
-            # --per-layer would silently turn the shared-table baseline
-            # arms into mislabeled duplicates of the /L arms
-            sub.arm, sub.record, sub.per_layer = name, None, False
+            # per-layer / async are the arm's own properties here: a
+            # sticky --per-layer or --migrate-async would silently turn
+            # the baseline arms into mislabeled duplicates of the /L and
+            # /async arms
+            sub.arm, sub.record = name, None
+            sub.per_layer, sub.migrate_async = False, False
             telemetry, eng, realized, wall = serve(sub, cfg, params, specs)
             results[name] = summarize_run(telemetry, eng, wall)
             print(f"  {name}: {results[name]['n_requests_served']} served, "
@@ -468,7 +512,8 @@ def main(argv=None) -> int:
           f"split duty: {s['split_duty']:.2f}")
     print(f"migration: {s['n_migrations']} events, "
           f"{s['migration_bytes_total'] / 1e6:.2f} MB moved, "
-          f"{s['migration_s_total'] * 1e3:.2f} ms charged")
+          f"{s['migration_stall_s'] * 1e3:.2f} ms stalled, "
+          f"{s['migration_hidden_s'] * 1e3:.2f} ms hidden")
     return 0
 
 

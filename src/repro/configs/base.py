@@ -238,6 +238,16 @@ LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
 ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
 
 
+# Nominal expert-slab migration bandwidth (bytes/s, ICI-class link).  The
+# single source shared by PlacementConfig / ReplicationConfig defaults,
+# the analytic cost model's ICI constant (benchmarks.costmodel.ICI_BW)
+# and the measured-bandwidth EWMA's prior
+# (repro.placement.migrate.MigrationBandwidth) — so sims, replan gates
+# and engine accounting price the same bytes at the same rate until a
+# measured value replaces it.
+MIGRATION_BW_DEFAULT = 50e9
+
+
 @dataclass(frozen=True)
 class ReaLBConfig:
     """Paper hyper-parameters (§4.2, §5.1)."""
@@ -277,8 +287,10 @@ class PlacementConfig:
     vis_tol: float = 0.25          # modality_aware: max |r_v| difference for
     #                                a load-balancing swap
     max_swaps: int = 64            # modality_aware: refinement swap budget
-    migration_bw: float = 50e9     # bytes/s charged for moved expert slabs
-    #                                in virtual-time serving runs (ICI-class)
+    migration_bw: float = MIGRATION_BW_DEFAULT
+    #                              # bytes/s charged for moved expert slabs
+    #                                in virtual-time serving runs (ICI-class);
+    #                                the prior of the measured-bandwidth EWMA
     per_layer: bool = False        # one table per scanned MoE block instead
     #                                of one shared table; migration becomes
     #                                a layer-diff (changed layers only)
@@ -311,7 +323,8 @@ class ReplicationConfig:
     ewma_alpha: float = 0.25       # predictor smoothing (shared w/ placement)
     min_gain: float = 0.02         # skip re-replication below this predicted
     #                                relative reduction of the max rank load
-    migration_bw: float = 50e9     # bytes/s charged for copied replica slabs
+    migration_bw: float = MIGRATION_BW_DEFAULT
+    #                              # bytes/s charged for copied replica slabs
     per_layer: bool = False        # one replica set per scanned MoE block;
     #                                replica adds/drops diff per layer
     decode_halflife: float = 0.0   # decode-window EWMA half-life in decode

@@ -10,9 +10,11 @@ compression absorbs the bursts no plan can anticipate.  See
 ``repro.serving.engine`` for the serving-side loop.
 """
 from repro.placement.manager import PlacementManager
-from repro.placement.migrate import (LayerMigrationPlan, MigrationPlan,
+from repro.placement.migrate import (LayerMigrationPlan, MigrationBandwidth,
+                                     MigrationPlan, apply_layers_to_params,
                                      apply_to_params, diff, diff_layers,
-                                     expert_bytes, moe_param_paths)
+                                     expert_bytes, moe_param_paths,
+                                     subset_plan)
 from repro.placement.planner import (PLANNERS, plan_identity,
                                      plan_least_loaded, plan_modality_aware,
                                      plan_placement)
@@ -21,7 +23,8 @@ from repro.placement.table import PlacementTable
 
 __all__ = [
     "PlacementManager", "MigrationPlan", "LayerMigrationPlan",
-    "apply_to_params", "diff", "diff_layers",
+    "MigrationBandwidth", "apply_to_params", "apply_layers_to_params",
+    "subset_plan", "diff", "diff_layers",
     "expert_bytes", "moe_param_paths", "PLANNERS", "plan_identity",
     "plan_least_loaded", "plan_modality_aware", "plan_placement",
     "EWMAPredictor", "PlacementTable",

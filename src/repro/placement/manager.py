@@ -3,10 +3,16 @@
 Owns the current placement tables, the EWMA predictor and the replan
 cadence.  The engine feeds it per-iteration expert stats (`observe`),
 asks it every iteration whether a replan is due (`maybe_replan` → a
-migration plan or None) and applies the returned weight permutation
-itself (the manager never touches device arrays).  Cumulative migration
+*staged* migration plan or None) and applies the returned weight
+permutation itself (the manager never touches device arrays) before
+committing — the whole plan at once (`commit`), or layer by layer as
+each slab lands under async overlapped migration (`commit_layers`, see
+``repro.serving.async_migrate``).  Until commit the old tables stay
+routable, and no further replan can fire.  Cumulative migration
 accounting lives here so telemetry and benchmarks can report the
-placement-vs-ReaLB overhead trade-off directly.
+placement-vs-ReaLB overhead trade-off directly; a measured-bandwidth
+EWMA (``bandwidth``) prices the transfers once the engine has timed
+real applies.
 
 Per-layer tables (``PlacementConfig.per_layer``): one table per scanned
 MoE block instead of one shared table.  The predictor's per-layer state
@@ -40,32 +46,49 @@ Plan = Union[migrate.MigrationPlan, migrate.LayerMigrationPlan]
 
 
 class ReplanDiscipline:
-    """Replan cadence + decode-window + cost-gate discipline shared by
-    :class:`PlacementManager` and
+    """Replan cadence + decode-window + cost-gate + staged-commit
+    discipline shared by :class:`PlacementManager` and
     :class:`~repro.replication.manager.ReplicaManager` — their configs
     carry the same ``enabled`` / ``replan_every`` / ``warmup_iters`` /
     ``decode_replan_every`` fields.  Hosts the manager-agnostic half of
-    ``maybe_replan`` so the two control loops cannot drift apart."""
+    ``maybe_replan`` so the two control loops cannot drift apart.
+
+    Staged commit: every plan returned by ``maybe_replan`` is *pending*
+    — the routable tables (``device_tables``) are unchanged until the
+    engine has landed the weight slabs and calls :meth:`commit` (whole
+    plan, the synchronous path) or :meth:`commit_layers` (one chunk of
+    layers at a time, the async path — each layer's table flips
+    independently as its slab lands).  While a plan is in flight
+    ``maybe_replan`` is a guarded no-op: a second replan overwriting the
+    staged plan would desynchronize the commit protocol (the engine
+    would gather slabs for one plan and flip tables for another).
+    :meth:`abort` drops the pending plan — the old tables stay routable
+    and consistent with the untouched weights — which is also the
+    supersede path: abort, then let the next cadence point re-plan from
+    fresher statistics."""
 
     # filled in by the concrete manager's _setup
     predictor: EWMAPredictor
     cost_gate = None
     last_replan_iter = -1
     _decode_since_replan = 0
+    _pending = None                 # staged plan awaiting its slabs
+    _pending_remaining = None       # chunk (layer) indices not yet landed
 
     def _discipline_cfg(self):
         """The PlacementConfig / ReplicationConfig of the manager."""
         raise NotImplementedError
 
     def _replan_blocked(self) -> bool:
-        """Manager-specific extra guard (identity planner, staged plan)."""
+        """Manager-specific extra guard (e.g. the identity planner)."""
         return False
 
     def _cadence(self, it: int) -> Optional[str]:
         """The prediction regime a replan at ``it`` should plan from, or
         None when no cadence is due."""
         p = self._discipline_cfg()
-        if not p.enabled or self._replan_blocked() \
+        if not p.enabled or self._pending is not None \
+                or self._replan_blocked() \
                 or self.predictor.n_obs < p.warmup_iters \
                 or it == self.last_replan_iter:
             return None
@@ -93,6 +116,67 @@ class ReplanDiscipline:
                                                     n_moved)
             old_loads, new_loads = old_loads.sum(0), new_loads.sum(0)
         return self.cost_gate.accept(old_loads, new_loads, n_moved)
+
+    # -- staged commit (chunk = one layer of a layer-diff plan) -----------
+    @property
+    def in_flight(self):
+        """The staged plan whose slabs have not all landed, or None."""
+        return self._pending
+
+    def plan_layers(self, plan) -> List[int]:
+        """The chunk indices of a plan: changed layers of a layer-diff,
+        ``[0]`` (one whole-plan chunk) for a shared plan."""
+        changed = getattr(plan, "changed_layers", None)
+        return [0] if changed is None else [int(l) for l in changed]
+
+    def layer_bytes(self, plan, layer: int) -> int:
+        """Transfer bytes of one chunk (manager-specific pricing)."""
+        raise NotImplementedError
+
+    def _stage(self, plan):
+        assert self._pending is None, \
+            "staging a plan over an in-flight one (commit or abort first)"
+        self._pending = plan
+        self._pending_remaining = set(self.plan_layers(plan))
+        return plan
+
+    def _commit_one_layer(self, plan, layer: int) -> None:
+        """Flip one landed layer's routable table + book its bytes."""
+        raise NotImplementedError
+
+    def commit_layers(self, plan, layers) -> bool:
+        """Make ``layers``' staged tables routable — call only after
+        exactly those layers' weight slabs have been gathered into the
+        new layout (``migrate.apply_layers_to_params``).  Returns True
+        once the whole plan has landed (the migration is then counted
+        and a new replan may fire)."""
+        assert self._pending is plan, "commit of a plan that is not staged"
+        for layer in layers:
+            layer = int(layer)
+            assert layer in self._pending_remaining, \
+                (layer, sorted(self._pending_remaining))
+            self._pending_remaining.discard(layer)
+            self._commit_one_layer(plan, layer)
+        if self._pending_remaining:
+            return False
+        self.n_migrations += 1
+        self._decode_since_replan = 0
+        self._pending = None
+        self._pending_remaining = None
+        return True
+
+    def commit(self, plan) -> None:
+        """Make the whole staged plan routable (the synchronous path —
+        every slab was gathered in one ``apply_to_params``)."""
+        assert self._pending is plan, "commit of a plan that is not staged"
+        self.commit_layers(plan, sorted(self._pending_remaining))
+
+    def abort(self) -> None:
+        """Drop the staged plan (weights untouched for its not-yet-landed
+        layers; already-committed layers stay routable — their slabs did
+        land).  The old tables remain consistent with the weights."""
+        self._pending = None
+        self._pending_remaining = None
 
     # -- per-layer replan loop (hooks below are manager-specific) ---------
     def _layer_states(self) -> list:
@@ -209,6 +293,13 @@ class PlacementManager(ReplanDiscipline):
         # ReplanCostGate) — a replan then fires only when the predicted
         # layer-time savings over its horizon exceed the migration cost
         self.cost_gate = cost_gate
+        # measured-bandwidth EWMA pricing this manager's slab transfers;
+        # the engine feeds it timed applies, migration_seconds and the
+        # cost gate read it (single-sourced with the analytic model)
+        self.bandwidth = migrate.MigrationBandwidth(pcfg.migration_bw)
+        if cost_gate is not None \
+                and getattr(cost_gate, "bandwidth", False) is None:
+            cost_gate.bandwidth = self.bandwidth
         # cumulative accounting
         self.n_migrations = 0
         self.migrated_bytes = 0
@@ -216,6 +307,8 @@ class PlacementManager(ReplanDiscipline):
         self.migrated_bytes_per_layer = np.zeros(n_tables, np.int64)
         self.last_replan_iter = -1
         self._decode_since_replan = 0
+        self._pending = None
+        self._pending_remaining = None
 
     @property
     def per_layer(self) -> bool:
@@ -270,22 +363,28 @@ class PlacementManager(ReplanDiscipline):
     def _replan_blocked(self) -> bool:
         return self.pcfg.planner == "identity"
 
-    def _book(self, plan: Plan) -> Plan:
-        self.n_migrations += 1
-        self.migrated_bytes += plan.moved_bytes
-        self.migrated_experts += plan.n_moved
+    def layer_bytes(self, plan: Plan, layer: int) -> int:
         if isinstance(plan, migrate.LayerMigrationPlan):
-            self.migrated_bytes_per_layer += \
-                plan.moved_per_layer * self.bytes_per_expert
+            return int(plan.moved_per_layer[layer]) * self.bytes_per_expert
+        return int(plan.moved_bytes)
+
+    def _commit_one_layer(self, plan: Plan, layer: int) -> None:
+        b = self.layer_bytes(plan, layer)
+        if isinstance(plan, migrate.LayerMigrationPlan):
+            self.tables[layer] = plan.new_tables[layer]
+            self.migrated_experts += int(plan.moved_per_layer[layer])
         else:
-            self.migrated_bytes_per_layer[0] += plan.moved_bytes
-        self._decode_since_replan = 0
-        return plan
+            self.tables[0] = plan.new_table
+            self.migrated_experts += plan.n_moved
+        self.migrated_bytes += b
+        self.migrated_bytes_per_layer[layer] += b
 
     def maybe_replan(self, it: int) -> Optional[Plan]:
-        """Return the weight permutation to apply at iteration ``it``, or
-        None.  Updates the current table(s) and the migration accounting
-        when a plan is returned."""
+        """Stage the weight permutation to apply at iteration ``it``, or
+        None.  The returned plan is *pending*: the routable table(s) and
+        the migration accounting are unchanged until :meth:`commit` /
+        :meth:`commit_layers` — which the engine calls only after the
+        slab gather landed the new weights."""
         regime = self._cadence(it)
         if regime is None:
             return None
@@ -307,9 +406,8 @@ class PlacementManager(ReplanDiscipline):
         if not self._gate_accept(self.table.rank_loads(load),
                                  new.rank_loads(load), plan.n_moved):
             return None
-        self.table = new
         self.last_replan_iter = it
-        return self._book(plan)
+        return self._stage(plan)
 
     # per-layer replan hooks (loop lives in ReplanDiscipline)
     def _layer_states(self) -> list:
@@ -327,12 +425,13 @@ class PlacementManager(ReplanDiscipline):
 
     def _accept_layer_plan(self, plan: migrate.LayerMigrationPlan,
                            new_states: list) -> migrate.LayerMigrationPlan:
-        self.tables = new_states
-        return self._book(plan)
+        return self._stage(plan)
 
     def migration_seconds(self, moved_bytes: int) -> float:
-        """Virtual-time cost of moving ``moved_bytes`` over the EP fabric."""
-        return moved_bytes / max(self.pcfg.migration_bw, 1.0)
+        """Virtual-time cost of moving ``moved_bytes`` over the EP fabric
+        — priced at the measured-bandwidth EWMA (the configured
+        ``migration_bw`` until the first timed apply calibrates it)."""
+        return self.bandwidth.seconds(moved_bytes)
 
     # -- checkpointing -----------------------------------------------------
     def state_dict(self) -> Dict[str, np.ndarray]:
@@ -370,6 +469,8 @@ class PlacementManager(ReplanDiscipline):
                       np.zeros(self.n_tables)), np.int64).reshape(
             self.n_tables)
         self._decode_since_replan = 0
+        self._pending = None
+        self._pending_remaining = None
         self.predictor.load_state_dict(
             {k[len("pred_"):]: v for k, v in state.items()
              if k.startswith("pred_")})

@@ -15,19 +15,73 @@ expert id and never migrate, and attention / shared-expert / M-state
 tensors are untouched.
 
 ``MigrationPlan`` also carries the accounting the benchmarks need: which
-experts physically moved rank, and how many bytes of weights that is.
+experts physically moved rank, and how many bytes of weights that is —
+plus the *pending* new table(s), so managers can stage a plan (old table
+stays routable) and commit per layer as each slab lands
+(:mod:`repro.serving.async_migrate`).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import MIGRATION_BW_DEFAULT, ModelConfig
 from repro.placement.table import PlacementTable
 
 MOE_WEIGHT_KEYS = ("w_gate", "w_up", "w_down")
+
+
+class MigrationBandwidth:
+    """Measured slab-transfer bandwidth: an EWMA of observed
+    ``apply_to_params`` bytes/s, seeded with a nominal prior.
+
+    One instance is shared by everything that prices migration bytes —
+    the manager's ``migration_seconds`` (virtual-clock charge), the async
+    executor's per-iteration chunk budget, and the replan cost gates
+    (``benchmarks.costmodel.ReplanCostGate.bandwidth``) — so a measured
+    value replaces the static ICI constant *everywhere at once*
+    (ROADMAP "migration-bandwidth calibration").  ``float(bw)`` reads the
+    current bytes/s.
+    """
+
+    def __init__(self, init_bw: float = MIGRATION_BW_DEFAULT,
+                 alpha: float = 0.25):
+        self.init_bw = float(init_bw)
+        self.alpha = float(alpha)
+        self._bw = float(init_bw)
+        self.n_obs = 0
+
+    def observe(self, nbytes: int, seconds: float) -> None:
+        """One timed slab transfer (wall clock of the apply)."""
+        if nbytes <= 0 or seconds <= 0:
+            return
+        sample = float(nbytes) / float(seconds)
+        # first measurement replaces the prior outright: a nominal ICI
+        # constant should not anchor a host whose fabric is 1000x off
+        self._bw = sample if self.n_obs == 0 \
+            else (1.0 - self.alpha) * self._bw + self.alpha * sample
+        self.n_obs += 1
+
+    @property
+    def bytes_per_s(self) -> float:
+        return self._bw
+
+    @property
+    def calibrated(self) -> bool:
+        return self.n_obs > 0
+
+    def __float__(self) -> float:
+        return self._bw
+
+    def seconds(self, nbytes: int) -> float:
+        """Transfer time of ``nbytes`` at the current estimate."""
+        return float(nbytes) / max(self._bw, 1.0)
+
+    def reset(self) -> None:
+        self._bw = self.init_bw
+        self.n_obs = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +89,7 @@ class MigrationPlan:
     gather_idx: np.ndarray     # [E] new physical row -> old physical row
     moved_experts: np.ndarray  # logical expert ids whose rank changed
     moved_bytes: int           # total weight bytes crossing ranks
+    new_table: Optional[PlacementTable] = None  # pending (staged) table
 
     @property
     def n_moved(self) -> int:
@@ -58,6 +113,7 @@ class LayerMigrationPlan:
     gather_idx: np.ndarray      # [L, E] per-layer new row -> old row
     moved_per_layer: np.ndarray  # [L] experts that changed rank per layer
     moved_bytes: int            # cross-rank bytes, changed layers only
+    new_tables: tuple = ()      # pending (staged) per-layer tables
 
     @property
     def n_layers(self) -> int:
@@ -102,7 +158,8 @@ def diff(old: PlacementTable, new: PlacementTable,
     moved = np.flatnonzero(old.e2r != new.e2r)
     return MigrationPlan(gather_idx=gather.astype(np.int64),
                          moved_experts=moved,
-                         moved_bytes=int(moved.shape[0]) * bytes_per_expert)
+                         moved_bytes=int(moved.shape[0]) * bytes_per_expert,
+                         new_table=new)
 
 
 def diff_layers(old_tables, new_tables,
@@ -123,7 +180,8 @@ def diff_layers(old_tables, new_tables,
     return LayerMigrationPlan(
         gather_idx=np.stack(gather).astype(np.int64),
         moved_per_layer=moved,
-        moved_bytes=int(moved.sum()) * bytes_per_expert)
+        moved_bytes=int(moved.sum()) * bytes_per_expert,
+        new_tables=tuple(new_tables))
 
 
 def moe_param_paths(params: Dict[str, Any]) -> List[Tuple[str, str]]:
@@ -181,6 +239,45 @@ def apply_to_params(params: Dict[str, Any], plan) -> Dict[str, Any]:
         grp[lname] = lp
         out[group] = grp
     return out
+
+
+@dataclasses.dataclass(frozen=True)
+class _LayerSubsetPlan:
+    """A plan-shaped view gathering only a subset of a layer plan's rows
+    (identity rows everywhere else) — what ``apply_to_params`` needs."""
+    gather_idx: np.ndarray
+    is_noop: bool = False
+
+
+def subset_plan(plan, layers: Sequence[int]):
+    """The plan restricted to ``layers``: selected layers keep their
+    gather rows, every other layer gets the identity row.
+
+    For a *shared* (1-D) plan the only meaningful subset is the whole
+    plan — layer index 0 stands for "the one shared chunk"."""
+    idx = np.asarray(plan.gather_idx)
+    sel = sorted({int(l) for l in layers})
+    if idx.ndim == 1:
+        assert sel == [0], \
+            (sel, "a shared plan has exactly one chunk (layer 0)")
+        return plan
+    assert all(0 <= l < idx.shape[0] for l in sel), (sel, idx.shape)
+    full = np.tile(np.arange(idx.shape[1], dtype=np.int64),
+                   (idx.shape[0], 1))
+    full[sel] = idx[sel]
+    return _LayerSubsetPlan(gather_idx=full, is_noop=not sel)
+
+
+def apply_layers_to_params(params: Dict[str, Any], plan,
+                           layers: Sequence[int]) -> Dict[str, Any]:
+    """Chunked subset apply: gather only ``layers``' weight slabs of a
+    per-layer plan (placement or replication — anything with an
+    ``[L, E|S]`` ``gather_idx``), leaving every other layer's slab
+    untouched.  The unit of overlap of asynchronous migration
+    (:mod:`repro.serving.async_migrate`): applying every changed layer,
+    one call per layer, is exactly equivalent to one ``apply_to_params``
+    of the whole plan."""
+    return apply_to_params(params, subset_plan(plan, layers))
 
 
 def jnp_take(w, idx, axis: int):

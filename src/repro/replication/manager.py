@@ -9,8 +9,14 @@ Two-phase consistency (a replica is routable only after its slab lands):
 ``maybe_replan`` *stages* a plan and keeps serving the old set; the
 engine gathers the weight slabs (``placement.migrate.apply_to_params``)
 and only then calls ``commit(plan)``, which flips the routable table and
-books the accounting.  A crashed / abandoned apply (``abort``) leaves the
-old set fully consistent with the untouched weights.
+books the accounting.  Under async overlapped migration the commit is
+per layer: ``commit_layers(plan, layers)`` flips exactly the layers
+whose slab chunks have landed (``repro.serving.async_migrate``), so the
+consistency rule holds layer-wise while the rest of the plan drains.  A
+crashed / abandoned apply (``abort``) leaves the old set fully
+consistent with the untouched weights.  The staging/commit machinery is
+shared with :class:`~repro.placement.manager.PlacementManager` via
+``ReplanDiscipline``.
 
 Per-layer replica sets (``ReplicationConfig.per_layer``): one set per
 scanned MoE block, each planned from its own predictor row; the staged
@@ -94,7 +100,14 @@ class ReplicaManager(ReplanDiscipline):
                                        decode_halflife=rpcfg.decode_halflife)
         self.bytes_per_expert = bytes_per_expert
         self.cost_gate = cost_gate
+        # measured-bandwidth EWMA pricing this manager's slab copies;
+        # shared with the cost gate so both price the same bytes/s
+        self.bandwidth = pmigrate.MigrationBandwidth(rpcfg.migration_bw)
+        if cost_gate is not None \
+                and getattr(cost_gate, "bandwidth", False) is None:
+            cost_gate.bandwidth = self.bandwidth
         self._pending: Optional[Plan] = None
+        self._pending_remaining = None
         # cumulative accounting
         self.n_migrations = 0
         self.migrated_bytes = 0
@@ -196,9 +209,6 @@ class ReplicaManager(ReplanDiscipline):
     def _discipline_cfg(self) -> ReplicationConfig:
         return self.rpcfg
 
-    def _replan_blocked(self) -> bool:
-        return self._pending is not None
-
     def maybe_replan(self, it: int) -> Optional[Plan]:
         """Stage the slab gather to apply at iteration ``it``, or None.
 
@@ -228,9 +238,8 @@ class ReplicaManager(ReplanDiscipline):
                                  new.rank_loads(load),
                                  len(plan.crossrank_slots)):
             return None
-        self._pending = plan
         self.last_replan_iter = it
-        return plan
+        return self._stage(plan)
 
     # per-layer replan hooks (loop lives in ReplanDiscipline); the staged
     # layer-diff copies slabs for changed layers only, priced cross-rank
@@ -256,33 +265,30 @@ class ReplicaManager(ReplanDiscipline):
     def _accept_layer_plan(self, plan: migrate.LayerReplicaMigrationPlan,
                            new_states: list
                            ) -> migrate.LayerReplicaMigrationPlan:
-        self._pending = plan               # staged, routable only on commit
-        return plan
+        return self._stage(plan)           # staged, routable only on commit
 
-    def commit(self, plan: Plan) -> None:
-        """Make the staged set(s) routable — call only after the weight
-        slabs have been gathered into the new layout."""
-        assert self._pending is plan, "commit of a plan that is not staged"
+    def layer_bytes(self, plan: Plan, layer: int) -> int:
         if isinstance(plan, migrate.LayerReplicaMigrationPlan):
-            self.rsets = list(plan.new_sets)
-            self.migrated_bytes_per_layer += \
-                plan.crossrank_per_layer * self.bytes_per_expert
+            return int(plan.crossrank_per_layer[layer]) \
+                * self.bytes_per_expert
+        return int(plan.moved_bytes)
+
+    def _commit_one_layer(self, plan: Plan, layer: int) -> None:
+        b = self.layer_bytes(plan, layer)
+        if isinstance(plan, migrate.LayerReplicaMigrationPlan):
+            self.rsets[layer] = plan.new_sets[layer]
+            self.migrated_slots += int(plan.changed_per_layer[layer])
         else:
             self.rsets[0] = plan.new_set
-            self.migrated_bytes_per_layer[0] += plan.moved_bytes
-        self.n_migrations += 1
-        self.migrated_bytes += plan.moved_bytes
-        self.migrated_slots += plan.n_moved
-        self._decode_since_replan = 0
-        self._pending = None
-
-    def abort(self) -> None:
-        """Drop a staged plan (weights untouched, old set stays routable)."""
-        self._pending = None
+            self.migrated_slots += plan.n_moved
+        self.migrated_bytes += b
+        self.migrated_bytes_per_layer[layer] += b
 
     def migration_seconds(self, moved_bytes: int) -> float:
-        """Virtual-time cost of copying ``moved_bytes`` over the fabric."""
-        return moved_bytes / max(self.rpcfg.migration_bw, 1.0)
+        """Virtual-time cost of copying ``moved_bytes`` over the fabric
+        — priced at the measured-bandwidth EWMA (the configured
+        ``migration_bw`` until the first timed apply calibrates it)."""
+        return self.bandwidth.seconds(moved_bytes)
 
     # -- checkpointing -----------------------------------------------------
     def state_dict(self) -> Dict[str, np.ndarray]:
@@ -330,6 +336,7 @@ class ReplicaManager(ReplanDiscipline):
             self.n_tables)
         self.cum_slot_load = np.asarray(state["cum_slot_load"], np.float64)
         self._pending = None
+        self._pending_remaining = None
         self._decode_since_replan = 0
         self.predictor.load_state_dict(
             {k[len("pred_"):]: v for k, v in state.items()

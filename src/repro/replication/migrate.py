@@ -31,6 +31,8 @@ import numpy as np
 
 from repro.placement.migrate import (MOE_WEIGHT_KEYS, jnp_take,
                                      jnp_take_layers, moe_param_paths)
+from repro.placement.migrate import apply_layers_to_params as \
+    _apply_layers_to_params
 from repro.replication.replica_set import ReplicaSet
 
 
@@ -141,6 +143,17 @@ def diff_layers(old_sets, new_sets,
         crossrank_per_layer=cross,
         moved_bytes=int(cross.sum()) * bytes_per_expert,
         new_sets=tuple(new_sets))
+
+
+def apply_layers_to_params(params: Dict[str, Any], plan,
+                           layers) -> Dict[str, Any]:
+    """Chunked subset apply of a replica plan: gather only ``layers``'
+    slot slabs (identity rows elsewhere).  Replica ``gather_idx``
+    semantics are identical to placement's (new slot <- old slot), so
+    this delegates to :func:`repro.placement.migrate.
+    apply_layers_to_params`; a shared :class:`ReplicaMigrationPlan` is
+    one chunk (layer 0 = the whole plan)."""
+    return _apply_layers_to_params(params, plan, layers)
 
 
 def expand_moe_params(params: Dict[str, Any], rset) -> Dict[str, Any]:

@@ -45,6 +45,23 @@ threads the per-layer slice through its layer scan, and the manager's
 plans are layer-diffs whose slab traffic covers changed layers only.
 The engine code is identical either way — ``_place_args``/
 ``_maybe_migrate`` are shape-agnostic.
+
+Async overlapped migration (``migrate_async=True``): instead of landing
+a staged plan's whole slab permutation between two iterations, the
+engine drains it through a :class:`~repro.serving.async_migrate.
+MigrationExecutor` — one byte-budgeted batch of per-layer chunks per
+iteration, each landed layer's table committed independently
+(``manager.commit_layers``), so serving routes old tables for layers
+still in flight and new tables for landed ones.  Transfer seconds that
+fit the budget are *hidden* (overlapped with the iteration's forward —
+not charged to a virtual clock), only the excess *stalls*; both are
+split out in :class:`IterStats` (``migration_s`` = stall,
+``migration_hidden_s``).  Every apply — sync or async — is wall-timed
+and fed into the manager's measured-bandwidth EWMA, which prices
+``migration_seconds``, the chunk budget and the calibrated replan gate.
+While a plan is draining no new replan can fire, and checkpointing
+refuses cleanly (the in-flight params/table mix is not a restorable
+state).
 """
 from __future__ import annotations
 
@@ -78,8 +95,14 @@ class IterStats:
     batch_tokens: int = 0        # tokens the MoE actually saw (incl. pad)
     vis_frac: float = 0.0        # vision fraction of routed assignments
     drop_frac: float = 0.0       # capacity-dropped fraction of routed tokens
-    migration_bytes: float = 0.0  # expert weights moved before this iter
-    migration_s: float = 0.0     # virtual-time cost charged for the move
+    migration_bytes: int = 0     # expert weight bytes moved before this
+    #                              iter (integral end-to-end: plans count
+    #                              whole weight bytes, never fractions)
+    migration_s: float = 0.0     # migration seconds that STALLED serving
+    #                              (charged to a virtual clock; measured
+    #                              wall seconds under wall clocks)
+    migration_hidden_s: float = 0.0  # transfer seconds hidden under the
+    #                              iteration's forward (async overlap)
     split_frac: float = 0.0      # routed fraction served by a non-primary
     #                              replica (0 under a bijective table)
 
@@ -101,7 +124,9 @@ class Engine:
                  telemetry: Optional[Telemetry] = None,
                  cost_model=None, placement=None,
                  virtual_ep: Optional[int] = None,
-                 capacity_margin: Optional[float] = None):
+                 capacity_margin: Optional[float] = None,
+                 migrate_async: bool = False,
+                 migrate_bytes_per_iter: Optional[int] = None):
         self.cfg, self.params, self.rcfg = cfg, params, rcfg
         self.max_slots, self.max_len = max_slots, max_len
         self.temperature = temperature
@@ -160,7 +185,20 @@ class Engine:
         # the dispatch buffer shrinks to the flattened topology
         self.capacity_margin = capacity_margin
         self._base_capacity = cfg.moe.capacity_factor if cfg.moe else 0.0
-        self._pending_migration = (0.0, 0.0)      # (bytes, seconds)
+        # async overlapped migration: drain staged plans as byte-budgeted
+        # per-layer chunks instead of one synchronous whole-plan apply
+        self.migrate_async = migrate_async
+        self.migrate_bytes_per_iter = migrate_bytes_per_iter
+        self._mig = None                  # active MigrationExecutor
+        self._iter_s: Optional[float] = None  # EWMA of iteration seconds
+        # (bytes:int, stall_s, hidden_s) staged for the next IterStats
+        self._pending_migration = (0, 0.0, 0.0)
+        # cumulative engine-side accounting (survives telemetry windows
+        # and tail drains — e.g. drain_migrations() after the last
+        # request — that never reach a _record)
+        self.migration_bytes_moved = 0
+        self.migration_stall_s = 0.0
+        self.migration_hidden_s = 0.0
         self._place_cache = None                  # device copy of the table
         self._it = 0
         self.cache = tf.init_cache(cfg, max_slots, max_len)
@@ -227,37 +265,106 @@ class Engine:
 
     # -- live migration ------------------------------------------------------
     def _maybe_migrate(self):
-        """Apply the manager's replan (if due): permute the expert weight
-        slabs, charge the virtual clock, and stage the accounting for the
-        next recorded iteration."""
+        """The per-iteration migration state machine.
+
+        Draining: advance the in-flight chunk queue by one byte-budgeted
+        batch (no new replan can fire — the manager guards it).  Idle:
+        ask the manager for a staged plan; apply it synchronously, or
+        start an async executor and drain its first batch."""
         if self._placement is None or self.cfg.moe is None:
+            return
+        if self._mig is not None:
+            self._drain_migration()
             return
         plan = self._placement.maybe_replan(self._it)
         if plan is None:
             return
+        if self.migrate_async:
+            from repro.serving.async_migrate import MigrationExecutor
+            self._mig = MigrationExecutor(
+                self._placement, plan,
+                bytes_per_iter=self.migrate_bytes_per_iter)
+            self._drain_migration()
+            return
+        # synchronous path: the whole slab permutation lands between two
+        # iterations, wall-timed so the measured-bandwidth EWMA (and the
+        # charged seconds under wall clocks) reflect the real transfer
         from repro.placement import migrate
+        t0 = time.perf_counter()
         try:
-            self.params = migrate.apply_to_params(self.params, plan)
+            new_params = migrate.apply_to_params(self.params, plan)
+            jax.block_until_ready(new_params)
         except BaseException:
-            if hasattr(self._placement, "abort"):
-                # drop the staged plan so the old set stays routable and
-                # a later cadence point can replan, then surface the error
-                self._placement.abort()
+            # drop the staged plan so the old set stays routable and
+            # a later cadence point can replan, then surface the error
+            self._placement.abort()
             raise
-        if hasattr(self._placement, "commit"):
-            # staged replica plans become routable only after the slab
-            # gather above produced the new weights (consistency rule)
-            self._placement.commit(plan)
+        wall = time.perf_counter() - t0
+        self.params = new_params
+        self._placement.bandwidth.observe(plan.moved_bytes, wall)
+        # staged plans become routable only after the slab gather above
+        # produced the new weights (consistency rule)
+        self._placement.commit(plan)
         self._place_cache = None                  # table changed
-        # charge the transfer to the virtual clock; under wall clocks
-        # (no .advance) the move is real work already on the wall, so
-        # record 0 charged seconds rather than claiming a charge
-        secs = 0.0
         if hasattr(self.clock, "advance"):
             secs = self._placement.migration_seconds(plan.moved_bytes)
             self.clock.advance(secs)
-        b, s = self._pending_migration
-        self._pending_migration = (b + plan.moved_bytes, s + secs)
+        else:
+            # wall clocks: the move is real work already on the wall —
+            # record the measured seconds, not 0
+            secs = wall
+        self._charge_migration(int(plan.moved_bytes), secs, 0.0)
+
+    def _drain_migration(self):
+        """One budgeted chunk batch of the in-flight plan: land the
+        slabs, commit exactly those layers, split the transfer seconds
+        into hidden (fits the budget — overlapped with this iteration's
+        forward) and stall (the excess, charged to a virtual clock)."""
+        try:
+            self.params, rep = self._mig.drain(self.params, self._iter_s)
+        except BaseException:
+            # the executor aborted the staged remainder; landed layers
+            # stay routable (their slabs did land)
+            self._mig = None
+            self._place_cache = None
+            raise
+        self._place_cache = None              # landed layers' tables flipped
+        if hasattr(self.clock, "advance"):
+            stall = self._placement.migration_seconds(rep.excess_bytes)
+            hidden = self._placement.migration_seconds(
+                rep.nbytes - rep.excess_bytes)
+            self.clock.advance(stall)
+        else:
+            # single-threaded wall-clock serving cannot actually overlap
+            # the host-side apply: the whole batch is an honest stall
+            stall, hidden = rep.wall_s, 0.0
+        if rep.done:
+            self._mig = None
+        self._charge_migration(rep.nbytes, stall, hidden)
+
+    def _charge_migration(self, nbytes: int, stall_s: float,
+                          hidden_s: float):
+        b, s, h = self._pending_migration
+        self._pending_migration = (b + int(nbytes), s + stall_s,
+                                   h + hidden_s)
+        self.migration_bytes_moved += int(nbytes)
+        self.migration_stall_s += stall_s
+        self.migration_hidden_s += hidden_s
+
+    @property
+    def migration_draining(self) -> bool:
+        """A staged plan's chunk queue is mid-flight."""
+        return self._mig is not None and self._mig.draining
+
+    def drain_migrations(self, max_iters: int = 10_000) -> None:
+        """Finish any in-flight migration without serving (e.g. before a
+        checkpoint): budget-sized batches keep landing until the queue
+        is empty."""
+        it = 0
+        while self.migration_draining:
+            it += 1
+            assert it <= max_iters, "migration drain failed to converge"
+            self._drain_migration()
 
     def _maybe_resize_capacity(self):
         """Replica-aware capacity: shrink (or restore) the dispatch
@@ -327,8 +434,8 @@ class Engine:
         # moe_stats: [n_blocks, 2, groups, ep] stacked (load_d, vis_d) rows
         ms = np.asarray(aux["moe_stats"], np.float64)
         load_sum, vis_sum = float(ms[:, 0].sum()), float(ms[:, 1].sum())
-        mig_bytes, mig_s = self._pending_migration
-        self._pending_migration = (0.0, 0.0)
+        mig_bytes, mig_s, mig_hidden = self._pending_migration
+        self._pending_migration = (0, 0.0, 0.0)
         stat = IterStats(
             n_active=n_active, tokens=tokens,
             ib_global=float(aux["ib_global"]) / self._n_moe,
@@ -338,6 +445,7 @@ class Engine:
             vis_frac=vis_sum / max(load_sum, 1.0),
             drop_frac=float(aux["drop_frac"]) / self._n_moe,
             migration_bytes=mig_bytes, migration_s=mig_s,
+            migration_hidden_s=mig_hidden,
             split_frac=float(aux.get("split_frac", 0.0)) / self._n_moe)
         self.stats.append(stat)
         if self._placement is not None and "expert_stats" in aux:
@@ -461,6 +569,11 @@ class Engine:
         self._maybe_migrate()
         if self._placement is not None:
             self._maybe_resize_capacity()
+        # the overlap window starts AFTER the migration charges: the
+        # async budget must size against forward compute only — folding
+        # a stall into the window would let the stall grow next
+        # iteration's "hidden" budget, flattering the bounded-stall claim
+        t_step0 = self.clock()
         # 0) purge slots freed by a mid-prefill retirement (e.g. a
         # max_new_tokens=0 request) before they can be re-admitted
         if self._prefill_fifo:
@@ -488,6 +601,7 @@ class Engine:
                 self.decode_ready[s] = False
 
         if not self.scheduler.active:
+            self._observe_iter_s(t_step0)
             return 0
 
         # 3) batched decode over decode-ready slots (others run dummies whose
@@ -517,7 +631,18 @@ class Engine:
             self._record(phase="decode", n_active=n_active, tokens=n_active,
                          batch_tokens=self.max_slots, aux=aux)
         self.scheduler.retire()
+        self._observe_iter_s(t_step0)
         return max(n_active, len(self._prefill_fifo))
+
+    def _observe_iter_s(self, t_step0: float):
+        """EWMA of one iteration's seconds on the engine clock (virtual
+        charges or wall time alike) — the overlap window the async
+        migration budget sizes its chunk batches against."""
+        dt = self.clock() - t_step0
+        if dt <= 0:
+            return
+        self._iter_s = dt if self._iter_s is None \
+            else 0.75 * self._iter_s + 0.25 * dt
 
     def run(self, max_iters: int = 10_000) -> List[Request]:
         it = 0
@@ -531,15 +656,30 @@ class Engine:
         """Persist params + AIMD state (+ the chosen placement plan /
         replica set and predictor state, under the manager's own group) so
         a restored engine resumes with the same expert layout instead of
-        silently reverting to identity."""
+        silently reverting to identity.
+
+        Refused while an async migration is draining: the params hold a
+        mix of landed and not-yet-landed layer slabs whose in-flight
+        plan is not part of the manager's persisted state — call
+        :meth:`drain_migrations` first."""
+        self._refuse_mid_flight("save")
         from repro.checkpoint import ckpt
         state = {"serving": {"params": self.params, "m_state": self.m_state}}
         if self._placement is not None:
             state[self._placement.ckpt_group] = self._placement.state_dict()
         return ckpt.save(ckpt_dir, step, state, keep=keep)
 
+    def _refuse_mid_flight(self, what: str) -> None:
+        if self.migration_draining \
+                or getattr(self._placement, "in_flight", None) is not None:
+            raise RuntimeError(
+                f"cannot {what} a checkpoint while a migration is "
+                "draining (params hold a partially-landed slab layout); "
+                "call drain_migrations() first")
+
     def load_checkpoint(self, ckpt_dir: str,
                         step: Optional[int] = None) -> int:
+        self._refuse_mid_flight("load")
         from repro.checkpoint import ckpt
         templates = {"serving": {"params": self.params,
                                  "m_state": self.m_state}}

@@ -394,6 +394,66 @@ def check_perlayer_tables_matches_local_under_ep():
     assert e1 < 5e-3 and e2 < 5e-3, (e1, e2)
 
 
+def check_async_migrate_chunks_match_sync_under_ep():
+    """Async tentpole on a real (2,4) mesh: draining a staged per-layer
+    plan chunk-by-chunk (subset gathers on the mesh-resident stacked
+    weights, per-layer table commits) must leave params bitwise-equal to
+    the one-shot synchronous apply — and the model must produce the same
+    logits through either copy under the committed tables."""
+    from repro.configs import PlacementConfig
+    from repro.placement import PlacementManager, apply_to_params
+    from repro.serving.async_migrate import MigrationExecutor
+
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=2)
+    rcfg = ReaLBConfig(gate_gamma=10 ** 9)
+    params = tf.init_model(cfg, jax.random.PRNGKey(0))
+
+    def mk():
+        mgr = PlacementManager(cfg, PlacementConfig(
+            replan_every=2, warmup_iters=1, min_gain=0.0,
+            per_layer=True), 4)
+        es = np.zeros((2, 2, cfg.moe.num_experts))
+        es[0, 0] = [10.0, 8, 1, 1, 1, 1, 1, 1]
+        es[1, 0] = [1.0, 1, 1, 1, 1, 1, 8, 10]
+        es[:, 1] = es[:, 0] * 0.5
+        mgr.observe(es)
+        return mgr, mgr.maybe_replan(2)
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    with use_mesh(mesh):
+        m_sync, p_sync = mk()
+        m_async, p_async = mk()
+        assert p_sync is not None and len(m_sync.plan_layers(p_sync)) == 2
+        np.testing.assert_array_equal(p_sync.gather_idx, p_async.gather_idx)
+        ref = apply_to_params(params, p_sync)
+        m_sync.commit(p_sync)
+        ex = MigrationExecutor(m_async, p_async, bytes_per_iter=1)
+        out = params
+        while ex.draining:
+            out, _ = ex.drain(out)
+        assert ex.n_drains == 2          # one chunk (layer) per drain
+        for key in ("w_gate", "w_up", "w_down"):
+            a = np.asarray(ref["blocks"]["layer0"]["moe"][key])
+            b = np.asarray(out["blocks"]["layer0"]["moe"][key])
+            assert np.array_equal(a, b), key
+        for a, b in zip(m_sync.tables, m_async.tables):
+            np.testing.assert_array_equal(a.e2r, b.e2r)
+        assert m_async.bandwidth.calibrated
+        rng = np.random.default_rng(0)
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16)),
+                             jnp.int32)
+        m = jnp.full(ep_moe.moe_state_shape(mesh, 4), 0.9)
+        place = tuple(jnp.asarray(t) for t in m_async.device_tables())
+        r_ref = jax.jit(lambda p, m: tf.prefill_forward(
+            p, cfg, rcfg, {"tokens": tokens}, m, cache_len=20,
+            placement=place))(ref, m)
+        r_out = jax.jit(lambda p, m: tf.prefill_forward(
+            p, cfg, rcfg, {"tokens": tokens}, m, cache_len=20,
+            placement=place))(out, m)
+        assert np.array_equal(np.asarray(r_ref.logits),
+                              np.asarray(r_out.logits))
+
+
 def check_replica_capacity_reduced_cap():
     """Replica-aware capacity on the (2,4) mesh: at the post-split-derived
     reduced ``capacity_factor`` the skewed stream routes with zero drops

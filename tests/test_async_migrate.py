@@ -1,0 +1,481 @@
+"""Async overlapped migration: per-layer slab streaming with
+measured-bandwidth budgeting (repro.serving.async_migrate), the staged
+commit protocol shared by both managers, the migration-accounting
+bugfixes (measured wall seconds under wall clocks, single-sourced
+bandwidth, guarded replan-while-pending, integral byte counts) and the
+bounded-stall property of the async serving arms."""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.configs import (PlacementConfig, ReaLBConfig, ReplicationConfig,
+                           get_config, reduced)
+from repro.configs.base import MIGRATION_BW_DEFAULT
+from repro.placement import (MigrationBandwidth, PlacementManager,
+                             apply_layers_to_params, apply_to_params,
+                             subset_plan)
+from repro.replication import ReplicaManager
+from repro.serving.async_migrate import MigrationExecutor, SlabChunk
+
+SKEW = [10.0, 8, 1, 1, 1, 1, 1, 1]
+FLAT = [1.0] * 8
+
+
+def _skew_stats(skews, e=8):
+    es = np.zeros((len(skews), 2, e))
+    for l, row in enumerate(skews):
+        es[l, 0] = row
+        es[l, 1] = np.asarray(row) * 0.5
+    return es
+
+
+def _np_params(n_layers=3, e=8):
+    w = np.arange(n_layers * e * 2 * 4, dtype=np.float32)
+    w = w.reshape(n_layers, e, 2, 4)
+    return {"blocks": {"layer0": {"moe": {
+        "router": np.zeros((2, e)), "w_gate": w, "w_up": w + 1,
+        "w_down": np.swapaxes(w, 2, 3)}}}}
+
+
+def _perlayer_mgr(n_layers=3, bpe=7, **kw):
+    pcfg = PlacementConfig(replan_every=2, warmup_iters=1, min_gain=0.0,
+                           per_layer=True, **kw)
+    return PlacementManager.from_geometry(8, pcfg, 4, bytes_per_expert=bpe,
+                                          n_layers=n_layers)
+
+
+# --------------------------------------------------------------------------
+# measured-bandwidth EWMA
+# --------------------------------------------------------------------------
+def test_bandwidth_ewma_measures_and_prices():
+    bw = MigrationBandwidth(50e9, alpha=0.5)
+    assert float(bw) == 50e9 and not bw.calibrated
+    assert bw.seconds(100e9) == 2.0             # prior prices transfers
+    bw.observe(1000, 1.0)                       # first obs REPLACES prior
+    assert bw.calibrated and float(bw) == 1000.0
+    bw.observe(3000, 1.0)                       # then EWMA
+    assert float(bw) == 2000.0
+    bw.observe(0, 1.0)                          # degenerate obs ignored
+    bw.observe(10, 0.0)
+    assert float(bw) == 2000.0 and bw.n_obs == 2
+    assert bw.seconds(4000) == 2.0
+    bw.reset()
+    assert float(bw) == 50e9 and not bw.calibrated
+
+
+def test_bandwidth_single_sourced_across_configs_and_costmodel():
+    """Bugfix: sims, gates and managers price migration bytes at the SAME
+    bandwidth — one constant, one live EWMA object."""
+    from benchmarks import costmodel as cm
+    assert cm.ICI_BW == MIGRATION_BW_DEFAULT
+    assert PlacementConfig().migration_bw == MIGRATION_BW_DEFAULT
+    assert ReplicationConfig().migration_bw == MIGRATION_BW_DEFAULT
+    g = cm.KIMI_VL
+    # a live bandwidth object re-prices migration_time everywhere
+    slow = MigrationBandwidth(1e6)
+    assert cm.migration_time(4, g, bw=slow) == \
+        pytest.approx(cm.migration_bytes(4, g) / 1e6)
+    assert cm.migration_time(4, g) == \
+        pytest.approx(cm.migration_bytes(4, g) / cm.ICI_BW)
+    # the gate's migration side tracks the EWMA: at measured 1 MB/s the
+    # same plan that amortizes at ICI speed no longer does
+    skew = np.array([8.0, 1, 1, 1, 1, 1, 1, 1])
+    flat = np.full(8, skew.sum() / 8)
+    fast = cm.ReplanCostGate(g, 8, horizon_iters=100)
+    assert fast.accept(skew, flat, 4)
+    assert not cm.ReplanCostGate(g, 8, horizon_iters=100,
+                                 bandwidth=slow).accept(skew, flat, 4)
+    cal = cm.CalibratedReplanCostGate(g, 8, horizon_iters=100)
+    assert cal.accept(skew, flat, 4)
+    cal.bandwidth = slow
+    assert not cal.accept(skew, flat, 4)
+    assert not cal.accept_layers(np.tile(skew, (4, 1)),
+                                 np.tile(flat, (4, 1)), 4)
+
+
+def test_manager_wires_its_bandwidth_into_the_gate():
+    from benchmarks import costmodel as cm
+    g = cm.KIMI_VL
+    gate = cm.CalibratedReplanCostGate(g, 4, horizon_iters=32)
+    assert gate.bandwidth is None
+    pcfg = PlacementConfig()
+    mgr = PlacementManager.from_geometry(8, pcfg, 4, cost_gate=gate)
+    assert gate.bandwidth is mgr.bandwidth
+    rgate = cm.ReplanCostGate(g, 4, horizon_iters=32)
+    rmgr = ReplicaManager.from_geometry(8, ReplicationConfig(), 4,
+                                        cost_gate=rgate)
+    assert rgate.bandwidth is rmgr.bandwidth
+    # measured applies move the manager's pricing
+    mgr.bandwidth.observe(10_000, 2.0)
+    assert mgr.migration_seconds(5_000) == 1.0
+
+
+# --------------------------------------------------------------------------
+# chunked subset apply
+# --------------------------------------------------------------------------
+def test_apply_layers_union_equals_full_apply():
+    mgr = _perlayer_mgr()
+    mgr.observe(_skew_stats([SKEW, FLAT, SKEW[::-1]]))
+    plan = mgr.maybe_replan(2)
+    assert sorted(mgr.plan_layers(plan)) == [0, 2]
+    params = _np_params()
+    ref = apply_to_params(params, plan)
+    # one chunk at a time, any order, same result bitwise
+    out = apply_layers_to_params(params, plan, [2])
+    mid = out["blocks"]["layer0"]["moe"]["w_gate"]
+    np.testing.assert_array_equal(mid[0],
+                                  params["blocks"]["layer0"]["moe"]
+                                  ["w_gate"][0])   # layer 0 untouched
+    out = apply_layers_to_params(out, plan, [0])
+    for k in ("w_gate", "w_up", "w_down"):
+        np.testing.assert_array_equal(out["blocks"]["layer0"]["moe"][k],
+                                      ref["blocks"]["layer0"]["moe"][k])
+
+
+def test_subset_plan_shared_is_single_chunk():
+    pcfg = PlacementConfig(replan_every=2, warmup_iters=1, min_gain=0.0)
+    mgr = PlacementManager.from_geometry(8, pcfg, 4, bytes_per_expert=7)
+    mgr.observe(_skew_stats([SKEW]))
+    plan = mgr.maybe_replan(2)
+    assert mgr.plan_layers(plan) == [0]
+    assert mgr.layer_bytes(plan, 0) == plan.moved_bytes
+    assert subset_plan(plan, [0]) is plan
+    with pytest.raises(AssertionError):
+        subset_plan(plan, [1])
+
+
+# --------------------------------------------------------------------------
+# the executor: async drain == synchronous apply, budget packing
+# --------------------------------------------------------------------------
+def test_executor_drained_result_bitwise_equals_sync():
+    params = _np_params()
+    m_sync, m_async = _perlayer_mgr(), _perlayer_mgr()
+    for m in (m_sync, m_async):
+        m.observe(_skew_stats([SKEW, FLAT, SKEW[::-1]]))
+    p_sync, p_async = m_sync.maybe_replan(2), m_async.maybe_replan(2)
+    np.testing.assert_array_equal(p_sync.gather_idx, p_async.gather_idx)
+    ref = apply_to_params(params, p_sync)
+    m_sync.commit(p_sync)
+
+    ex = MigrationExecutor(m_async, p_async, bytes_per_iter=1)
+    assert ex.total_bytes == p_async.moved_bytes
+    out, drains = params, 0
+    while ex.draining:
+        out, rep = ex.drain(out)
+        drains += 1
+        assert len(rep.layers) == 1            # budget 1: chunk at a time
+        assert rep.excess_bytes == rep.nbytes - 1
+        # landed layers' tables flip immediately; pending stay old
+        for l in rep.layers:
+            np.testing.assert_array_equal(
+                m_async.tables[l].e2r, p_async.new_tables[l].e2r)
+    assert drains == 2 and rep.done
+    for k in ("w_gate", "w_up", "w_down"):
+        np.testing.assert_array_equal(out["blocks"]["layer0"]["moe"][k],
+                                      ref["blocks"]["layer0"]["moe"][k])
+    for a, b in zip(m_async.tables, m_sync.tables):
+        np.testing.assert_array_equal(a.e2r, b.e2r)
+    assert m_async.n_migrations == m_sync.n_migrations == 1
+    assert m_async.migrated_bytes == m_sync.migrated_bytes
+    assert m_async.bandwidth.calibrated       # timed applies observed
+
+
+def test_executor_budget_packs_multiple_chunks():
+    mgr = _perlayer_mgr(n_layers=4, bpe=10)
+    mgr.observe(_skew_stats([SKEW, SKEW[::-1], FLAT, SKEW]))
+    plan = mgr.maybe_replan(2)
+    assert len(mgr.plan_layers(plan)) == 3
+    ex = MigrationExecutor(mgr, plan, bytes_per_iter=10 ** 9)
+    out, rep = ex.drain(_np_params(n_layers=4))
+    assert rep.done and len(rep.layers) == 3   # all chunks fit one budget
+    assert rep.nbytes == plan.moved_bytes and rep.excess_bytes == 0
+    assert mgr.in_flight is None and mgr.n_migrations == 1
+
+
+def test_executor_chunk_queue_and_partial_commit_state():
+    mgr = _perlayer_mgr()
+    mgr.observe(_skew_stats([SKEW, FLAT, SKEW[::-1]]))
+    plan = mgr.maybe_replan(2)
+    ex = MigrationExecutor(mgr, plan, bytes_per_iter=1)
+    assert [c.layer for c in ex.queue] == [0, 2]
+    assert all(isinstance(c, SlabChunk) and c.nbytes > 0 for c in ex.queue)
+    out, rep = ex.drain(_np_params())
+    assert rep.layers == [0] and ex.draining
+    assert mgr.in_flight is plan               # still mid-flight
+    assert mgr._pending_remaining == {2}
+    assert mgr.n_migrations == 0               # counted only when landed
+    assert mgr.migrated_bytes_per_layer[0] > 0
+    assert mgr.migrated_bytes_per_layer[2] == 0
+    out, rep = ex.drain(out)
+    assert rep.done and mgr.in_flight is None and mgr.n_migrations == 1
+
+
+# --------------------------------------------------------------------------
+# staged-commit protocol regressions (both managers)
+# --------------------------------------------------------------------------
+def test_second_replan_while_pending_is_guarded_noop():
+    """Bugfix: a replan arriving while a staged plan is pending must not
+    overwrite it (the engine would gather slabs for one plan and flip
+    tables for another)."""
+    pcfg = PlacementConfig(replan_every=1, warmup_iters=1, min_gain=0.0)
+    rpcfg = ReplicationConfig(replan_every=1, warmup_iters=1, min_gain=0.0)
+    for mgr in (PlacementManager.from_geometry(8, pcfg, 4,
+                                               bytes_per_expert=3),
+                ReplicaManager.from_geometry(8, rpcfg, 4,
+                                             bytes_per_expert=3)):
+        mgr.observe(_skew_stats([SKEW]))
+        plan = mgr.maybe_replan(1)
+        assert plan is not None and mgr.in_flight is plan
+        # new (different!) skew while the plan drains: guarded no-op
+        mgr.observe(_skew_stats([SKEW[::-1]]))
+        assert mgr.maybe_replan(2) is None
+        assert mgr.maybe_replan(3) is None
+        assert mgr.in_flight is plan               # not overwritten
+        with pytest.raises(AssertionError, match="in-flight"):
+            mgr._stage(plan)                       # belt and braces
+        mgr.commit(plan)
+        assert mgr.in_flight is None
+        assert mgr.maybe_replan(4) is not None     # replans flow again
+
+
+def test_abort_mid_drain_keeps_landed_layers_routable():
+    mgr = _perlayer_mgr()
+    mgr.observe(_skew_stats([SKEW, FLAT, SKEW[::-1]]))
+    plan = mgr.maybe_replan(2)
+    mgr.commit_layers(plan, [0])                   # layer 0 landed
+    mgr.abort()                                    # layer 2 never lands
+    np.testing.assert_array_equal(mgr.tables[0].e2r,
+                                  plan.new_tables[0].e2r)
+    assert not np.array_equal(mgr.tables[2].e2r, plan.new_tables[2].e2r)
+    assert mgr.in_flight is None and mgr.n_migrations == 0
+    assert mgr.migrated_bytes_per_layer[2] == 0
+    # commit of an aborted plan is refused
+    with pytest.raises(AssertionError, match="not staged"):
+        mgr.commit_layers(plan, [2])
+
+
+def test_commit_of_wrong_layer_refused():
+    mgr = _perlayer_mgr()
+    mgr.observe(_skew_stats([SKEW, FLAT, SKEW[::-1]]))
+    plan = mgr.maybe_replan(2)
+    with pytest.raises(AssertionError):
+        mgr.commit_layers(plan, [1])               # layer 1 never changed
+    mgr.commit_layers(plan, [0])
+    with pytest.raises(AssertionError):
+        mgr.commit_layers(plan, [0])               # double commit
+
+
+# --------------------------------------------------------------------------
+# integral byte counts end-to-end
+# --------------------------------------------------------------------------
+def test_byte_accounting_is_integral():
+    mgr = _perlayer_mgr()
+    mgr.observe(_skew_stats([SKEW, FLAT, SKEW[::-1]]))
+    plan = mgr.maybe_replan(2)
+    assert isinstance(plan.moved_bytes, int)
+    assert all(isinstance(mgr.layer_bytes(plan, l), int)
+               for l in mgr.plan_layers(plan))
+    mgr.commit(plan)
+    assert isinstance(mgr.migrated_bytes, int)
+    assert mgr.migrated_bytes_per_layer.dtype == np.int64
+
+
+# --------------------------------------------------------------------------
+# cost-model async sims: bounded per-iteration stall
+# --------------------------------------------------------------------------
+def test_sim_async_bounds_per_iteration_stall():
+    from benchmarks import costmodel as cm
+    from benchmarks import traces as tr
+    cfg = tr.TraceConfig(name="depth", iters=240, jump_every=80,
+                         zipf_a=1.3, vision_frac_mean=0.7, seed=5)
+    g = cm.KIMI_VL
+    sync = cm.sim_placement_layers(cfg, g, n_layers=4, per_layer=True)
+    azn = cm.sim_placement_async(cfg, g, n_layers=4)
+    assert float(sync.extra["moved_bytes"][0]) > 0
+    assert float(azn.extra["moved_bytes"][0]) > 0
+    # sync charges whole transfers in single iterations; async never
+    # stalls more than the budget excess (here: 0 — chunks fit exactly)
+    assert max(sync.extra["mig_stall_s"]) > 0
+    assert max(azn.extra["mig_stall_s"]) == 0.0
+    assert sum(azn.extra["mig_hidden_s"]) > 0
+    assert sum(sync.extra["mig_hidden_s"]) == 0.0
+    # overlap does not cost balance quality: still beats the shared arm
+    shared = cm.sim_placement_layers(cfg, g, n_layers=4, per_layer=False)
+    assert float(np.mean(azn.extra["ib_global"])) < \
+        float(np.mean(shared.extra["ib_global"]))
+    razn = cm.sim_replication_async(cfg, g, n_layers=4)
+    assert max(razn.extra["mig_stall_s"]) == 0.0
+    assert float(razn.extra["moved_bytes"][0]) > 0
+
+
+# --------------------------------------------------------------------------
+# engine end-to-end (slow): async serving arms + mid-flight checkpoint
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def model():
+    import jax
+
+    from repro.models import transformer as tf
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=2)
+    params = tf.init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _reqs(cfg, n=6, p_len=12, new=4, seed=0):
+    from repro.serving.scheduler import Request
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        toks = rng.integers(0, cfg.vocab_size, p_len).astype(np.int32)
+        out.append(Request(uid=i, tokens=toks,
+                           modality=np.full(p_len, bool(i % 2)),
+                           max_new_tokens=new, arrival_time=0.0))
+    return out
+
+
+def _bias_routers_by_depth(params, biases):
+    import jax.numpy as jnp
+    out = dict(params)
+    blocks = dict(out["blocks"])
+    lp = dict(blocks["layer0"])
+    moe = dict(lp["moe"])
+    moe["router"] = moe["router"] + jnp.asarray(biases)[:, None, :]
+    lp["moe"] = moe
+    blocks["layer0"] = lp
+    out["blocks"] = blocks
+    return out
+
+
+def _async_engine(cfg, params, budget, clocked=True):
+    from repro.serving.engine import Engine
+    from repro.serving.telemetry import Telemetry
+    from repro.workloads import IterationCostModel, VirtualClock
+    mgr = PlacementManager(cfg, PlacementConfig(
+        planner="least_loaded", replan_every=3, warmup_iters=2,
+        min_gain=0.0, per_layer=True), 4)
+    tel = Telemetry()
+    kw = dict(clock=VirtualClock(), cost_model=IterationCostModel()) \
+        if clocked else {}
+    eng = Engine(cfg, params, ReaLBConfig(gate_gamma=4), max_slots=3,
+                 max_len=32, placement=mgr, telemetry=tel,
+                 migrate_async=True, migrate_bytes_per_iter=budget, **kw)
+    return eng, mgr, tel
+
+
+@pytest.mark.slow
+def test_engine_async_bounded_stall_and_consistency(model):
+    """Async serving: per-iteration stall bounded by the byte budget
+    (chunks that fit are hidden, never charged), per-layer tables flip
+    exactly as their slabs land, accounting matches the sync twin."""
+    from repro.placement import migrate as pmigrate
+    from repro.serving.engine import Engine
+    from repro.serving.telemetry import Telemetry
+    from repro.workloads import IterationCostModel, VirtualClock
+    cfg, params = model
+    b0 = np.array([3.0, 2.0, 1.0, 0.5, 0.0, 0.0, 0.0, 0.0])
+    params = _bias_routers_by_depth(params, np.stack([b0, b0[::-1]]))
+    layer_bytes = pmigrate.expert_bytes(cfg, 1) * cfg.moe.num_experts
+
+    # sync twin
+    mgr_s = PlacementManager(cfg, PlacementConfig(
+        planner="least_loaded", replan_every=3, warmup_iters=2,
+        min_gain=0.0, per_layer=True), 4)
+    tel_s = Telemetry()
+    eng_s = Engine(cfg, params, ReaLBConfig(gate_gamma=4), max_slots=3,
+                   max_len=32, placement=mgr_s, telemetry=tel_s,
+                   clock=VirtualClock(), cost_model=IterationCostModel())
+    for r in _reqs(cfg, n=12, seed=3):
+        eng_s.submit(r)
+    eng_s.run()
+    assert mgr_s.n_migrations >= 1
+    assert sum(st.migration_s for st in eng_s.stats) > 0      # sync stalls
+    assert eng_s.migration_hidden_s == 0.0
+
+    # async: budget = one layer's slab -> every chunk fits, zero stall
+    eng_a, mgr_a, tel_a = _async_engine(cfg, params, layer_bytes)
+    for r in _reqs(cfg, n=12, seed=3):
+        eng_a.submit(r)
+    while not eng_a.scheduler.idle:
+        eng_a.step()
+        plan = mgr_a.in_flight
+        if plan is not None:
+            # consistency: landed layers route the new table, in-flight
+            # layers still route the old one
+            landed = set(mgr_a.plan_layers(plan)) - mgr_a._pending_remaining
+            for l in landed:
+                np.testing.assert_array_equal(mgr_a.tables[l].e2r,
+                                              plan.new_tables[l].e2r)
+            for l in mgr_a._pending_remaining:
+                assert not np.array_equal(mgr_a.tables[l].e2r,
+                                          plan.new_tables[l].e2r)
+    eng_a.drain_migrations()
+    assert mgr_a.n_migrations >= 1
+    # bounded stall: no iteration charged any migration seconds (every
+    # chunk fit the budget — the transfer hid under the forwards) and no
+    # iteration moved more than the budget + one chunk
+    assert all(st.migration_s == 0.0 for st in eng_a.stats)
+    assert eng_a.migration_hidden_s > 0.0
+    assert all(st.migration_bytes <= 2 * layer_bytes for st in eng_a.stats)
+    assert all(isinstance(st.migration_bytes, int) for st in eng_a.stats)
+    assert isinstance(tel_a.migration_bytes_total, int)
+    assert mgr_a.migrated_bytes == mgr_a.migrated_bytes_per_layer.sum()
+    assert mgr_a.bandwidth.calibrated
+    s = tel_a.summary()
+    assert s["migration_stall_s"] == 0.0
+    assert s["migration_hidden_s"] > 0.0
+
+
+@pytest.mark.slow
+def test_engine_async_mid_flight_checkpoint_refused(model):
+    cfg, params = model
+    b0 = np.array([3.0, 2.0, 1.0, 0.5, 0.0, 0.0, 0.0, 0.0])
+    params = _bias_routers_by_depth(params, np.stack([b0, b0[::-1]]))
+    eng, mgr, _ = _async_engine(cfg, params, budget=1)  # 1 chunk per iter
+    for r in _reqs(cfg, n=12, seed=3):
+        eng.submit(r)
+    saw_draining = False
+    with tempfile.TemporaryDirectory() as d:
+        while not eng.scheduler.idle:
+            eng.step()
+            if eng.migration_draining and not saw_draining:
+                saw_draining = True
+                with pytest.raises(RuntimeError, match="drain"):
+                    eng.save_checkpoint(d, 1)
+                with pytest.raises(RuntimeError, match="drain"):
+                    eng.load_checkpoint(d)
+        assert saw_draining, "no migration drained mid-run"
+        eng.drain_migrations()
+        assert not eng.migration_draining and mgr.in_flight is None
+        eng.save_checkpoint(d, 5)                 # clean state: accepted
+        mgr2 = PlacementManager(cfg, PlacementConfig(
+            planner="least_loaded", per_layer=True), 4)
+        from repro.serving.engine import Engine
+        eng2 = Engine(cfg, params, ReaLBConfig(gate_gamma=4), max_slots=3,
+                      max_len=32, placement=mgr2)
+        assert eng2.load_checkpoint(d) == 5
+        for a, b in zip(mgr2.tables, mgr.tables):
+            np.testing.assert_array_equal(a.e2r, b.e2r)
+
+
+@pytest.mark.slow
+def test_engine_sync_wall_clock_records_measured_seconds(model):
+    """Bugfix: under wall clocks the synchronous apply used to record 0
+    charged seconds — it must record the measured apply wall time."""
+    from repro.serving.engine import Engine
+    from repro.serving.telemetry import Telemetry
+    cfg, params = model
+    b0 = np.array([3.0, 2.0, 1.0, 0.5, 0.0, 0.0, 0.0, 0.0])
+    params = _bias_routers_by_depth(params, np.stack([b0, b0[::-1]]))
+    mgr = PlacementManager(cfg, PlacementConfig(
+        planner="least_loaded", replan_every=3, warmup_iters=2,
+        min_gain=0.0, per_layer=True), 4)
+    tel = Telemetry()
+    eng = Engine(cfg, params, ReaLBConfig(gate_gamma=4), max_slots=3,
+                 max_len=32, placement=mgr, telemetry=tel)  # wall clock
+    for r in _reqs(cfg, n=12, seed=3):
+        eng.submit(r)
+    eng.run()
+    assert mgr.n_migrations >= 1
+    assert sum(st.migration_s for st in eng.stats) > 0
+    assert tel.migration_s_total > 0

@@ -23,6 +23,7 @@ CHECKS = [
     "replication_split_under_ep",
     "perlayer_identity_bitwise_under_ep",
     "perlayer_tables_matches_local_under_ep",
+    "async_migrate_chunks_match_sync_under_ep",
     "replica_capacity_reduced_cap",
     "model_train_step_under_mesh",
     "decode_under_mesh",

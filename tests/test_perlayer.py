@@ -208,6 +208,11 @@ def test_perlayer_manager_replans_only_skewed_layers():
     assert isinstance(plan, LayerMigrationPlan)
     assert plan.moved_per_layer[1] == 0                 # flat layer kept
     assert plan.moved_per_layer[0] > 0 and plan.moved_per_layer[2] > 0
+    # staged: routable tables unchanged until the slabs land + commit
+    assert mgr.in_flight is plan
+    np.testing.assert_array_equal(mgr.tables[0].e2r,
+                                  PlacementTable.identity(8, 4).e2r)
+    mgr.commit(plan)
     # the two skewed layers got different tables (depth-varying skew)
     assert not np.array_equal(mgr.tables[0].e2r, mgr.tables[2].e2r)
     np.testing.assert_array_equal(mgr.tables[1].e2r,
@@ -246,7 +251,9 @@ def test_perlayer_manager_state_roundtrip_and_shared_mismatch():
     mgr = PlacementManager.from_geometry(8, pcfg, 4, bytes_per_expert=3,
                                          n_layers=2)
     mgr.observe(_skew_stats([SKEW, SKEW[::-1]]))
-    assert mgr.maybe_replan(1) is not None
+    plan = mgr.maybe_replan(1)
+    assert plan is not None
+    mgr.commit(plan)
     sd = {k: np.asarray(v) for k, v in mgr.state_dict().items()}
     m2 = PlacementManager.from_geometry(8, pcfg, 4, bytes_per_expert=3,
                                         n_layers=2)
@@ -348,6 +355,7 @@ def test_manager_decode_cadence_replans_from_decode_window():
     plan = mgr.maybe_replan(9)                          # off prefill cadence
     assert plan is not None and plan.n_moved > 0
     assert mgr._decode_since_replan == 0                # counter reset
+    mgr.commit(plan)
     # a decode cadence point whose plan is REJECTED (no gain: the decode
     # skew is already balanced) must also consume the window — otherwise
     # the full planner would re-run on every subsequent iteration

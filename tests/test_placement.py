@@ -234,10 +234,15 @@ def test_manager_replans_on_skew_and_respects_cadence():
     assert mgr.maybe_replan(1) is None            # off-cadence
     plan = mgr.maybe_replan(2)
     assert plan is not None and plan.n_moved > 0
+    # staged: routable table and accounting unchanged until commit
+    assert mgr.in_flight is plan and mgr.n_migrations == 0
+    assert mgr.maybe_replan(4) is None            # one plan in flight
+    mgr.commit(plan)
+    assert mgr.in_flight is None
     assert mgr.n_migrations == 1
     assert mgr.migrated_bytes == plan.moved_bytes > 0
     mgr.observe(es)
-    assert mgr.maybe_replan(4) is None            # plan already optimal
+    assert mgr.maybe_replan(6) is None            # plan already optimal
 
 
 def test_manager_cost_gate_amortized_gain_guard():
