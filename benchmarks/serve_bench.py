@@ -35,6 +35,19 @@ realized request stream in one deterministic invocation and prints a
 comparison table; ``--json-out BENCH_serve.json`` writes the per-arm
 summaries (throughput, TTFT/TPOT percentiles, IB, migration bytes —
 per-layer migration bytes included) as a machine-readable CI artifact.
+
+``--scenario kill-rejoin`` drives the elastic serving path: a replicate
+arm runs twice on the same realized stream — once healthy, once with a
+scripted rank loss at ``--fail-iter`` and a rejoin at ``--rejoin-iter``
+(knobs: ``--fail-rank``, and ``--migrate-bytes-per-iter`` as the
+recovery chunk budget).  The faulted run re-materializes stranded
+singleton experts from a pre-kill checkpoint through the byte-budgeted
+migration queue and reports ``recovery_s`` / ``availability`` /
+``degraded_iters`` plus post-recovery throughput next to the healthy
+arm's:
+
+    python benchmarks/serve_bench.py --scenario kill-rejoin \
+        --json-out BENCH_serve.json
 """
 from __future__ import annotations
 
@@ -144,6 +157,20 @@ def parse_args(argv=None):
                     help="like --cost-gate, but tokens/iter is calibrated "
                          "from measured engine IterStats instead of the "
                          "static roofline constant")
+    ap.add_argument("--scenario", default="steady",
+                    choices=["steady", "kill-rejoin"],
+                    help="kill-rejoin: run a replicate arm healthy and "
+                         "again with a scripted rank loss + rejoin on "
+                         "the same stream; emits recovery_s / "
+                         "availability / degraded_iters")
+    ap.add_argument("--fail-iter", type=int, default=8,
+                    help="engine iteration of the scripted rank loss "
+                         "(kill-rejoin scenario)")
+    ap.add_argument("--rejoin-iter", type=int, default=48,
+                    help="engine iteration of the scripted rank rejoin "
+                         "(kill-rejoin scenario)")
+    ap.add_argument("--fail-rank", type=int, default=1,
+                    help="virtual EP rank to kill (kill-rejoin scenario)")
     ap.add_argument("--virtual-ep", type=int, default=None,
                     help="virtual EP topology for the policy statistics on "
                          "a single device (default: 4 when --arm is given, "
@@ -222,9 +249,12 @@ def make_cost_gate(args, cfg, ep: int):
                              tokens_per_iter=float(args.prefill_budget))
 
 
-def serve(args, cfg, params, specs: List[RequestSpec]):
+def serve(args, cfg, params, specs: List[RequestSpec],
+          inject_faults: bool = False):
     """Run the open-loop experiment; returns (telemetry, engine, realized
-    specs, wall seconds)."""
+    specs, wall seconds).  ``inject_faults`` arms the kill-rejoin
+    scenario: a pre-kill checkpoint, an :class:`ElasticCoordinator` over
+    the replica manager and a scripted :class:`FaultInjector`."""
     kind = resolve_arm(args)
     rcfg = ReaLBConfig(gate_gamma=args.gate_gamma, **POLICIES[args.policy])
     manager = None
@@ -251,6 +281,10 @@ def serve(args, cfg, params, specs: List[RequestSpec]):
         # lay the logical expert rows out into the replica slot space
         # (each scanned block by its own layer's set when per-layer)
         params = expand_moe_params(params, manager.rsets)
+    if inject_faults and kind != "replication":
+        raise SystemExit("--scenario kill-rejoin needs a replicate arm "
+                         "(replicas are the availability mechanism); "
+                         f"got arm={args.arm!r}")
     telemetry = Telemetry()
     if args.wall_time:
         # zero the wall clock at run start so it is comparable with the
@@ -260,6 +294,26 @@ def serve(args, cfg, params, specs: List[RequestSpec]):
     else:
         clock = VirtualClock()
     cost = IterationCostModel() if not args.wall_time else None
+    elastic = injector = None
+    if inject_faults:
+        import tempfile
+
+        from repro.checkpoint import ckpt as ckpt_lib
+        from repro.runtime.fault_tolerance import FaultInjector
+        from repro.serving.elastic import ElasticCoordinator
+
+        # the re-materialization source for singleton experts stranded
+        # by the kill: the expanded slot-space params plus the manager's
+        # replica tables, saved before any fault
+        ckpt_dir = tempfile.mkdtemp(prefix="serve_bench_elastic_")
+        ckpt_lib.save(ckpt_dir, 0,
+                      {"serving": {"params": params},
+                       manager.ckpt_group: manager.state_dict()})
+        elastic = ElasticCoordinator(manager, ckpt_dir=ckpt_dir,
+                                     clock=clock, telemetry=telemetry)
+        injector = FaultInjector([(args.fail_iter, "fail", args.fail_rank),
+                                  (args.rejoin_iter, "rejoin",
+                                   args.fail_rank)])
     eng = Engine(cfg, params, rcfg, max_slots=args.slots,
                  max_len=args.max_len, prefill_budget=args.prefill_budget,
                  text_reserve=args.text_reserve, clock=clock,
@@ -269,7 +323,8 @@ def serve(args, cfg, params, specs: List[RequestSpec]):
                  if kind == "replication" else None,
                  migrate_async=args.migrate_async,
                  migrate_bytes_per_iter=args.migrate_bytes_per_iter
-                 or None)
+                 or None,
+                 elastic=elastic, fault_injector=injector)
 
     closed = None
     prof = profile(args.workload)
@@ -357,6 +412,17 @@ def summarize_run(telemetry: Telemetry, eng: Engine, wall: float) -> Dict:
     return s
 
 
+def windowed_tok_per_s(eng: Engine, t0: float) -> Optional[float]:
+    """Throughput over the recorded iterations strictly after engine
+    time ``t0`` — the post-recovery window when ``t0`` is the recovery
+    stamp (both arms share the clock model, so the same window is
+    comparable across the healthy and faulted runs)."""
+    stats = [s for s in eng.stats if s.t_wall > t0]
+    if len(stats) < 2:
+        return None
+    return sum(s.tokens for s in stats) / max(stats[-1].t_wall - t0, 1e-9)
+
+
 def write_json_out(args, results: Dict[str, Dict]) -> None:
     payload = {
         "meta": dict(workload=args.workload, arrivals=args.arrivals,
@@ -376,6 +442,9 @@ def write_json_out(args, results: Dict[str, Dict]) -> None:
                      replica_capacity_margin=args.replica_capacity_margin,
                      cost_gate=args.cost_gate,
                      cost_gate_calibrated=args.cost_gate_calibrated,
+                     scenario=args.scenario, fail_iter=args.fail_iter,
+                     rejoin_iter=args.rejoin_iter,
+                     fail_rank=args.fail_rank,
                      replay=args.replay),
         "arms": results,
     }
@@ -426,6 +495,61 @@ def main(argv=None) -> int:
         specs = build_stream(args, cfg.vocab_size, max_prompt)
 
     params = tf.init_model(cfg, jax.random.PRNGKey(args.seed))
+
+    if args.scenario == "kill-rejoin":
+        if args.arm == "all":
+            raise SystemExit("--scenario kill-rejoin takes one replicate "
+                             "arm, not 'all'")
+        if args.arm is None:
+            args.arm = "replicate/L/async"
+        if ARMS[args.arm][1] != "replication":
+            raise SystemExit("--scenario kill-rejoin needs a replicate "
+                             f"arm; got arm={args.arm!r}")
+        if args.migrate_bytes_per_iter == 0:
+            # small per-iteration chunk budget so recovery visibly
+            # streams across iterations (one layer slab per drain batch)
+            # instead of landing whole inside the kill iteration
+            args.migrate_bytes_per_iter = 4096
+        resolve_arm(args)        # pin meta before the per-run copies
+        print(f"kill-rejoin scenario: arm={args.arm} "
+              f"fail_rank={args.fail_rank} fail_iter={args.fail_iter} "
+              f"rejoin_iter={args.rejoin_iter} "
+              f"budget={args.migrate_bytes_per_iter}B/iter")
+        print(f"stream: {stream_stats(specs)}")
+        results: Dict[str, Dict] = {}
+        telemetry, eng, _, wall = serve(
+            argparse.Namespace(**vars(args)), cfg, params, specs)
+        results["healthy"] = summarize_run(telemetry, eng, wall)
+        telemetry2, eng2, _, wall2 = serve(
+            argparse.Namespace(**vars(args)), cfg, params, specs,
+            inject_faults=True)
+        s2 = summarize_run(telemetry2, eng2, wall2)
+        co = eng2._elastic
+        s2["elastic_events"] = [dict(e) for e in co.events]
+        rec = [e for e in co.events if e["kind"] == "recovered"]
+        t_rec = rec[-1]["t"] if rec else None
+        if t_rec is not None:
+            s2["post_recovery_tok_per_s"] = windowed_tok_per_s(eng2, t_rec)
+            results["healthy"]["post_recovery_tok_per_s"] = \
+                windowed_tok_per_s(eng, t_rec)
+        results["kill-rejoin"] = s2
+        print_comparison(results)
+        print(f"\nelastic: recovery_s={s2.get('recovery_s')} "
+              f"availability={s2.get('availability', 1.0):.4f} "
+              f"degraded_iters={s2.get('degraded_iters')} "
+              f"lost_tokens={s2.get('lost_tokens_total', 0.0):.0f} "
+              f"events={[e['kind'] for e in co.events]}")
+        healthy_post = results["healthy"].get("post_recovery_tok_per_s")
+        if s2.get("post_recovery_tok_per_s") and healthy_post:
+            print(f"post-recovery throughput: "
+                  f"{s2['post_recovery_tok_per_s']:.0f} tok/s vs healthy "
+                  f"{healthy_post:.0f} tok/s "
+                  f"({s2['post_recovery_tok_per_s'] / healthy_post:.3f}x)")
+        if args.json_out:
+            write_json_out(args, results)
+        if args.json:
+            print(json.dumps(results, default=float))
+        return 0
 
     if args.arm == "all":
         # every arm head-to-head on the same realized stream, one

@@ -298,6 +298,10 @@ class PlacementConfig:
     #                                iterations (0 = single shared window)
     decode_replan_every: int = 0   # decode iterations between decode-regime
     #                                replans (0 = prefill cadence only)
+    max_changed_layers: int = 0    # per-replan churn budget: cap on changed
+    #                                layers per per-layer replan, filled in
+    #                                predicted-gain order; recovery layers
+    #                                are exempt (0 = unlimited)
 
 
 @dataclass(frozen=True)
@@ -331,6 +335,14 @@ class ReplicationConfig:
     #                                iterations (0 = single shared window)
     decode_replan_every: int = 0   # decode iterations between decode-regime
     #                                replans (0 = prefill cadence only)
+    max_changed_layers: int = 0    # per-replan churn budget: cap on changed
+    #                                layers per per-layer replan, filled in
+    #                                predicted-gain order; recovery layers
+    #                                are exempt (0 = unlimited)
+    weighted_split: bool = False   # split routed tokens across replicas
+    #                                proportionally to host-rank residual
+    #                                capacity (deficit round-robin schedule)
+    #                                instead of equal-share round-robin
 
 
 @dataclass(frozen=True)

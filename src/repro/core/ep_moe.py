@@ -150,22 +150,41 @@ class Replication(NamedTuple):
     slot_owner: jax.Array
 
 
+class WeightedReplication(NamedTuple):
+    """:class:`Replication` plus a weighted-split schedule:
+    ``split_sched [E, Q]`` sends the ``occ``-th routed token of expert
+    ``e`` to replica ``split_sched[e, occ % Q]`` (host-built deficit
+    round-robin over residual-capacity weights; the plain 3-field
+    ``Replication`` keeps the equal-share ``occ % n_rep`` split)."""
+    rep_pos: jax.Array
+    n_rep: jax.Array
+    slot_owner: jax.Array
+    split_sched: jax.Array
+
+
 def identity_replication(num_experts: int, n_ranks: int) -> Replication:
     """One replica per expert, no spare slots ≡ the identity placement."""
     ar = jnp.arange(num_experts, dtype=jnp.int32)
     return Replication(ar[:, None], jnp.ones_like(ar), ar)
 
 
+def _rep_from_entries(entries):
+    if len(entries) == 4:
+        return WeightedReplication(*entries)
+    return Replication(*entries)
+
+
 def _as_replication(placement, num_experts: int, pol_ep: int) -> Replication:
     """Normalize the user-facing ``placement`` argument: None (identity),
-    a bijective ``Placement``/2-tuple, or a ``Replication``/3-tuple."""
+    a bijective ``Placement``/2-tuple, or a ``Replication``/3- or
+    4-tuple (the 4th entry is the weighted-split schedule)."""
     if placement is None:
         return identity_replication(num_experts, pol_ep)
-    if isinstance(placement, Replication):
+    if isinstance(placement, (Replication, WeightedReplication)):
         return placement
     entries = tuple(placement)
-    if len(entries) == 3:
-        return Replication(*entries)
+    if len(entries) in (3, 4):
+        return _rep_from_entries(entries)
     place = placement if isinstance(placement, Placement) \
         else Placement(*entries)
     pos_e = _placed_index(place, num_experts // pol_ep)
@@ -205,7 +224,14 @@ def _split_assignments(rep: Replication, flat_e: jax.Array,
         return flat_p, jnp.zeros(flat_e.shape, jnp.bool_)
     e = rep.rep_pos.shape[0]
     occ = _occurrence_index(jnp.where(valid_flat, flat_e, e), e)
-    ridx = jnp.where(valid_flat, occ % jnp.take(rep.n_rep, flat_e), 0)
+    sched = getattr(rep, "split_sched", None)
+    if sched is not None:
+        # weighted split: the schedule row encodes the replica shares
+        # (deficit round-robin, host-built by ReplicaSet.split_schedule)
+        q = sched.shape[1]
+        ridx = jnp.where(valid_flat, sched[flat_e, occ % q], 0)
+    else:
+        ridx = jnp.where(valid_flat, occ % jnp.take(rep.n_rep, flat_e), 0)
     flat_p = rep.rep_pos[flat_e, ridx]
     return flat_p, ridx > 0
 
@@ -588,8 +614,8 @@ AUX_SCALARS = ("lb_loss", "z_loss", "drop_frac", "ib_global", "fp4_ranks",
                "gate_open", "split_frac")
 
 
-def _manual_fn(x, mod, val, m_state, router, w_gate, w_up, w_down, rep_pos,
-               n_rep, slot_owner, *, cfg, rcfg, ep, mode, fsdp, train):
+def _manual_fn(x, mod, val, m_state, router, w_gate, w_up, w_down,
+               *tables, cfg, rcfg, ep, mode, fsdp, train):
     comm = _dist_comm(ep, fsdp)
     b, s, d = x.shape
     x_t = x.reshape(b * s, d)
@@ -601,7 +627,7 @@ def _manual_fn(x, mod, val, m_state, router, w_gate, w_up, w_down, rep_pos,
         jax.nn.one_hot(comm.my_rank, ep, dtype=F32) * m_state.reshape(()))
     p = {"router": router, "w_gate": w_gate, "w_up": w_up, "w_down": w_down}
     act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
-    rep = Replication(rep_pos, n_rep, slot_owner)
+    rep = _rep_from_entries(tables)
     if mode == "broadcast":
         y, m_new, aux = _moe_broadcast(x_t, mod_t, val_t, p, m_vec, cfg,
                                        rcfg, comm, act, rep, ep)
@@ -693,14 +719,20 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
 
     fn = partial(_manual_fn, cfg=cfg, rcfg=rcfg, ep=ep, mode=mode,
                  fsdp=fsdp, train=train)
+    table_args = (rep.rep_pos, rep.n_rep, rep.slot_owner)
+    table_specs = (t2_spec, t_spec, t_spec)
+    sched = getattr(rep, "split_sched", None)
+    if sched is not None:                # replicated [E, Q] split schedule
+        table_args += (sched,)
+        table_specs += (t2_spec,)
     y, m_new, aux_s, stats, estats, sstats = shard_map(
         fn, mesh=mesh,
         in_specs=(x_spec, mod_spec, mod_spec, m_spec, r_spec, wg_spec,
-                  wg_spec, wd_spec, t2_spec, t_spec, t_spec),
+                  wg_spec, wd_spec) + table_specs,
         out_specs=(x_spec, m_spec, aux_spec, stats_spec, stats_spec,
                    stats_spec),
     )(x, modality, valid, m_state, p["router"], p["w_gate"], p["w_up"],
-      p["w_down"], rep.rep_pos, rep.n_rep, rep.slot_owner)
+      p["w_down"], *table_args)
 
     aux_mean = aux_s.mean(0)
     aux = {n: aux_mean[i] for i, n in enumerate(AUX_SCALARS)}

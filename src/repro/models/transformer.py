@@ -239,7 +239,9 @@ def n_physical_slots(cfg: ModelConfig, placement=None) -> int:
     Per-layer (stacked ``[n_blocks, ...]``) tables share S across layers,
     so the trailing axis is authoritative either way."""
     n_e = cfg.moe.num_experts if cfg.moe is not None else 1
-    if placement is not None and len(tuple(placement)) == 3:
+    # slot_owner [S] is entry 2 of both the 3-tuple Replication view and
+    # the 4-tuple weighted-split view (entry 3 is the split schedule)
+    if placement is not None and len(tuple(placement)) >= 3:
         return int(tuple(placement)[2].shape[-1])
     return n_e
 

@@ -74,6 +74,10 @@ class ReplanDiscipline:
     _decode_since_replan = 0
     _pending = None                 # staged plan awaiting its slabs
     _pending_remaining = None       # chunk (layer) indices not yet landed
+    _event_replan = False           # a requested event-triggered replan
+    _event_now = False              # the current attempt IS event-triggered
+    must_layers = frozenset()       # layers that must replan regardless of
+    #                                 gain (elastic recovery: lost experts)
 
     def _discipline_cfg(self):
         """The PlacementConfig / ReplicationConfig of the manager."""
@@ -83,13 +87,27 @@ class ReplanDiscipline:
         """Manager-specific extra guard (e.g. the identity planner)."""
         return False
 
+    def request_replan(self) -> None:
+        """Arm an event-triggered replan (elastic rank loss/rejoin): the
+        next ``maybe_replan`` fires immediately — bypassing the cadence,
+        the ``min_gain`` churn guard and the cost gate — as soon as no
+        plan is in flight and the predictor has any observation.  The
+        request is sticky until consumed."""
+        self._event_replan = True
+
     def _cadence(self, it: int) -> Optional[str]:
         """The prediction regime a replan at ``it`` should plan from, or
         None when no cadence is due."""
         p = self._discipline_cfg()
+        self._event_now = False
         if not p.enabled or self._pending is not None \
-                or self._replan_blocked() \
-                or self.predictor.n_obs < p.warmup_iters \
+                or self._replan_blocked():
+            return None
+        if self._event_replan and self.predictor.n_obs > 0:
+            self._event_replan = False
+            self._event_now = True
+            return "mixed"
+        if self.predictor.n_obs < p.warmup_iters \
                 or it == self.last_replan_iter:
             return None
         if p.replan_every > 0 and it % p.replan_every == 0:
@@ -202,7 +220,15 @@ class ReplanDiscipline:
     def _replan_layers(self, it: int, regime: str):
         """Plan each layer independently from its own EWMA row; layers
         below the churn guard keep their current state, so the diff (and
-        the migration traffic) covers changed layers only."""
+        the migration traffic) covers changed layers only.
+
+        Churn budget (``max_changed_layers``): when set, at most that
+        many layers change per replan, filled in predicted-gain order —
+        an event-triggered recovery replan then cannot queue an unbounded
+        migration backlog.  ``must_layers`` (elastic recovery: layers
+        with unroutable experts) are exempt from both the budget and the
+        ``min_gain`` guard; an event-triggered replan (``request_replan``)
+        also bypasses ``min_gain`` and the cost gate for every layer."""
         pred = self.predictor.predict_layers(regime)
         if pred is None:
             return None
@@ -211,19 +237,40 @@ class ReplanDiscipline:
         if loads.sum() <= 0 or loads.shape[0] != len(states):
             return None
         p = self._discipline_cfg()
-        new_states = list(states)
+        forced = self._event_now
+        must = {int(l) for l in self.must_layers}
+        candidates = []                        # (gain, layer, new_state)
         for l, state in enumerate(states):
             load_l, vis_l = loads[l], viss[l]
             if load_l.sum() <= 0:
-                continue
+                if l not in must:
+                    continue
+                # a recovery layer must replan even without load signal
+                load_l = np.ones_like(load_l)
             new = self._plan_one_layer(load_l, vis_l)
             old_max = state.rank_loads(load_l).max()
             new_max = new.rank_loads(load_l).max()
+            gain = (old_max - new_max) / old_max if old_max > 0 else 0.0
+            if l in must:
+                candidates.append((np.inf, l, new))
+                continue
             # per-layer churn guard: strictly positive gain required
             # (a zero-gain re-permutation of one layer is pure migration
             # churn the layer-diff would otherwise ship)
-            if old_max <= 0 or (old_max - new_max) / old_max <= p.min_gain:
+            if not forced and (old_max <= 0 or gain <= p.min_gain):
                 continue
+            if forced and old_max <= 0:
+                continue
+            candidates.append((gain, l, new))
+        budget = int(getattr(p, "max_changed_layers", 0))
+        if budget > 0 and len(candidates) > budget:
+            mandatory = [c for c in candidates if not np.isfinite(c[0])]
+            optional = sorted((c for c in candidates if np.isfinite(c[0])),
+                              key=lambda c: -c[0])
+            candidates = mandatory \
+                + optional[:max(budget - len(mandatory), 0)]
+        new_states = list(states)
+        for _, l, new in candidates:
             new_states[l] = new
         plan = self._diff_layer_states(states, new_states)
         if plan.is_noop:
@@ -232,8 +279,8 @@ class ReplanDiscipline:
                            for l, s in enumerate(states)])
         new_rl = np.stack([s.rank_loads(loads[l])
                            for l, s in enumerate(new_states)])
-        if not self._gate_accept(old_rl, new_rl,
-                                 self._layer_gate_moved(plan)):
+        if not forced and not self._gate_accept(
+                old_rl, new_rl, self._layer_gate_moved(plan)):
             return None
         self.last_replan_iter = it
         return self._accept_layer_plan(plan, new_states)
@@ -394,17 +441,21 @@ class PlacementManager(ReplanDiscipline):
         if load.sum() <= 0:
             return None
         p = self.pcfg
+        forced = self._event_now
         new = plan_placement(p.planner, load, self.ep, vis=vis, cfg=p)
         # skip churn: require a predicted max-rank-load improvement
+        # (event-triggered replans bypass the guard and the cost gate)
         old_max = self.table.rank_loads(load).max()
         new_max = new.rank_loads(load).max()
-        if old_max <= 0 or (old_max - new_max) / old_max < p.min_gain:
+        if not forced and (old_max <= 0 or
+                           (old_max - new_max) / old_max < p.min_gain):
             return None
         plan = migrate.diff(self.table, new, self.bytes_per_expert)
         if plan.is_noop:
             return None
-        if not self._gate_accept(self.table.rank_loads(load),
-                                 new.rank_loads(load), plan.n_moved):
+        if not forced and not self._gate_accept(
+                self.table.rank_loads(load), new.rank_loads(load),
+                plan.n_moved):
             return None
         self.last_replan_iter = it
         return self._stage(plan)

@@ -108,6 +108,12 @@ class ReplicaManager(ReplanDiscipline):
             cost_gate.bandwidth = self.bandwidth
         self._pending: Optional[Plan] = None
         self._pending_remaining = None
+        # elastic serving: which EP ranks are live.  Dead ranks are masked
+        # out of the capacity model, the planner and the split weights;
+        # the ElasticCoordinator owns the transitions.
+        self.rank_alive = np.ones(ep, bool)
+        self.must_layers = set()
+        self._event_replan = False
         # cumulative accounting
         self.n_migrations = 0
         self.migrated_bytes = 0
@@ -148,15 +154,74 @@ class ReplicaManager(ReplanDiscipline):
                     n_tables=self.n_tables)
 
     def device_tables(self):
-        """(rep_pos, n_rep, slot_owner) of the *routable* set(s) — staged
-        plans are invisible here until committed.  Stacked ``[L, ...]``
-        arrays for a per-layer manager (scanned alongside the block
-        params), plain arrays for a shared one."""
+        """(rep_pos, n_rep, slot_owner[, split_sched]) of the *routable*
+        set(s) — staged plans are invisible here until committed.
+        Stacked ``[L, ...]`` arrays for a per-layer manager (scanned
+        alongside the block params), plain arrays for a shared one.
+        Under ``weighted_split`` a 4th entry carries the per-expert
+        replica schedule built from the predictor's residual-capacity
+        weights (equal-share until the first observation)."""
         if not self.per_layer:
-            return self.rsets[0].as_arrays()
-        return (np.stack([rs.rep_pos for rs in self.rsets]),
+            base = self.rsets[0].as_arrays()
+            if not self.rpcfg.weighted_split:
+                return base
+            return base + (self._split_schedules()[0],)
+        base = (np.stack([rs.rep_pos for rs in self.rsets]),
                 np.stack([rs.n_rep for rs in self.rsets]),
                 np.stack([rs.slot_owner for rs in self.rsets]))
+        if not self.rpcfg.weighted_split:
+            return base
+        return base + (np.stack(self._split_schedules()),)
+
+    def _split_schedules(self) -> List[np.ndarray]:
+        """Per-set ``[E, Q]`` weighted-split schedules from the predicted
+        loads (residual host-rank capacity; dead ranks weight 0)."""
+        pred = self.predictor.predict_layers("mixed")
+        loads = None
+        if pred is not None and pred[0].sum() > 0:
+            loads = pred[0]
+        out = []
+        alive = self._rank_alive_arg()
+        for l, rs in enumerate(self.rsets):
+            if loads is None:
+                out.append(rs.split_schedule())
+                continue
+            load_l = loads[l] if (self.per_layer
+                                  and loads.shape[0] == self.n_tables) \
+                else loads.sum(0)
+            w = rs.residual_split_weights(load_l, rank_alive=alive)
+            out.append(rs.split_schedule(w))
+        return out
+
+    def wants_table_refresh(self, it: int) -> bool:
+        """Should the engine rebuild its cached device tables at ``it``
+        even though no plan committed?  Weighted-split schedules track
+        the predictor, so they are refreshed on the replan cadence."""
+        return (self.rpcfg.weighted_split and self.rpcfg.replan_every > 0
+                and it % self.rpcfg.replan_every == 0)
+
+    # -- elastic serving ---------------------------------------------------
+    def _rank_alive_arg(self) -> Optional[np.ndarray]:
+        """``rank_alive`` for planner/capacity calls — None while every
+        rank is live (the planners' zero-drift default path)."""
+        return None if self.rank_alive.all() else self.rank_alive.copy()
+
+    def mask_dead_ranks(self) -> Dict[int, np.ndarray]:
+        """Re-pad every routable set onto the live ranks (an immediate
+        table flip: surviving replicas' slabs are already resident).
+        Returns ``{layer: lost_experts}`` for experts with no surviving
+        replica — unroutable until re-materialized from checkpoint."""
+        lost: Dict[int, np.ndarray] = {}
+        for l, rs in enumerate(self.rsets):
+            masked, lost_l = rs.masked(self.rank_alive)
+            self.rsets[l] = masked
+            if lost_l.size:
+                lost[l] = lost_l
+        return lost
+
+    def hosts_rank(self, rank: int) -> bool:
+        """Does any routable set keep a live replica on ``rank``?"""
+        return any(rs.hosts_rank(rank) for rs in self.rsets)
 
     # -- engine feeds ------------------------------------------------------
     def observe(self, expert_stats: np.ndarray,
@@ -197,11 +262,14 @@ class ReplicaManager(ReplanDiscipline):
             if loads.sum() <= 0:
                 continue
             seen = True
+            alive = self._rank_alive_arg()
             if self.per_layer and loads.shape[0] == self.n_tables:
-                f = max(rs.capacity_factor(loads[l], margin, floor)
+                f = max(rs.capacity_factor(loads[l], margin, floor,
+                                           rank_alive=alive)
                         for l, rs in enumerate(self.rsets))
             else:
-                f = self.rset.capacity_factor(loads.sum(0), margin, floor)
+                f = self.rset.capacity_factor(loads.sum(0), margin, floor,
+                                              rank_alive=alive)
             out = max(out, f)
         return out if seen else float("inf")
 
@@ -220,23 +288,28 @@ class ReplicaManager(ReplanDiscipline):
         if self.per_layer:
             return self._replan_layers(it, regime)
         p = self.rpcfg
+        forced = self._event_now
         load, vis = self.predictor.predict(regime)
         if load.sum() <= 0:
             return None
         new = plan_replication(load, self.ep, self.slots_per_rank,
                                max_replicas=p.max_replicas, vis=vis,
-                               vis_weight=p.vis_weight)
+                               vis_weight=p.vis_weight,
+                               rank_alive=self._rank_alive_arg())
         # churn guard: require a predicted post-split max-rank-load gain
+        # (event-triggered replans — rank loss/rejoin — bypass the guard
+        # and the cost gate: availability beats churn discipline)
         old_max = self.rset.rank_loads(load).max()
         new_max = new.rank_loads(load).max()
-        if old_max <= 0 or (old_max - new_max) / old_max < p.min_gain:
+        if not forced and (old_max <= 0 or
+                           (old_max - new_max) / old_max < p.min_gain):
             return None
         plan = migrate.diff(self.rset, new, self.bytes_per_expert)
         if plan.is_noop:
             return None
-        if not self._gate_accept(self.rset.rank_loads(load),
-                                 new.rank_loads(load),
-                                 len(plan.crossrank_slots)):
+        if not forced and not self._gate_accept(
+                self.rset.rank_loads(load), new.rank_loads(load),
+                len(plan.crossrank_slots)):
             return None
         self.last_replan_iter = it
         return self._stage(plan)
@@ -251,7 +324,8 @@ class ReplicaManager(ReplanDiscipline):
         p = self.rpcfg
         return plan_replication(load, self.ep, self.slots_per_rank,
                                 max_replicas=p.max_replicas, vis=vis,
-                                vis_weight=p.vis_weight)
+                                vis_weight=p.vis_weight,
+                                rank_alive=self._rank_alive_arg())
 
     def _diff_layer_states(self, old_states: list, new_states: list
                            ) -> migrate.LayerReplicaMigrationPlan:
@@ -338,6 +412,11 @@ class ReplicaManager(ReplanDiscipline):
         self._pending = None
         self._pending_remaining = None
         self._decode_since_replan = 0
+        # elastic state is runtime-only (a restore implies a restart onto
+        # a healthy mesh); checkpoints are refused mid-recovery anyway
+        self.rank_alive = np.ones(self.ep, bool)
+        self.must_layers = set()
+        self._event_replan = False
         self.predictor.load_state_dict(
             {k[len("pred_"):]: v for k, v in state.items()
              if k.startswith("pred_")})

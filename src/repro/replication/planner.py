@@ -37,7 +37,8 @@ from repro.replication.replica_set import ReplicaSet
 def plan_replication(load: np.ndarray, n_ranks: int, slots_per_rank: int,
                      max_replicas: int = 2,
                      vis: Optional[np.ndarray] = None,
-                     vis_weight: float = 1.0) -> ReplicaSet:
+                     vis_weight: float = 1.0,
+                     rank_alive: Optional[np.ndarray] = None) -> ReplicaSet:
     load = np.asarray(load, np.float64)
     e = load.shape[0]
     vis = np.zeros(e) if vis is None else np.asarray(vis, np.float64)
@@ -45,8 +46,18 @@ def plan_replication(load: np.ndarray, n_ranks: int, slots_per_rank: int,
     assert slots_per_rank >= e // n_ranks, (slots_per_rank, e, n_ranks)
     assert 1 <= max_replicas, max_replicas
     s = n_ranks * slots_per_rank
-    spare = s - e
-    cap = min(max_replicas, n_ranks)
+    # dead-rank-aware planning (elastic serving): dead ranks contribute no
+    # slots, replica counts are capped at the live-rank count, and spare
+    # spending is capped at the *live* slot surplus so every expert's
+    # primary still fits (phase 2 would otherwise drop cold primaries)
+    alive = (np.ones(n_ranks, bool) if rank_alive is None
+             else np.asarray(rank_alive, bool))
+    assert alive.shape == (n_ranks,), (alive.shape, n_ranks)
+    n_live = int(alive.sum())
+    assert n_live * slots_per_rank >= e, \
+        f"{e} experts cannot fit on {n_live} live ranks x {slots_per_rank}"
+    spare = n_live * slots_per_rank - e
+    cap = min(max_replicas, n_live)
     score = load + vis_weight * vis
 
     # phase 1: replica counts by marginal per-replica hotness
@@ -64,7 +75,7 @@ def plan_replication(load: np.ndarray, n_ranks: int, slots_per_rank: int,
     inst_share = np.repeat(share, counts)
     order = np.argsort(-inst_share, kind="stable")
     rank_load = np.zeros(n_ranks)
-    rank_free = np.full(n_ranks, slots_per_rank, np.int64)
+    rank_free = np.where(alive, slots_per_rank, 0).astype(np.int64)
     hosts = np.zeros((e, n_ranks), bool)
     placed_ranks = [[] for _ in range(e)]
     for i in order:

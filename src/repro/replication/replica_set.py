@@ -120,19 +120,28 @@ class ReplicaSet:
         """[E, R] owning rank per replica (pad entries repeat the primary)."""
         return self.rep_pos // self.slots_per_rank
 
-    def rank_loads(self, expert_load: np.ndarray) -> np.ndarray:
+    def rank_loads(self, expert_load: np.ndarray,
+                   weights: np.ndarray = None) -> np.ndarray:
         """Post-split per-rank loads [n_ranks]: each expert's load split
-        equally over its replicas (the round-robin dispatch rule)."""
+        over its replicas — equally (the round-robin dispatch rule) or by
+        ``weights`` [E, R] (the weighted-split dispatch rule; rows are
+        normalized over the valid replicas)."""
         load = np.asarray(expert_load, np.float64)
-        share = self._per_replica(load / np.maximum(self.n_rep, 1))
         valid = self._valid_mask()
+        if weights is None:
+            share = self._per_replica(load / np.maximum(self.n_rep, 1))
+        else:
+            w = np.where(valid, np.asarray(weights, np.float64), 0.0)
+            tot = np.maximum(w.sum(axis=1, keepdims=True), 1e-12)
+            share = load[:, None] * (w / tot)
         out = np.zeros(self.n_ranks, np.float64)
         np.add.at(out, self.rep_rank[valid], share[valid])
         return out
 
     def capacity_factor(self, expert_load: np.ndarray,
                         margin: float = 1.25,
-                        floor: float = 1.0) -> float:
+                        floor: float = 1.0,
+                        rank_alive: np.ndarray = None) -> float:
         """Dispatch ``capacity_factor`` sized from the *post-split*
         worst-case rank load instead of the bijective worst case.
 
@@ -144,12 +153,19 @@ class ReplicaSet:
         buffer (and its HBM) can shrink by the same ratio.  ``margin``
         is the safety headroom over the predicted peak; ``floor`` the
         minimum factor (1.0 = perfectly balanced provisioning).
+
+        ``rank_alive`` [n_ranks] restricts the peak/ideal computation to
+        live ranks (degraded mode: dead ranks serve no tokens, so the
+        surviving ranks' buffers must absorb the redistributed load).
         """
         rl = self.rank_loads(expert_load)
+        if rank_alive is not None:
+            rl = rl[np.asarray(rank_alive, bool)]
+        n = max(rl.shape[0], 1)
         tot = rl.sum()
         if tot <= 0:
             return float(floor)
-        ib = rl.max() / (tot / self.n_ranks)   # post-split peak / ideal
+        ib = rl.max() / (tot / n)              # post-split peak / ideal
         return float(max(floor, margin * ib))
 
     def slot_loads(self, expert_load: np.ndarray) -> np.ndarray:
@@ -165,6 +181,119 @@ class ReplicaSet:
         """(rep_pos [E,R], n_rep [E], slot_owner [S]) for the traced MoE
         layer (:class:`repro.core.ep_moe.Replication`)."""
         return self.rep_pos, self.n_rep, self.slot_owner
+
+    # -- elastic views ----------------------------------------------------
+    def masked(self, rank_alive: np.ndarray):
+        """Mask dead ranks out of the set: ``(masked_set, lost_experts)``.
+
+        Per expert, replicas on dead ranks are dropped and the row is
+        re-padded from the first surviving replica — a table flip with no
+        data motion, because surviving slabs are already resident (the
+        distinct-rank planner invariant is what guarantees a candidate).
+        An expert with *no* surviving replica keeps its original row (it
+        still points at the dead slot, whose slab is gone) and is reported
+        in ``lost_experts``; its tokens are unroutable until the expert is
+        re-materialized from checkpoint.
+        """
+        alive = np.asarray(rank_alive, bool)
+        if alive.shape != (self.n_ranks,):
+            raise ValueError((alive.shape, self.n_ranks))
+        rp = self.rep_pos.copy()
+        nr = self.n_rep.copy()
+        lost = []
+        for ex in range(self.num_experts):
+            n = int(self.n_rep[ex])
+            live = [j for j in range(n) if alive[self.rep_rank[ex, j]]]
+            if not live:
+                lost.append(ex)
+                continue
+            row = [self.rep_pos[ex, j] for j in live]
+            rp[ex] = row + [row[0]] * (self.max_replicas - len(row))
+            nr[ex] = len(live)
+        return (ReplicaSet(rp, nr, self.n_ranks, self.slots_per_rank),
+                np.asarray(lost, np.int64))
+
+    def hosts_rank(self, rank: int) -> bool:
+        """Does any live replica reside on ``rank``?"""
+        return bool((self.rep_rank[self._valid_mask()] == rank).any())
+
+    # -- weighted token splitting -----------------------------------------
+    SPLIT_QUANTUM = 12             # schedule length Q (lcm of 1..4, 6)
+
+    def split_schedule(self, weights: np.ndarray = None) -> np.ndarray:
+        """[E, Q] int32 replica-index schedule for weighted token
+        splitting
+        (:class:`repro.core.ep_moe.WeightedReplication.split_sched`).
+
+        The traced dispatch sends the ``occ``-th routed token of expert
+        ``e`` to replica ``sched[e, occ % Q]``.  With ``weights`` the
+        schedule is built by deficit round-robin — per phase slot each
+        replica accrues credit proportional to its normalized weight and
+        the highest-credit replica (lowest index on ties) is picked — so
+        token shares match the weights to quantization ±1/Q *interleaved*,
+        not block-wise: shard-local occurrence counters stay within ±1 of
+        the global split, the same property the equal round-robin has.
+        With equal weights the schedule is exactly ``m % n_rep`` — when
+        ``n_rep`` divides Q this is bitwise-identical to the unscheduled
+        ``occ % n_rep`` path.
+        """
+        e, r = self.rep_pos.shape
+        q = self.SPLIT_QUANTUM
+        base = (np.arange(q)[None, :]
+                % np.maximum(self.n_rep, 1)[:, None]).astype(np.int32)
+        if weights is None:
+            return base
+        w = np.where(self._valid_mask(),
+                     np.asarray(weights, np.float64), 0.0)
+        sched = base.copy()
+        for ex in range(e):
+            n = int(self.n_rep[ex])
+            ww = w[ex, :n]
+            if n <= 1 or ww.sum() <= 0:
+                continue
+            ww = ww / ww.sum()
+            credit = np.zeros(n)
+            for m in range(q):
+                credit += ww
+                j = int(np.argmax(credit))   # argmax ties -> lowest index
+                sched[ex, m] = j
+                credit[j] -= 1.0
+        return sched
+
+    def residual_split_weights(self, expert_load: np.ndarray,
+                               rank_alive: np.ndarray = None,
+                               floor: float = 1e-3) -> np.ndarray:
+        """[E, R] split weights proportional to host-rank *residual*
+        capacity: a replica whose rank is already loaded (by the other
+        experts it hosts) takes a smaller share of its expert's tokens.
+
+        Residual of replica ``j`` = ``max(target - other_load_j, floor)``
+        where ``target`` is the mean live-rank load and ``other_load_j``
+        is the host rank's equal-split load minus this expert's own share
+        (so an expert doesn't see its own traffic as congestion).
+        Replicas on dead ranks get weight 0 (degraded mode).
+        """
+        load = np.asarray(expert_load, np.float64)
+        rl = self.rank_loads(load)
+        alive = (np.ones(self.n_ranks, bool) if rank_alive is None
+                 else np.asarray(rank_alive, bool))
+        n_live = max(int(alive.sum()), 1)
+        target = rl[alive].sum() / n_live
+        eps = floor * max(target, 1.0)
+        w = np.zeros(self.rep_pos.shape)
+        w[:, 0] = 1.0
+        share = load / np.maximum(self.n_rep, 1)
+        for ex in np.flatnonzero(self.n_rep > 1):
+            n = int(self.n_rep[ex])
+            ranks = self.rep_rank[ex, :n]
+            other = rl[ranks] - share[ex]
+            resid = np.maximum(target - other, eps)
+            resid[~alive[ranks]] = 0.0
+            if resid.sum() <= 0:           # every replica on a dead rank
+                resid[:] = 1.0
+            w[ex, :n] = resid
+            w[ex, n:] = 0.0
+        return w
 
     # -- constructors -----------------------------------------------------
     @classmethod

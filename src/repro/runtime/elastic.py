@@ -38,14 +38,22 @@ def reshard(tree: Tree, spec_tree: Tree, new_mesh) -> Tree:
                         is_leaf=lambda x: isinstance(x, P))
 
 
-def shrink_mesh(mesh, lost_axis: str = "pod"):
-    """Mesh minus one slice of `lost_axis` (node-failure simulation)."""
+def shrink_mesh(mesh, lost_axis: str = "pod",
+                lost_index: Optional[int] = None):
+    """Mesh minus one slice of `lost_axis` (node-failure simulation).
+
+    ``lost_index`` selects WHICH slice is lost (default: the last) — the
+    serving-side elastic coordinator shrinks the specific EP rank that
+    failed, not necessarily the tail one."""
     names = list(mesh.axis_names)
     shape = list(mesh.devices.shape)
     i = names.index(lost_axis)
     if shape[i] <= 1:
         raise ValueError(f"cannot shrink axis {lost_axis} below 1")
-    shape[i] -= 1
-    keep = mesh.devices.take(range(shape[i]), axis=i)
+    lost = shape[i] - 1 if lost_index is None else int(lost_index)
+    if not 0 <= lost < shape[i]:
+        raise ValueError(f"lost_index {lost} out of [0, {shape[i]})")
+    keep = mesh.devices.take([j for j in range(shape[i]) if j != lost],
+                             axis=i)
     from jax.sharding import Mesh
     return Mesh(keep, axis_names=tuple(names))

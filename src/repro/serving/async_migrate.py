@@ -77,18 +77,33 @@ class MigrationExecutor:
     ``drain`` is called once per serving iteration until ``draining`` is
     False.  Chunks are ordered by plan layer index — deeper layers land
     later, which matches the scan order but is otherwise arbitrary (the
-    per-layer consistency rule makes any order safe)."""
+    per-layer consistency rule makes any order safe).
+
+    ``priority_layers`` (elastic recovery) moves those layers to the
+    queue front: recovery chunks re-materializing unroutable experts
+    drain before optimization chunks, under the same byte budget.
+    ``patch_fn(params, plan, layers)`` is applied after each batch's
+    slab gather and before its commit — the coordinator's hook that
+    overwrites checkpoint-sourced rows for experts whose source slab
+    died with its rank."""
 
     def __init__(self, manager, plan,
-                 bytes_per_iter: Optional[int] = None):
+                 bytes_per_iter: Optional[int] = None,
+                 priority_layers=None, patch_fn=None):
         self.manager = manager
         self.plan = plan
+        self.patch_fn = patch_fn
         # explicit budget wins; otherwise measured bandwidth x overlap
         self.bytes_per_iter = None if not bytes_per_iter \
             else int(bytes_per_iter)
         self.queue: List[SlabChunk] = [
             SlabChunk(layer=l, nbytes=int(manager.layer_bytes(plan, l)))
             for l in manager.plan_layers(plan)]
+        if priority_layers:
+            prio = {int(l) for l in priority_layers}
+            # stable: recovery chunks first, layer order preserved within
+            # each class
+            self.queue.sort(key=lambda c: c.layer not in prio)
         self.total_bytes = sum(c.nbytes for c in self.queue)
         self.drained_bytes = 0
         self.n_drains = 0
@@ -96,6 +111,12 @@ class MigrationExecutor:
     @property
     def draining(self) -> bool:
         return bool(self.queue)
+
+    def cancel(self) -> None:
+        """Drop the remaining chunks and abort the staged plan (already
+        committed layers stay routable — their slabs landed)."""
+        self.queue.clear()
+        self.manager.abort()
 
     def budget_bytes(self, iter_s: Optional[float] = None) -> int:
         """This iteration's byte budget: the explicit knob, or the bytes
@@ -141,6 +162,17 @@ class MigrationExecutor:
             raise
         wall = time.perf_counter() - t0
         self.manager.bandwidth.observe(nbytes, wall)
+        if self.patch_fn is not None:
+            # recovery patch: checkpoint-sourced rows for experts whose
+            # source slab died with its rank (outside the timed window —
+            # checkpoint reads would pollute the fabric-bandwidth EWMA)
+            try:
+                new_params = self.patch_fn(new_params, self.plan, layers)
+                _block_until_ready(new_params)
+            except BaseException:
+                self.queue.clear()
+                self.manager.abort()
+                raise
         self.manager.commit_layers(self.plan, layers)
         self.drained_bytes += nbytes
         self.n_drains += 1

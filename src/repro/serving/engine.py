@@ -105,6 +105,11 @@ class IterStats:
     #                              iteration's forward (async overlap)
     split_frac: float = 0.0      # routed fraction served by a non-primary
     #                              replica (0 under a bijective table)
+    n_unroutable: int = 0        # logical experts with no live replica
+    #                              (elastic degraded mode; 0 when healthy)
+    lost_tokens: float = 0.0     # tokens this iteration routed to an
+    #                              unroutable expert (they landed on the
+    #                              dead rank's zeroed slots)
 
 
 def _bucket(n: int, lo: int = 8) -> int:
@@ -126,7 +131,8 @@ class Engine:
                  virtual_ep: Optional[int] = None,
                  capacity_margin: Optional[float] = None,
                  migrate_async: bool = False,
-                 migrate_bytes_per_iter: Optional[int] = None):
+                 migrate_bytes_per_iter: Optional[int] = None,
+                 elastic=None, fault_injector=None):
         self.cfg, self.params, self.rcfg = cfg, params, rcfg
         self.max_slots, self.max_len = max_slots, max_len
         self.temperature = temperature
@@ -169,7 +175,7 @@ class Engine:
             # (forgotten expand_moe_params would silently misroute)
             from repro.placement.migrate import moe_param_paths
             tables = placement.device_tables()
-            want = int(tables[2].shape[-1]) if len(tables) == 3 \
+            want = int(tables[2].shape[-1]) if len(tables) >= 3 \
                 else cfg.moe.num_experts
             paths = moe_param_paths(params)
             if paths:
@@ -199,6 +205,14 @@ class Engine:
         self.migration_bytes_moved = 0
         self.migration_stall_s = 0.0
         self.migration_hidden_s = 0.0
+        # elastic serving: an ElasticCoordinator over the same manager
+        # turns rank loss/rejoin into between-iteration events; a
+        # FaultInjector scripts them (polled once per step)
+        self._elastic = elastic
+        self._fault = fault_injector
+        if elastic is not None:
+            assert placement is not None and elastic.manager is placement, \
+                "elastic coordinator must wrap this engine's manager"
         self._place_cache = None                  # device copy of the table
         self._it = 0
         self.cache = tf.init_cache(cfg, max_slots, max_len)
@@ -281,9 +295,17 @@ class Engine:
             return
         if self.migrate_async:
             from repro.serving.async_migrate import MigrationExecutor
+            prio = patch = None
+            if self._elastic is not None:
+                # recovery chunks (re-materializing unroutable experts)
+                # drain ahead of optimization chunks; the patch drops
+                # checkpoint rows into the landed slots pre-commit
+                prio = self._elastic.recovery_layers(plan)
+                patch = self._elastic.patch_params
             self._mig = MigrationExecutor(
                 self._placement, plan,
-                bytes_per_iter=self.migrate_bytes_per_iter)
+                bytes_per_iter=self.migrate_bytes_per_iter,
+                priority_layers=prio, patch_fn=patch)
             self._drain_migration()
             return
         # synchronous path: the whole slab permutation lands between two
@@ -300,8 +322,21 @@ class Engine:
             self._placement.abort()
             raise
         wall = time.perf_counter() - t0
-        self.params = new_params
         self._placement.bandwidth.observe(plan.moved_bytes, wall)
+        layers = self._placement.plan_layers(plan)
+        if self._elastic is not None:
+            # lost experts' slabs were gathered from the dead (zeroed)
+            # slots; overwrite them with checkpoint rows BEFORE the new
+            # tables flip routable (staged-commit rule) — outside the
+            # timed window so ckpt reads don't pollute the bandwidth EWMA
+            try:
+                new_params = self._elastic.patch_params(new_params, plan,
+                                                        layers)
+                jax.block_until_ready(new_params)
+            except BaseException:
+                self._placement.abort()
+                raise
+        self.params = new_params
         # staged plans become routable only after the slab gather above
         # produced the new weights (consistency rule)
         self._placement.commit(plan)
@@ -314,12 +349,15 @@ class Engine:
             # record the measured seconds, not 0
             secs = wall
         self._charge_migration(int(plan.moved_bytes), secs, 0.0)
+        if self._elastic is not None:
+            self._elastic.on_layers_landed(plan, layers)
 
     def _drain_migration(self):
         """One budgeted chunk batch of the in-flight plan: land the
         slabs, commit exactly those layers, split the transfer seconds
         into hidden (fits the budget — overlapped with this iteration's
         forward) and stall (the excess, charged to a virtual clock)."""
+        plan = self._mig.plan
         try:
             self.params, rep = self._mig.drain(self.params, self._iter_s)
         except BaseException:
@@ -341,6 +379,11 @@ class Engine:
         if rep.done:
             self._mig = None
         self._charge_migration(rep.nbytes, stall, hidden)
+        if self._elastic is not None and rep.layers:
+            # landed layers' lost experts are re-materialized (the
+            # executor's patch_fn ran pre-commit); clear them and stamp
+            # recovery_s / warm-up completion
+            self._elastic.on_layers_landed(plan, rep.layers)
 
     def _charge_migration(self, nbytes: int, stall_s: float,
                           hidden_s: float):
@@ -365,6 +408,38 @@ class Engine:
             it += 1
             assert it <= max_iters, "migration drain failed to converge"
             self._drain_migration()
+
+    # -- elastic serving events ----------------------------------------------
+    def _abort_migration(self) -> None:
+        """Drop any in-flight or staged plan (a fault invalidates it: the
+        plan was computed against the pre-fault rank set).  Landed layers
+        stay routable — their slabs did land."""
+        if self._mig is not None:
+            self._mig.cancel()
+            self._mig = None
+        elif getattr(self._placement, "in_flight", None) is not None:
+            self._placement.abort()
+        self._place_cache = None
+
+    def fail_rank(self, rank: int) -> None:
+        """The fault-injection hook: simulate the loss of EP ``rank``
+        between iterations.  The in-flight plan (if any) is aborted, the
+        dead rank is masked out of the routable tables (experts with a
+        surviving replica stay routable this same iteration), its weight
+        slabs are zeroed, and the coordinator arms an event-triggered
+        recovery replan."""
+        assert self._elastic is not None, \
+            "fail_rank requires an ElasticCoordinator"
+        self._abort_migration()
+        self.params = self._elastic.fail_rank(rank, self.params)
+        self._place_cache = None                  # tables were masked
+
+    def rejoin_rank(self, rank: int) -> None:
+        """The returning rank becomes plannable; it turns routable layer
+        by layer as the warm-up plan's slabs land (staged commit)."""
+        assert self._elastic is not None, \
+            "rejoin_rank requires an ElasticCoordinator"
+        self._elastic.rejoin_rank(rank)
 
     def _maybe_resize_capacity(self):
         """Replica-aware capacity: shrink (or restore) the dispatch
@@ -447,6 +522,11 @@ class Engine:
             migration_bytes=mig_bytes, migration_s=mig_s,
             migration_hidden_s=mig_hidden,
             split_frac=float(aux.get("split_frac", 0.0)) / self._n_moe)
+        if self._elastic is not None and self._elastic.recovering:
+            stat.n_unroutable = int(self._elastic.lost_experts.size)
+            if "expert_stats" in aux:
+                stat.lost_tokens = self._elastic.lost_token_count(
+                    np.asarray(aux["expert_stats"]))
         self.stats.append(stat)
         if self._placement is not None and "expert_stats" in aux:
             # [n_blocks, 2, E] per-MoE-layer expert loads -> predictor
@@ -561,6 +641,22 @@ class Engine:
     def step(self) -> int:
         """One continuous-batching iteration. Returns #active sequences."""
         self._it += 1
+        # -2) scripted rank faults fire between iterations — the event
+        # boundary of the elastic subsystem (dispatch tables, params and
+        # plans are all quiescent here)
+        if self._fault is not None:
+            for ev in self._fault.due(self._it):
+                if ev.kind == "fail":
+                    self.fail_rank(ev.rank)
+                else:
+                    self.rejoin_rank(ev.rank)
+        # weighted token splitting re-derives its per-replica schedule
+        # from the latest residual-capacity prediction at the manager's
+        # cadence — a pure table refresh, no weights move
+        if self._placement is not None and \
+                getattr(self._placement, "wants_table_refresh",
+                        lambda it: False)(self._it):
+            self._place_cache = None
         # -1) placement: apply a due replan before any forward of this
         # iteration sees the weights (plan and slabs move atomically),
         # then re-derive the replica-aware dispatch capacity from the
@@ -676,6 +772,11 @@ class Engine:
                 f"cannot {what} a checkpoint while a migration is "
                 "draining (params hold a partially-landed slab layout); "
                 "call drain_migrations() first")
+        if self._elastic is not None and self._elastic.recovering:
+            raise RuntimeError(
+                f"cannot {what} a checkpoint mid-recovery (params hold "
+                "zeroed slabs for unroutable experts a restore would "
+                "resurrect); let the recovery plan land first")
 
     def load_checkpoint(self, ckpt_dir: str,
                         step: Optional[int] = None) -> int:

@@ -78,11 +78,22 @@ class Telemetry:
         self.migration_s_total = 0.0
         self.migration_hidden_s_total = 0.0
         self.n_migrations = 0
+        # elastic-serving availability accounting (cumulative, like the
+        # migration counters): an iteration is *degraded* when >= 1
+        # expert was unroutable (a rank died and took the only replica);
+        # each completed recovery stamps its wall seconds
+        self.degraded_iters = 0
+        self.lost_tokens_total = 0.0
+        self.recoveries: List[float] = []
 
     # -- feeds ------------------------------------------------------------
     def record_iter(self, stat) -> None:
         self.iters.append(stat)
         self.n_iters += 1
+        if getattr(stat, "n_unroutable", 0) > 0:
+            self.degraded_iters += 1
+            self.lost_tokens_total += float(
+                getattr(stat, "lost_tokens", 0.0))
         mig = getattr(stat, "migration_bytes", 0)
         mig_s = getattr(stat, "migration_s", 0.0)
         mig_h = getattr(stat, "migration_hidden_s", 0.0)
@@ -98,6 +109,11 @@ class Telemetry:
             # batch, not per plan; the manager's n_migrations counts
             # committed plans
             self.n_migrations += 1
+
+    def record_recovery(self, seconds: float) -> None:
+        """One completed elastic recovery (rank loss -> every expert
+        routable again), in wall/virtual seconds."""
+        self.recoveries.append(float(seconds))
 
     def record_request(self, req) -> None:
         if req.ttft is None:
@@ -149,6 +165,14 @@ class Telemetry:
         return summarize([getattr(s, "drop_frac", 0.0)
                           for s in self._phase(phase)])
 
+    @property
+    def availability(self) -> float:
+        """Fraction of iterations with every expert routable (1.0 when
+        no iteration ever ran degraded)."""
+        if self.n_iters == 0:
+            return 1.0
+        return 1.0 - self.degraded_iters / self.n_iters
+
     def ttft_summary(self) -> Dict[str, float]:
         return summarize([r.ttft for r in self.requests])
 
@@ -186,4 +210,11 @@ class Telemetry:
             "migration_stall_s": self.migration_s_total,
             "migration_hidden_s": self.migration_hidden_s_total,
             "n_migrations": self.n_migrations,
+            # elastic serving: availability + recovery time
+            "availability": self.availability,
+            "degraded_iters": self.degraded_iters,
+            "lost_tokens_total": self.lost_tokens_total,
+            "n_recoveries": len(self.recoveries),
+            "recovery_s": max(self.recoveries) if self.recoveries
+            else None,
         }

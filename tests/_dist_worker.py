@@ -618,6 +618,215 @@ def check_elastic_reshard():
     assert abs(float(l_b) - float(l_ref)) < 1e-3
 
 
+def check_weighted_split_under_ep():
+    """Weighted per-replica token splitting on the (2,4) mesh: an
+    equal-share schedule is bitwise-identical to the 3-table round-robin
+    path, and a skewed schedule shifts the replica's share of the hot
+    expert's tokens to the scheduled quota (within shard quantization)."""
+    from repro.replication import ReplicaSet, expand_moe_params
+
+    cfg, p, x, mod = _moe_setup()
+    e = cfg.moe.num_experts
+    p = dict(p, router=p["router"].at[:, 0].add(4.0))    # expert 0 hot
+    rcfg = ReaLBConfig(gate_gamma=10 ** 9)
+    rep_pos = np.zeros((e, 2), np.int32)
+    for ex in range(e):
+        rep_pos[ex] = (ex // 2) * 3 + (ex % 2)
+    rep_pos[0, 1] = 2 * 3 + 2
+    n_rep = np.ones(e, np.int32)
+    n_rep[0] = 2
+    rs = ReplicaSet(rep_pos, n_rep, 4, 3)
+    wrapped = {"blocks": {"l0": {"moe": p}}}
+    p_rep = dict(expand_moe_params(wrapped, rs)["blocks"]["l0"]["moe"],
+                 router=p["router"])
+    base = tuple(jnp.asarray(a) for a in rs.as_arrays())
+
+    def run(place):
+        with use_mesh(mesh):
+            m = jnp.full(ep_moe.moe_state_shape(mesh, 4), 0.9)
+            return jax.jit(
+                lambda p, x, m, mod, pl: ep_moe.ep_moe_forward(
+                    p, x, cfg, rcfg, m, mod, mode="dispatch",
+                    placement=pl))(p_rep, x, m, mod, place)
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    y3, _, aux3 = run(base)
+    # equal-share schedule == occ % n_rep: the 4-table path is bitwise
+    # the 3-table path
+    sched_eq = jnp.asarray(rs.split_schedule())
+    y4, _, aux4 = run(base + (sched_eq,))
+    assert np.array_equal(np.asarray(y3), np.asarray(y4))
+    assert np.array_equal(np.asarray(aux3["slot_load"]),
+                          np.asarray(aux4["slot_load"]))
+
+    # skewed 2:1 schedule: the primary keeps ~2/3 of the hot expert
+    w = np.zeros((e, 2))
+    w[:, 0] = 1.0
+    w[0] = [2.0, 1.0]
+    y_w, _, aux_w = run(base + (jnp.asarray(rs.split_schedule(w)),))
+    el = np.asarray(aux_w["expert_load"])
+    sl = np.asarray(aux_w["slot_load"])
+    a, b = sl[rs.rep_pos[0, 0]], sl[rs.rep_pos[0, 1]]
+    assert a + b == el[0], (a, b, el[0])            # zero dropped tokens
+    # 8 shard-local counters each quantize the 12-phase schedule: allow
+    # one assignment of slack per shard around the exact 2/3 quota
+    assert abs(a - 2.0 * el[0] / 3.0) <= 8.0, (a, el[0])
+    assert a > b > 0
+    # outputs stay correct under the skewed split (same expert math,
+    # different replica routing)
+    y_ref, _, _ = ep_moe.ep_moe_forward(
+        p, x, cfg, rcfg, jnp.full((1, 1), 0.9), mod, mode="dispatch")
+    err = float(jnp.max(jnp.abs(y_w - y_ref)))
+    assert err < 5e-5, err
+
+
+def check_elastic_kill_rejoin_under_ep():
+    """Kill/rejoin of EP rank 2 on the (2,4) mesh, full elastic cycle:
+    the replicated expert stays routable the same iteration with zero
+    dropped tokens, stranded singletons land on the dead (zeroed) slots
+    and are re-materialized from checkpoint through the byte-budgeted
+    executor, the recovered path is bitwise-identical to a healthy
+    engine on the final tables, and the rejoined rank hosts replicas
+    again after its warm-up plan lands."""
+    import tempfile
+
+    from repro.checkpoint import ckpt
+    from repro.configs import ReplicationConfig
+    from repro.replication import ReplicaManager, ReplicaSet, \
+        expand_moe_params
+    from repro.serving.async_migrate import MigrationExecutor
+    from repro.serving.elastic import ElasticCoordinator
+
+    cfg, p, x, mod = _moe_setup()
+    e = cfg.moe.num_experts
+    p = dict(p, router=p["router"].at[:, 0].add(4.0))    # expert 0 hot
+    rcfg = ReaLBConfig(gate_gamma=10 ** 9)
+    rpcfg = ReplicationConfig(enabled=True, spare_per_rank=1,
+                              max_replicas=2, replan_every=1,
+                              warmup_iters=0, min_gain=0.0)
+    mgr = ReplicaManager.from_geometry(e, rpcfg, 4, bytes_per_expert=256)
+    spr = mgr.slots_per_rank
+    assert spr == 3
+    # expert 0 replicated onto rank 2's spare; identity otherwise
+    rep_pos = np.zeros((e, 2), np.int32)
+    for ex in range(e):
+        rep_pos[ex] = (ex // 2) * spr + (ex % 2)
+    rep_pos[0, 1] = 2 * spr + 2
+    n_rep = np.ones(e, np.int32)
+    n_rep[0] = 2
+    mgr.rsets[0] = ReplicaSet(rep_pos, n_rep, 4, spr)
+    wrapped = {"blocks": {"l0": {"moe": p}}}
+    params = expand_moe_params(wrapped, mgr.rset)
+    params["blocks"]["l0"]["moe"]["router"] = p["router"]
+
+    tmp = tempfile.mkdtemp()
+    ckpt.save(tmp, 0, {"serving": {"params": params,
+                                   "m_state": np.zeros((1, 4))},
+                       mgr.ckpt_group: mgr.state_dict()})
+    co = ElasticCoordinator(mgr, ckpt_dir=tmp)
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+    def run(params):
+        place = tuple(jnp.asarray(a) for a in mgr.device_tables())
+        moe = params["blocks"]["l0"]["moe"]
+        with use_mesh(mesh):
+            m = jnp.full(ep_moe.moe_state_shape(mesh, 4), 0.9)
+            return jax.jit(
+                lambda p, x, m, mod, pl: ep_moe.ep_moe_forward(
+                    p, x, cfg, rcfg, m, mod, mode="dispatch",
+                    placement=pl))(moe, x, m, mod, place)
+
+    y_ref, _, aux_ref = ep_moe.ep_moe_forward(
+        p, x, cfg, rcfg, jnp.full((1, 1), 0.9), mod, mode="dispatch")
+    el_ref = np.asarray(aux_ref["expert_load"])
+
+    # ---- kill rank 2: experts 4, 5 are stranded singletons; the hot
+    # expert 0 keeps its rank-0 primary routable the same iteration
+    params = co.fail_rank(2, params)
+    assert sorted(co.lost_experts.tolist()) == [4, 5]
+    assert co.state == "degraded"
+    # no live expert routes to the dead rank (lost experts keep their
+    # dead-slot rows by design — that is where lost tokens are counted)
+    for ex in range(e):
+        if ex in (4, 5):
+            continue
+        ranks = mgr.rset.rep_pos[ex, :mgr.rset.n_rep[ex]] // spr
+        assert 2 not in ranks.tolist(), ex
+    assert mgr.rset.n_rep[0] == 1                # replica masked off
+    assert mgr.rset.rep_pos[0, 0] == 0           # primary survives
+
+    y_deg, _, aux_deg = run(params)
+    el = np.asarray(aux_deg["expert_load"])
+    sl = np.asarray(aux_deg["slot_load"])
+    assert np.array_equal(el, el_ref)            # routing itself unchanged
+    # zero dropped tokens for every live expert: its slot loads sum to
+    # its expert load exactly
+    for ex in range(e):
+        if ex in (4, 5):
+            continue
+        slots = np.unique(mgr.rset.rep_pos[ex, :mgr.rset.n_rep[ex]])
+        assert sl[slots].sum() == el[ex], (ex, sl[slots], el[ex])
+    # stranded tokens landed on the dead rank's zeroed slots, counted
+    assert sl[2 * spr + 0] == el[4] and sl[2 * spr + 1] == el[5]
+    es = np.stack([el, np.zeros(e)])[None]
+    assert co.lost_token_count(es) == el[4] + el[5]
+    # the physical mesh minus the dead model slice
+    assert co.effective_mesh(mesh, lost_axis="model").devices.shape \
+        == (2, 3)
+
+    # ---- recovery: event replan onto the 3 live ranks, recovery chunks
+    # first, checkpoint rows patched in pre-commit
+    mgr.observe(es)
+    plan = mgr.maybe_replan(1)
+    assert plan is not None
+    ex_mig = MigrationExecutor(mgr, plan, bytes_per_iter=1 << 30,
+                               priority_layers=co.recovery_layers(plan),
+                               patch_fn=co.patch_params)
+    while ex_mig.draining:
+        params, rep = ex_mig.drain(params)
+        co.on_layers_landed(plan, rep.layers)
+    assert not co.recovering
+    assert co.last_recovery_s is not None
+    assert not mgr.rset.hosts_rank(2)
+
+    # bitwise parity with the healthy path: a fresh expansion of the
+    # logical weights onto the recovered tables gives identical logits
+    p_healthy = expand_moe_params(wrapped, mgr.rset)
+    p_healthy["blocks"]["l0"]["moe"]["router"] = p["router"]
+    y_rec, _, aux_rec = run(params)
+    y_h, _, _ = run(p_healthy)
+    assert np.array_equal(np.asarray(y_rec), np.asarray(y_h))
+    err = float(jnp.max(jnp.abs(y_rec - y_ref)))
+    assert err < 5e-5, err
+    # every expert routable again: slot loads cover every expert load
+    sl = np.asarray(aux_rec["slot_load"])
+    for ex in range(e):
+        slots = np.unique(mgr.rset.rep_pos[ex, :mgr.rset.n_rep[ex]])
+        assert sl[slots].sum() == el_ref[ex], ex
+
+    # ---- rejoin: plannable at once, routable only after the staged
+    # warm-up plan lands
+    co.rejoin_rank(2)
+    assert co.state == "warming"
+    assert not mgr.hosts_rank(2)
+    mgr.observe(es)
+    plan2 = mgr.maybe_replan(2)
+    assert plan2 is not None
+    assert not mgr.hosts_rank(2)                 # staged, not routable
+    ex_mig2 = MigrationExecutor(mgr, plan2, bytes_per_iter=1 << 30,
+                                priority_layers=co.recovery_layers(plan2),
+                                patch_fn=co.patch_params)
+    while ex_mig2.draining:
+        params, rep = ex_mig2.drain(params)
+        co.on_layers_landed(plan2, rep.layers)
+    assert co.state == "healthy"
+    assert mgr.hosts_rank(2)
+    y_fin, _, _ = run(params)
+    err = float(jnp.max(jnp.abs(y_fin - y_ref)))
+    assert err < 5e-5, err
+
+
 CHECKS = {k[len("check_"):]: v for k, v in list(globals().items())
           if k.startswith("check_")}
 

@@ -28,6 +28,8 @@ CHECKS = [
     "model_train_step_under_mesh",
     "decode_under_mesh",
     "elastic_reshard",
+    "weighted_split_under_ep",
+    "elastic_kill_rejoin_under_ep",
 ]
 
 
