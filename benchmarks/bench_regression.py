@@ -1,0 +1,94 @@
+"""Warn-only throughput regression guard for the serving benchmark.
+
+    PYTHONPATH=src python benchmarks/bench_regression.py \
+        BENCH_serve.json --baseline benchmarks/BENCH_baseline.json
+
+Compares each arm's ``throughput_tok_per_s`` in a fresh
+``BENCH_serve.json`` against the checked-in baseline and prints a
+markdown table (arm, baseline tok/s, current tok/s, delta, verdict).
+Arms slower than ``baseline * (1 - tolerance)`` are flagged ``WARN``;
+arms missing from either file are flagged ``NEW`` / ``GONE``.
+
+The guard **never fails the build** (exit 0 always, unless an input
+file is unreadable): serving throughput is measured in real wall
+seconds, so it is machine- and load-dependent — CI runners vary by far
+more than any single regression worth catching automatically.  The
+default tolerance band is therefore wide (30%); the table in the job
+summary is the signal, a human is the gate.  Virtual-time quantities
+(TTFT/IB/migration bytes) are deterministic and guarded by tests
+instead.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict
+
+
+def load_arms(path: str) -> Dict[str, Dict]:
+    with open(path) as f:
+        payload = json.load(f)
+    return payload.get("arms", payload)
+
+
+def compare(current: Dict[str, Dict], baseline: Dict[str, Dict],
+            tolerance: float) -> Dict[str, Dict]:
+    rows: Dict[str, Dict] = {}
+    for arm in sorted(set(current) | set(baseline)):
+        cur = current.get(arm, {}).get("throughput_tok_per_s")
+        base = baseline.get(arm, {}).get("throughput_tok_per_s")
+        if cur is None:
+            verdict = "GONE"
+        elif base is None:
+            verdict = "NEW"
+        elif cur < base * (1.0 - tolerance):
+            verdict = "WARN"
+        else:
+            verdict = "OK"
+        rows[arm] = dict(baseline=base, current=cur, verdict=verdict,
+                         delta=(cur / base - 1.0)
+                         if cur is not None and base else None)
+    return rows
+
+
+def markdown_table(rows: Dict[str, Dict], tolerance: float) -> str:
+    out = [f"### serve_bench throughput vs baseline "
+           f"(warn below -{tolerance:.0%})",
+           "",
+           "| arm | baseline tok/s | current tok/s | delta | verdict |",
+           "|---|---:|---:|---:|---|"]
+    for arm, r in rows.items():
+        base = f"{r['baseline']:.0f}" if r["baseline"] is not None else "-"
+        cur = f"{r['current']:.0f}" if r["current"] is not None else "-"
+        delta = f"{r['delta']:+.1%}" if r["delta"] is not None else "-"
+        out.append(f"| {arm} | {base} | {cur} | {delta} | {r['verdict']} |")
+    n_warn = sum(r["verdict"] == "WARN" for r in rows.values())
+    out += ["", f"{n_warn} arm(s) below the tolerance band"
+                if n_warn else "all arms within the tolerance band"]
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", help="fresh BENCH_serve.json")
+    ap.add_argument("--baseline", default="benchmarks/BENCH_baseline.json",
+                    help="checked-in per-arm baseline summaries")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="relative slowdown that triggers a WARN "
+                         "(default 0.30: wall-clock throughput on shared "
+                         "CI runners is noisy)")
+    args = ap.parse_args(argv)
+    try:
+        current = load_arms(args.current)
+        baseline = load_arms(args.baseline)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_regression: cannot read inputs: {e}", file=sys.stderr)
+        return 1
+    rows = compare(current, baseline, args.tolerance)
+    print(markdown_table(rows, args.tolerance))
+    return 0    # warn-only by design: the table is the signal
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

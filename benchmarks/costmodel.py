@@ -621,7 +621,7 @@ def _sim_layers(cfg: tr.TraceConfig, g: MoEGeometry, n_layers: int,
 
 
 def _placement_layers_mgr(cfg, g, n_layers, per_layer, planner, interval,
-                          warmup, min_gain):
+                          warmup, min_gain, audit=None):
     from repro.configs.base import PlacementConfig
     from repro.placement import PlacementManager
 
@@ -630,9 +630,12 @@ def _placement_layers_mgr(cfg, g, n_layers, per_layer, planner, interval,
                            per_layer=per_layer)
     bpe = int(migration_bytes_layers(1, g, n_layers)) if per_layer \
         else int(migration_bytes(1, g))
-    return PlacementManager.from_geometry(g.n_experts, pcfg, cfg.ep,
-                                          bytes_per_expert=bpe,
-                                          n_layers=n_layers)
+    mgr = PlacementManager.from_geometry(g.n_experts, pcfg, cfg.ep,
+                                         bytes_per_expert=bpe,
+                                         n_layers=n_layers)
+    if audit is not None:
+        mgr.audit = audit
+    return mgr
 
 
 def _placement_rank_view(m, l):
@@ -642,12 +645,13 @@ def _placement_rank_view(m, l):
 def sim_placement_layers(cfg, g, n_layers: int = 4, per_layer: bool = True,
                          planner: str = "least_loaded", interval: int = 50,
                          warmup: int = 8, min_gain: float = 0.02,
-                         name: Optional[str] = None) -> SimResult:
+                         name: Optional[str] = None,
+                         audit=None) -> SimResult:
     """Placement on a depth-varying trace: ``per_layer=True`` plans one
     table per layer (layer-diff migration), ``False`` is the shared-table
     baseline that balances the depth-summed skew no single layer has."""
     mgr = _placement_layers_mgr(cfg, g, n_layers, per_layer, planner,
-                                interval, warmup, min_gain)
+                                interval, warmup, min_gain, audit=audit)
     return _sim_layers(cfg, g, n_layers, mgr, _placement_rank_view,
                        name=name or ("Placement/L" if per_layer
                                      else "Placement(shared)"))
@@ -657,7 +661,8 @@ def sim_placement_async(cfg, g, n_layers: int = 4,
                         bytes_per_iter: Optional[int] = None,
                         planner: str = "least_loaded", interval: int = 50,
                         warmup: int = 8, min_gain: float = 0.02,
-                        name: str = "Placement/L/async") -> SimResult:
+                        name: str = "Placement/L/async",
+                        audit=None) -> SimResult:
     """Async overlapped placement migration: the per-layer plan's chunks
     drain one byte-budgeted batch per iteration (default budget: one
     layer's worst-case slab, so every per-layer chunk fits), each landed
@@ -665,7 +670,7 @@ def sim_placement_async(cfg, g, n_layers: int = 4,
     the budget excess while the synchronous arm charges the whole
     transfer in the iteration the plan fired."""
     mgr = _placement_layers_mgr(cfg, g, n_layers, True, planner,
-                                interval, warmup, min_gain)
+                                interval, warmup, min_gain, audit=audit)
     if bytes_per_iter is None:
         bytes_per_iter = int(g.n_experts
                              * migration_bytes_layers(1, g, n_layers))
@@ -674,7 +679,8 @@ def sim_placement_async(cfg, g, n_layers: int = 4,
 
 
 def _replication_layers_mgr(cfg, g, n_layers, per_layer, interval, warmup,
-                            min_gain, spare_per_rank, max_replicas):
+                            min_gain, spare_per_rank, max_replicas,
+                            audit=None):
     from repro.configs.base import ReplicationConfig
     from repro.replication import ReplicaManager
 
@@ -684,9 +690,12 @@ def _replication_layers_mgr(cfg, g, n_layers, per_layer, interval, warmup,
                               max_replicas=max_replicas)
     bpe = int(migration_bytes_layers(1, g, n_layers)) if per_layer \
         else int(migration_bytes(1, g))
-    return ReplicaManager.from_geometry(g.n_experts, rpcfg, cfg.ep,
-                                        bytes_per_expert=bpe,
-                                        n_layers=n_layers)
+    mgr = ReplicaManager.from_geometry(g.n_experts, rpcfg, cfg.ep,
+                                       bytes_per_expert=bpe,
+                                       n_layers=n_layers)
+    if audit is not None:
+        mgr.audit = audit
+    return mgr
 
 
 def _replication_rank_view(m, l):
@@ -697,12 +706,13 @@ def sim_replication_layers(cfg, g, n_layers: int = 4,
                            per_layer: bool = True, interval: int = 50,
                            warmup: int = 8, min_gain: float = 0.02,
                            spare_per_rank: int = 1, max_replicas: int = 2,
-                           name: Optional[str] = None) -> SimResult:
+                           name: Optional[str] = None,
+                           audit=None) -> SimResult:
     """Redundant experts on a depth-varying trace, per-layer replica sets
     vs one shared set (token split modeled as fractional ownership)."""
     mgr = _replication_layers_mgr(cfg, g, n_layers, per_layer, interval,
                                   warmup, min_gain, spare_per_rank,
-                                  max_replicas)
+                                  max_replicas, audit=audit)
     return _sim_layers(cfg, g, n_layers, mgr, _replication_rank_view,
                        name=name or ("Replicate/L" if per_layer
                                      else "Replicate(shared)"))
@@ -713,13 +723,14 @@ def sim_replication_async(cfg, g, n_layers: int = 4,
                           interval: int = 50, warmup: int = 8,
                           min_gain: float = 0.02, spare_per_rank: int = 1,
                           max_replicas: int = 2,
-                          name: str = "Replicate/L/async") -> SimResult:
+                          name: str = "Replicate/L/async",
+                          audit=None) -> SimResult:
     """Async overlapped replica add/drop: staged per-layer replica plans
     drain chunk-by-chunk (a replica becomes routable as its layer's slab
     lands), bounding the per-iteration stall by the byte budget."""
     mgr = _replication_layers_mgr(cfg, g, n_layers, True, interval,
                                   warmup, min_gain, spare_per_rank,
-                                  max_replicas)
+                                  max_replicas, audit=audit)
     if bytes_per_iter is None:
         # worst-case layer chunk: every slot of one layer sourced
         # cross-rank — any real chunk fits the budget

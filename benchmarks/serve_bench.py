@@ -201,6 +201,26 @@ def parse_args(argv=None):
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="write per-arm summaries to a JSON file "
                          "(e.g. BENCH_serve.json as a CI artifact)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the run's "
+                         "spans (iter / admit / forward.* / "
+                         "migration.drain / replan.* / elastic.*); also "
+                         "attaches the replan audit log.  Deterministic "
+                         "under the virtual clock.  Summarize with "
+                         "benchmarks/trace_report.py; under --arm all / "
+                         "kill-rejoin the trace covers the last "
+                         "(faulted) run only")
+    ap.add_argument("--audit-out", default=None, metavar="PATH",
+                    help="write the replan-decision audit log (one JSON "
+                         "event per maybe_replan verdict: cadence, "
+                         "warmup, min-gain, cost-gate numbers, must-plan) "
+                         "as JSONL")
+    ap.add_argument("--log-every", type=int, default=0, metavar="N",
+                    help="print one structured JSONL log line every N "
+                         "serving iterations (iter, phase, tokens, "
+                         "ib_global, fp4_ranks, migration stall/hidden, "
+                         "unroutable) for long-run debugging without a "
+                         "trace viewer")
     return ap.parse_args(argv)
 
 
@@ -294,6 +314,17 @@ def serve(args, cfg, params, specs: List[RequestSpec],
     else:
         clock = VirtualClock()
     cost = IterationCostModel() if not args.wall_time else None
+    # observability (opt-in): spans on the run clock — deterministic
+    # under the virtual clock — and the replan-decision audit log
+    trace_out = getattr(args, "trace_out", None)
+    audit_out = getattr(args, "audit_out", None)
+    tracer = None
+    if trace_out:
+        from repro.obs import Tracer
+        tracer = Tracer(clock=clock)
+    if manager is not None and (trace_out or audit_out):
+        from repro.obs import ReplanAudit
+        manager.audit = ReplanAudit()
     elastic = injector = None
     if inject_faults:
         import tempfile
@@ -324,7 +355,7 @@ def serve(args, cfg, params, specs: List[RequestSpec],
                  migrate_async=args.migrate_async,
                  migrate_bytes_per_iter=args.migrate_bytes_per_iter
                  or None,
-                 elastic=elastic, fault_injector=injector)
+                 elastic=elastic, fault_injector=injector, tracer=tracer)
 
     closed = None
     prof = profile(args.workload)
@@ -360,6 +391,9 @@ def serve(args, cfg, params, specs: List[RequestSpec],
                 time.sleep(max(pending[0].arrival - now, 0.0))
             continue
         eng.step()   # the engine advances the virtual clock per forward
+        log_every = getattr(args, "log_every", 0)
+        if log_every and iters % log_every == 0 and eng.stats:
+            print(json.dumps(iter_log_record(eng, iters), default=float))
         if closed is not None:
             # every completion re-arms one user after a think time
             for req in eng.scheduler.finished[n_finished_seen:]:
@@ -375,7 +409,38 @@ def serve(args, cfg, params, specs: List[RequestSpec],
     # finish any in-flight async chunk queue so the migration accounting
     # is complete and the engine is left in a checkpointable state
     eng.drain_migrations()
+    if tracer is not None:
+        # the run totals travel with the trace so trace_report.py can
+        # reconcile summed migration.drain span durations against them
+        # without the JSON artifact
+        tracer.write(trace_out, metadata=dict(
+            arm=args.arm or args.policy,
+            n_iters=int(telemetry.n_iters),
+            virtual_time=not args.wall_time,
+            migration_s_total=float(eng.migration_stall_s),
+            migration_hidden_s_total=float(eng.migration_hidden_s),
+            migration_bytes_total=int(eng.migration_bytes_moved)))
+        print(f"wrote {len(tracer)} trace events -> {trace_out}")
+    if audit_out and manager is not None \
+            and getattr(manager, "audit", None) is not None:
+        manager.audit.to_jsonl(audit_out)
+        print(f"wrote {len(manager.audit)} replan decisions -> {audit_out}")
     return telemetry, eng, realized, time.monotonic() - t0
+
+
+def iter_log_record(eng: Engine, it: int) -> Dict:
+    """One greppable JSONL log line from the engine's last recorded
+    iteration (``--log-every``): long-run debugging without a trace
+    viewer."""
+    st = eng.stats[-1]
+    return dict(iter=it, t=round(float(st.t_wall), 6), phase=st.phase,
+                n_active=int(st.n_active), tokens=int(st.tokens),
+                ib_global=round(float(st.ib_global), 4),
+                fp4_ranks=float(st.fp4_ranks),
+                gate_open=float(st.gate_open),
+                migration_s=float(st.migration_s),
+                migration_hidden_s=float(st.migration_hidden_s),
+                n_unroutable=int(st.n_unroutable))
 
 
 def summarize_run(telemetry: Telemetry, eng: Engine, wall: float) -> Dict:
@@ -404,7 +469,15 @@ def summarize_run(telemetry: Telemetry, eng: Engine, wall: float) -> Dict:
         # (changed layers only under layer-diff plans); byte counts are
         # integral end-to-end
         s["n_tables"] = int(getattr(mgr, "n_tables", 1))
+        # disambiguated counters: telemetry's n_migrations counts
+        # ITERATIONS that carried migration traffic (chunk batches under
+        # async drain), the manager's counts COMMITTED PLANS.  The legacy
+        # "n_migrations" key keeps its historical manager-side meaning.
         s["n_migrations"] = int(mgr.n_migrations)
+        s["n_plans_committed"] = int(mgr.n_migrations)
+        s["n_migration_iters"] = int(telemetry.n_migrations)
+        if getattr(mgr, "audit", None) is not None:
+            s["replan_decisions"] = mgr.audit.counts()
         s["migration_bytes_per_layer"] = [
             int(b) for b in getattr(mgr, "migrated_bytes_per_layer", [])]
         s["migration_bw_measured"] = float(mgr.bandwidth) \
@@ -517,8 +590,11 @@ def main(argv=None) -> int:
               f"budget={args.migrate_bytes_per_iter}B/iter")
         print(f"stream: {stream_stats(specs)}")
         results: Dict[str, Dict] = {}
-        telemetry, eng, _, wall = serve(
-            argparse.Namespace(**vars(args)), cfg, params, specs)
+        healthy_args = argparse.Namespace(**vars(args))
+        # the trace/audit artifacts cover the faulted run (the one with
+        # elastic events worth inspecting), not the healthy baseline
+        healthy_args.trace_out = healthy_args.audit_out = None
+        telemetry, eng, _, wall = serve(healthy_args, cfg, params, specs)
         results["healthy"] = summarize_run(telemetry, eng, wall)
         telemetry2, eng2, _, wall2 = serve(
             argparse.Namespace(**vars(args)), cfg, params, specs,

@@ -1,0 +1,137 @@
+"""Text summary of a serve_bench Chrome-trace: top spans + migration
+stall-vs-hidden attribution.
+
+    PYTHONPATH=src python benchmarks/trace_report.py trace.json
+
+Loads + structurally validates the trace JSON written by
+``serve_bench --trace-out``, then prints:
+
+- the top span names by total duration (count / total / mean / max ms),
+- the migration attribution: summed ``migration.drain`` span durations
+  split into stall vs hidden seconds (from each drain event's args) and
+  reconciled against the run totals ``migration_s_total`` /
+  ``migration_hidden_s_total`` carried in the trace metadata — the
+  acceptance invariant is that they agree to float tolerance,
+- the instant-event counts (dispatch decisions, table commits, elastic
+  events) so a long run is skimmable without opening Perfetto.
+
+Exit status is non-zero when the trace fails validation or the
+migration reconciliation diverges beyond tolerance, so CI can use the
+report as a cheap trace-integrity check.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from collections import defaultdict
+from typing import Dict, List
+
+from repro.obs.trace import load_trace, validate_chrome_trace
+
+RECONCILE_RTOL = 1e-6
+RECONCILE_ATOL = 1e-9
+
+
+def span_table(events: List[Dict], top: int = 12) -> List[Dict]:
+    """Aggregate "X" events by name: count / total / mean / max ms,
+    sorted by total duration descending."""
+    agg: Dict[str, List[float]] = defaultdict(list)
+    for ev in events:
+        if ev.get("ph") == "X":
+            agg[ev["name"]].append(float(ev.get("dur", 0.0)) / 1e3)  # ms
+    rows = [dict(name=name, count=len(ds), total_ms=sum(ds),
+                 mean_ms=sum(ds) / len(ds), max_ms=max(ds))
+            for name, ds in agg.items()]
+    rows.sort(key=lambda r: -r["total_ms"])
+    return rows[:top]
+
+
+def instant_counts(events: List[Dict]) -> Dict[str, int]:
+    out: Dict[str, int] = defaultdict(int)
+    for ev in events:
+        if ev.get("ph") == "i":
+            out[ev["name"]] += 1
+    return dict(sorted(out.items()))
+
+
+def migration_attribution(events: List[Dict]) -> Dict[str, float]:
+    """Sum the migration.drain spans and their stall/hidden args (all
+    in seconds; event ts/dur are microseconds)."""
+    total = stall = hidden = 0.0
+    n = 0
+    for ev in events:
+        if ev.get("ph") == "X" and ev["name"] == "migration.drain":
+            n += 1
+            total += float(ev.get("dur", 0.0)) / 1e6
+            args = ev.get("args") or {}
+            stall += float(args.get("stall_s", 0.0))
+            hidden += float(args.get("hidden_s", 0.0))
+    return dict(n_drains=n, span_total_s=total, stall_s=stall,
+                hidden_s=hidden)
+
+
+def reconcile(attr: Dict[str, float], meta: Dict) -> bool:
+    """The acceptance invariant: summed drain span durations must equal
+    the engine's migration_s_total + migration_hidden_s_total."""
+    want = float(meta.get("migration_s_total", 0.0)) \
+        + float(meta.get("migration_hidden_s_total", 0.0))
+    got = attr["span_total_s"]
+    return abs(got - want) <= RECONCILE_ATOL + RECONCILE_RTOL * abs(want)
+
+
+def report(path: str, top: int = 12) -> int:
+    obj = load_trace(path)
+    try:
+        events = validate_chrome_trace(obj)
+    except ValueError as e:
+        print(f"INVALID trace {path}: {e}", file=sys.stderr)
+        return 1
+    meta = obj.get("metadata", {}) if isinstance(obj, dict) else {}
+    print(f"trace {path}: {len(events)} events"
+          + (f", arm={meta.get('arm')}" if meta.get("arm") else "")
+          + (f", {meta.get('n_iters')} iters" if meta.get("n_iters")
+             else ""))
+
+    rows = span_table(events, top=top)
+    if rows:
+        print(f"\n{'span':24s} {'count':>6s} {'total ms':>10s} "
+              f"{'mean ms':>9s} {'max ms':>9s}")
+        for r in rows:
+            print(f"{r['name']:24s} {r['count']:6d} {r['total_ms']:10.3f} "
+                  f"{r['mean_ms']:9.4f} {r['max_ms']:9.4f}")
+
+    inst = instant_counts(events)
+    if inst:
+        print("\ninstants: "
+              + " ".join(f"{k}={v}" for k, v in inst.items()))
+
+    attr = migration_attribution(events)
+    if attr["n_drains"]:
+        print(f"\nmigration: {attr['n_drains']} drains, "
+              f"{attr['span_total_s'] * 1e3:.3f} ms total span "
+              f"({attr['stall_s'] * 1e3:.3f} ms stalled serving, "
+              f"{attr['hidden_s'] * 1e3:.3f} ms hidden under compute)")
+    if "migration_s_total" in meta:
+        want_stall = float(meta["migration_s_total"])
+        want_hidden = float(meta.get("migration_hidden_s_total", 0.0))
+        ok = reconcile(attr, meta)
+        print(f"reconcile vs run totals: spans={attr['span_total_s']:.9f}s "
+              f"vs stall+hidden={want_stall + want_hidden:.9f}s -> "
+              f"{'OK' if ok else 'MISMATCH'}")
+        if not ok:
+            return 2
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome-trace JSON from "
+                                  "serve_bench --trace-out")
+    ap.add_argument("--top", type=int, default=12,
+                    help="span rows to print (by total duration)")
+    args = ap.parse_args(argv)
+    return report(args.trace, top=args.top)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,29 @@
+"""repro.obs — observability for the serving stack.
+
+Three cooperating pieces, all host-side and dependency-light:
+
+- :mod:`repro.obs.trace` — a low-overhead nested-span tracer recording
+  engine / manager / executor / elastic activity per iteration, exported
+  as Chrome-trace (Perfetto-loadable) JSON.  Disabled tracing is a
+  shared no-op singleton: no dict churn, no clock reads, bitwise-
+  identical engine outputs.
+- :mod:`repro.obs.metrics` — a typed metrics registry (counters /
+  gauges / histograms with labels) that ``serving.telemetry`` is built
+  on, plus the per-layer per-rank expert-load heatmap recorder and the
+  predicted-vs-realized peak-rank-load accuracy tracker.
+- :mod:`repro.obs.audit` — the replan-decision audit log: every
+  ``ReplanDiscipline`` verdict (cadence, warmup, min-gain, churn
+  budget, cost gate, must-plan) as one structured event, queryable
+  after a run.
+"""
+from repro.obs.audit import ReplanAudit
+from repro.obs.metrics import (Counter, Gauge, HeatmapRecorder, Histogram,
+                               MetricsRegistry, PredictionTracker)
+from repro.obs.trace import (NULL_TRACER, NullTracer, Tracer,
+                             validate_chrome_trace)
+
+__all__ = [
+    "Counter", "Gauge", "HeatmapRecorder", "Histogram", "MetricsRegistry",
+    "NULL_TRACER", "NullTracer", "PredictionTracker", "ReplanAudit",
+    "Tracer", "validate_chrome_trace",
+]

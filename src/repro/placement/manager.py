@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Union
 import numpy as np
 
 from repro.configs.base import ModelConfig, PlacementConfig
+from repro.obs.trace import NULL_TRACER
 from repro.placement import migrate
 from repro.placement.planner import plan_placement
 from repro.placement.predictor import EWMAPredictor
@@ -78,6 +79,15 @@ class ReplanDiscipline:
     _event_now = False              # the current attempt IS event-triggered
     must_layers = frozenset()       # layers that must replan regardless of
     #                                 gain (elastic recovery: lost experts)
+    # observability (opt-in, both default to inert singletons/None):
+    # every maybe_replan call ends in exactly one audit verdict; planning
+    # attempts past the cadence gate get a tracer span
+    audit = None                    # repro.obs.audit.ReplanAudit
+    tracer = NULL_TRACER            # repro.obs.trace.Tracer
+    _kind = "manager"               # audit/span label: placement|replication
+    _skip = None                    # why the last _cadence said no
+    _verdict = "no-cadence"         # the last maybe_replan verdict
+    _verdict_fields: dict = {}
 
     def _discipline_cfg(self):
         """The PlacementConfig / ReplicationConfig of the manager."""
@@ -97,18 +107,29 @@ class ReplanDiscipline:
 
     def _cadence(self, it: int) -> Optional[str]:
         """The prediction regime a replan at ``it`` should plan from, or
-        None when no cadence is due."""
+        None when no cadence is due (``_skip`` then names the reason for
+        the audit log)."""
         p = self._discipline_cfg()
         self._event_now = False
-        if not p.enabled or self._pending is not None \
-                or self._replan_blocked():
+        self._skip = None
+        if not p.enabled:
+            self._skip = "disabled"
+            return None
+        if self._pending is not None:
+            self._skip = "in-flight"
+            return None
+        if self._replan_blocked():
+            self._skip = "blocked"
             return None
         if self._event_replan and self.predictor.n_obs > 0:
             self._event_replan = False
             self._event_now = True
             return "mixed"
-        if self.predictor.n_obs < p.warmup_iters \
-                or it == self.last_replan_iter:
+        if self.predictor.n_obs < p.warmup_iters:
+            self._skip = "warmup"
+            return None
+        if it == self.last_replan_iter:
+            self._skip = "already-replanned"
             return None
         if p.replan_every > 0 and it % p.replan_every == 0:
             return "mixed"
@@ -121,6 +142,7 @@ class ReplanDiscipline:
             # full planner on every subsequent iteration
             self._decode_since_replan = 0
             return "decode"
+        self._skip = "no-cadence"
         return None
 
     def _gate_accept(self, old_loads: np.ndarray, new_loads: np.ndarray,
@@ -134,6 +156,74 @@ class ReplanDiscipline:
                                                     n_moved)
             old_loads, new_loads = old_loads.sum(0), new_loads.sum(0)
         return self.cost_gate.accept(old_loads, new_loads, n_moved)
+
+    # -- decision audit / tracing -----------------------------------------
+    def _decide(self, verdict: str, **fields):
+        """Record the verdict of the current planning attempt; returns
+        None so rejection paths read ``return self._decide(...)``."""
+        self._verdict = verdict
+        self._verdict_fields = fields
+        return None
+
+    def plan_bytes(self, plan) -> int:
+        """Total transfer bytes of a staged plan (sum of its chunks)."""
+        return sum(self.layer_bytes(plan, l) for l in self.plan_layers(plan))
+
+    def maybe_replan(self, it: int):
+        """Stage the migration plan to apply at iteration ``it``, or None.
+
+        The returned plan is *pending*: the routable table(s) and the
+        migration accounting are unchanged until :meth:`commit` /
+        :meth:`commit_layers` — which the engine calls only after the
+        slab gather landed the new weights.  Every call ends in exactly
+        one audit verdict (cadence rejections included) when an
+        :class:`~repro.obs.audit.ReplanAudit` is attached, and planning
+        attempts past the cadence gate get a ``replan.<kind>`` span."""
+        regime = self._cadence(it)
+        if regime is None:
+            if self.audit is not None:
+                self.audit.record(it=it, manager=self._kind,
+                                  verdict=self._skip or "no-cadence")
+            return None
+        forced = self._event_now
+        self._verdict, self._verdict_fields = "noop", {}
+        trc = self.tracer
+        if trc.enabled:
+            with trc.span(f"replan.{self._kind}", cat="replan") as sp:
+                plan = (self._replan_layers(it, regime) if self.per_layer
+                        else self._replan_shared(it, regime))
+                sp.set(it=it, regime=regime, verdict=self._verdict)
+        else:
+            plan = (self._replan_layers(it, regime) if self.per_layer
+                    else self._replan_shared(it, regime))
+        if self.audit is not None:
+            self.audit.record(it=it, manager=self._kind,
+                              verdict=self._verdict, regime=regime,
+                              must=True if forced else None,
+                              **self._verdict_fields)
+        return plan
+
+    def _replan_shared(self, it: int, regime: str):
+        """The shared-table (``n_tables == 1``) planning attempt."""
+        raise NotImplementedError
+
+    def predicted_rank_loads(self, regime: str = "mixed"):
+        """``[n_tables, ep]`` predicted per-rank loads under the current
+        routable tables — the quantity the prediction-accuracy metric
+        compares against realized loads per replan window.  None before
+        any observation."""
+        states = self._layer_states()
+        pred = self.predictor.predict_layers(regime)
+        if pred is not None and pred[0].shape[0] == len(states) \
+                and pred[0].sum() > 0:
+            loads = pred[0]
+            return np.stack([s.rank_loads(loads[l])
+                             for l, s in enumerate(states)])
+        load, _ = self.predictor.predict(regime)
+        if load.sum() <= 0:
+            return None
+        # shared manager under a multi-block model: one summed row
+        return np.stack([s.rank_loads(load) for s in states])
 
     # -- staged commit (chunk = one layer of a layer-diff plan) -----------
     @property
@@ -231,11 +321,11 @@ class ReplanDiscipline:
         also bypasses ``min_gain`` and the cost gate for every layer."""
         pred = self.predictor.predict_layers(regime)
         if pred is None:
-            return None
+            return self._decide("zero-load")
         loads, viss = pred
         states = self._layer_states()
         if loads.sum() <= 0 or loads.shape[0] != len(states):
-            return None
+            return self._decide("zero-load")
         p = self._discipline_cfg()
         forced = self._event_now
         must = {int(l) for l in self.must_layers}
@@ -274,20 +364,35 @@ class ReplanDiscipline:
             new_states[l] = new
         plan = self._diff_layer_states(states, new_states)
         if plan.is_noop:
-            return None
+            return self._decide("noop", changed_layers=0)
         old_rl = np.stack([s.rank_loads(loads[l])
                            for l, s in enumerate(states)])
         new_rl = np.stack([s.rank_loads(loads[l])
                            for l, s in enumerate(new_states)])
+        # audit pricing: aggregate peak-load gain over the layer stack,
+        # the bytes the diff would ship and their bandwidth-EWMA seconds
+        old_peak = float(old_rl.max(axis=1).sum())
+        new_peak = float(new_rl.max(axis=1).sum())
+        nbytes = self.plan_bytes(plan)
+        price = dict(
+            pred_gain=(old_peak - new_peak) / old_peak
+            if old_peak > 0 else 0.0,
+            migration_bytes=int(nbytes),
+            migration_s=float(self.migration_seconds(nbytes)),
+            n_moved=int(self._layer_gate_moved(plan)),
+            changed_layers=len(self.plan_layers(plan)),
+            n_must_layers=len(must) if must else None)
         if not forced and not self._gate_accept(
                 old_rl, new_rl, self._layer_gate_moved(plan)):
-            return None
+            return self._decide("cost-gate", **price)
         self.last_replan_iter = it
+        self._decide("staged", **price)
         return self._accept_layer_plan(plan, new_states)
 
 
 class PlacementManager(ReplanDiscipline):
     ckpt_group = "placement"       # engine checkpoint group name
+    _kind = "placement"            # audit / span label
 
     def __init__(self, cfg: ModelConfig, pcfg: PlacementConfig, ep: int,
                  cost_gate=None):
@@ -426,20 +531,12 @@ class PlacementManager(ReplanDiscipline):
         self.migrated_bytes += b
         self.migrated_bytes_per_layer[layer] += b
 
-    def maybe_replan(self, it: int) -> Optional[Plan]:
-        """Stage the weight permutation to apply at iteration ``it``, or
-        None.  The returned plan is *pending*: the routable table(s) and
-        the migration accounting are unchanged until :meth:`commit` /
-        :meth:`commit_layers` — which the engine calls only after the
-        slab gather landed the new weights."""
-        regime = self._cadence(it)
-        if regime is None:
-            return None
-        if self.per_layer:
-            return self._replan_layers(it, regime)
+    def _replan_shared(self, it: int, regime: str) -> Optional[Plan]:
+        """The shared-table planning attempt (cadence already hit —
+        the discipline's ``maybe_replan`` dispatched here)."""
         load, vis = self.predictor.predict(regime)
         if load.sum() <= 0:
-            return None
+            return self._decide("zero-load")
         p = self.pcfg
         forced = self._event_now
         new = plan_placement(p.planner, load, self.ep, vis=vis, cfg=p)
@@ -447,18 +544,35 @@ class PlacementManager(ReplanDiscipline):
         # (event-triggered replans bypass the guard and the cost gate)
         old_max = self.table.rank_loads(load).max()
         new_max = new.rank_loads(load).max()
-        if not forced and (old_max <= 0 or
-                           (old_max - new_max) / old_max < p.min_gain):
-            return None
+        gain = (old_max - new_max) / old_max if old_max > 0 else 0.0
+        if not forced and (old_max <= 0 or gain < p.min_gain):
+            return self._decide("min-gain", pred_gain=float(gain))
         plan = migrate.diff(self.table, new, self.bytes_per_expert)
         if plan.is_noop:
-            return None
+            return self._decide("noop", pred_gain=float(gain),
+                                changed_layers=0)
+        price = dict(
+            pred_gain=float(gain),
+            migration_bytes=int(plan.moved_bytes),
+            migration_s=float(self.migration_seconds(plan.moved_bytes)),
+            n_moved=int(plan.n_moved))
         if not forced and not self._gate_accept(
                 self.table.rank_loads(load), new.rank_loads(load),
                 plan.n_moved):
-            return None
+            return self._decide("cost-gate", **price)
         self.last_replan_iter = it
+        self._decide("staged", **price)
         return self._stage(plan)
+
+    def rank_heatmap(self, expert_stats, slot_stats=None) -> np.ndarray:
+        """Realized per-layer per-rank loads ``[n_blocks, ep]`` of one
+        iteration's ``aux["expert_stats"]`` under the routable tables."""
+        loads = np.asarray(expert_stats, np.float64)[:, 0, :]
+        if self.per_layer and loads.shape[0] == self.n_tables:
+            return np.stack([self.tables[l].rank_loads(loads[l])
+                             for l in range(loads.shape[0])])
+        return np.stack([self.table.rank_loads(loads[l])
+                         for l in range(loads.shape[0])])
 
     # per-layer replan hooks (loop lives in ReplanDiscipline)
     def _layer_states(self) -> list:

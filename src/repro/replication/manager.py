@@ -54,6 +54,7 @@ Plan = Union[migrate.ReplicaMigrationPlan, migrate.LayerReplicaMigrationPlan]
 
 class ReplicaManager(ReplanDiscipline):
     ckpt_group = "replication"     # engine checkpoint group name
+    _kind = "replication"          # audit / span label
 
     def __init__(self, cfg: ModelConfig, rpcfg: ReplicationConfig, ep: int,
                  cost_gate=None):
@@ -277,21 +278,16 @@ class ReplicaManager(ReplanDiscipline):
     def _discipline_cfg(self) -> ReplicationConfig:
         return self.rpcfg
 
-    def maybe_replan(self, it: int) -> Optional[Plan]:
-        """Stage the slab gather to apply at iteration ``it``, or None.
-
-        The returned plan is *pending*: the routable set(s) (and
-        therefore ``device_tables``) are unchanged until :meth:`commit`."""
-        regime = self._cadence(it)
-        if regime is None:
-            return None
-        if self.per_layer:
-            return self._replan_layers(it, regime)
+    def _replan_shared(self, it: int, regime: str) -> Optional[Plan]:
+        """The shared-set planning attempt (cadence already hit — the
+        discipline's ``maybe_replan`` dispatched here).  The staged plan
+        is pending: the routable set(s) (and therefore
+        ``device_tables``) are unchanged until :meth:`commit`."""
         p = self.rpcfg
         forced = self._event_now
         load, vis = self.predictor.predict(regime)
         if load.sum() <= 0:
-            return None
+            return self._decide("zero-load")
         new = plan_replication(load, self.ep, self.slots_per_rank,
                                max_replicas=p.max_replicas, vis=vis,
                                vis_weight=p.vis_weight,
@@ -301,18 +297,43 @@ class ReplicaManager(ReplanDiscipline):
         # and the cost gate: availability beats churn discipline)
         old_max = self.rset.rank_loads(load).max()
         new_max = new.rank_loads(load).max()
-        if not forced and (old_max <= 0 or
-                           (old_max - new_max) / old_max < p.min_gain):
-            return None
+        gain = (old_max - new_max) / old_max if old_max > 0 else 0.0
+        if not forced and (old_max <= 0 or gain < p.min_gain):
+            return self._decide("min-gain", pred_gain=float(gain))
         plan = migrate.diff(self.rset, new, self.bytes_per_expert)
         if plan.is_noop:
-            return None
+            return self._decide("noop", pred_gain=float(gain),
+                                changed_layers=0)
+        price = dict(
+            pred_gain=float(gain),
+            migration_bytes=int(plan.moved_bytes),
+            migration_s=float(self.migration_seconds(plan.moved_bytes)),
+            n_moved=len(plan.crossrank_slots))
         if not forced and not self._gate_accept(
                 self.rset.rank_loads(load), new.rank_loads(load),
                 len(plan.crossrank_slots)):
-            return None
+            return self._decide("cost-gate", **price)
         self.last_replan_iter = it
+        self._decide("staged", **price)
         return self._stage(plan)
+
+    def rank_heatmap(self, expert_stats, slot_stats=None) -> np.ndarray:
+        """Realized per-layer per-rank loads ``[n_blocks, ep]`` of one
+        iteration.  Prefers the post-split physical ``slot_stats`` (the
+        exact loads replica token-splitting produced); falls back to the
+        logical expert stats under the routable sets' equal-split
+        model."""
+        if slot_stats is not None:
+            ss = np.asarray(slot_stats, np.float64)
+            if ss.shape[-1] == self.n_slots:
+                return ss[:, 0, :].reshape(
+                    ss.shape[0], self.ep, self.slots_per_rank).sum(-1)
+        loads = np.asarray(expert_stats, np.float64)[:, 0, :]
+        if self.per_layer and loads.shape[0] == self.n_tables:
+            return np.stack([self.rsets[l].rank_loads(loads[l])
+                             for l in range(loads.shape[0])])
+        return np.stack([self.rset.rank_loads(loads[l])
+                         for l in range(loads.shape[0])])
 
     # per-layer replan hooks (loop lives in ReplanDiscipline); the staged
     # layer-diff copies slabs for changed layers only, priced cross-rank

@@ -162,6 +162,17 @@ class MigrationExecutor:
             raise
         wall = time.perf_counter() - t0
         self.manager.bandwidth.observe(nbytes, wall)
+        trc = getattr(self.manager, "tracer", None)
+        if trc is not None and trc.enabled:
+            # the measured wall seconds of this batch's subset apply,
+            # stamped at the current engine-clock position (the engine's
+            # migration.drain spans carry the stall/hidden attribution)
+            trc.complete("migration.apply", trc.clock(), wall,
+                         cat="migration",
+                         args={"layers": len(layers), "bytes": int(nbytes),
+                               "budget_bytes": int(budget),
+                               "wall_s": wall,
+                               "remaining": len(self.queue)})
         if self.patch_fn is not None:
             # recovery patch: checkpoint-sourced rows for experts whose
             # source slab died with its rank (outside the timed window —

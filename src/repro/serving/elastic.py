@@ -44,6 +44,7 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from repro.checkpoint import ckpt as ckpt_lib
+from repro.obs.trace import NULL_TRACER
 from repro.placement.migrate import MOE_WEIGHT_KEYS, moe_param_paths
 
 Tree = Any
@@ -95,6 +96,17 @@ class ElasticCoordinator:
     source for singleton experts.  Without one, a rank loss that strands
     a singleton is refused (replicated-only losses still work).
     """
+
+    tracer = NULL_TRACER            # optional span tracer (engine-shared)
+
+    def _emit(self, ev: Dict) -> None:
+        """Append one elastic event; mirror it as a trace instant so the
+        fail/recover/warm timeline rides the same Perfetto view."""
+        self.events.append(ev)
+        if self.tracer.enabled:
+            self.tracer.instant(f"elastic.{ev['kind']}", cat="elastic",
+                                args={k: v for k, v in ev.items()
+                                      if k != "kind"})
 
     def __init__(self, manager, ckpt_dir: Optional[str] = None,
                  clock=None, telemetry=None):
@@ -207,9 +219,9 @@ class ElasticCoordinator:
             self.last_recovery_s = 0.0
             if self.telemetry is not None:
                 self.telemetry.record_recovery(0.0)
-        self.events.append(dict(kind="fail", rank=rank, t=t,
-                                n_lost=int(self.lost_experts.size),
-                                state=self.state))
+        self._emit(dict(kind="fail", rank=rank, t=t,
+                        n_lost=int(self.lost_experts.size),
+                        state=self.state))
         return params
 
     def rejoin_rank(self, rank: int) -> None:
@@ -224,8 +236,8 @@ class ElasticCoordinator:
         self.manager.rank_alive[rank] = True
         self._warming.add(rank)
         self.manager.request_replan()
-        self.events.append(dict(kind="rejoin", rank=rank, t=self.clock(),
-                                state=self.state))
+        self._emit(dict(kind="rejoin", rank=rank, t=self.clock(),
+                        state=self.state))
 
     # -- executor hooks ----------------------------------------------------
     def recovery_layers(self, plan) -> List[int]:
@@ -252,15 +264,15 @@ class ElasticCoordinator:
             self._fail_t = None
             if self.telemetry is not None:
                 self.telemetry.record_recovery(self.last_recovery_s)
-            self.events.append(dict(kind="recovered", t=now,
-                                    recovery_s=self.last_recovery_s,
-                                    state=self.state))
+            self._emit(dict(kind="recovered", t=now,
+                            recovery_s=self.last_recovery_s,
+                            state=self.state))
         if self._warming and self.manager.in_flight is None:
             for r in sorted(self._warming):
                 if self.manager.hosts_rank(r):
                     self._warming.discard(r)
-                    self.events.append(dict(kind="warm", rank=r, t=now,
-                                            state=self.state))
+                    self._emit(dict(kind="warm", rank=r, t=now,
+                                    state=self.state))
 
     # -- checkpoint re-materialization -------------------------------------
     def _has_checkpoint(self) -> bool:

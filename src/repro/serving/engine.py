@@ -78,6 +78,7 @@ from repro.configs.base import ModelConfig, ReaLBConfig
 from repro.core import ep_moe
 from repro.models import transformer as tf
 from repro.models.common import current_mesh
+from repro.obs.trace import NULL_TRACER
 from repro.serving.scheduler import Request, Scheduler
 from repro.serving.telemetry import Telemetry
 
@@ -132,8 +133,20 @@ class Engine:
                  capacity_margin: Optional[float] = None,
                  migrate_async: bool = False,
                  migrate_bytes_per_iter: Optional[int] = None,
-                 elastic=None, fault_injector=None):
+                 elastic=None, fault_injector=None, tracer=None):
         self.cfg, self.params, self.rcfg = cfg, params, rcfg
+        # span tracer (repro.obs.trace.Tracer); None -> the shared no-op
+        # singleton, whose calls record nothing and read no clock — an
+        # untraced engine is bitwise identical to one predating the obs
+        # layer.  When given, the tracer is shared with the manager and
+        # the elastic coordinator so their spans land on the same
+        # timeline.
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        if tracer is not None:
+            if placement is not None:
+                placement.tracer = tracer
+            if elastic is not None:
+                elastic.tracer = tracer
         self.max_slots, self.max_len = max_slots, max_len
         self.temperature = temperature
         self.prefill_budget = prefill_budget
@@ -349,6 +362,19 @@ class Engine:
             # record the measured seconds, not 0
             secs = wall
         self._charge_migration(int(plan.moved_bytes), secs, 0.0)
+        trc = self.tracer
+        if trc.enabled:
+            # one migration.drain span per charge: summed durations
+            # reconcile exactly with stall + hidden telemetry totals
+            trc.complete("migration.drain", self.clock() - secs, secs,
+                         cat="migration",
+                         args={"mode": "sync",
+                               "bytes": int(plan.moved_bytes),
+                               "stall_s": secs, "hidden_s": 0.0,
+                               "layers": len(layers)})
+            trc.instant("table.commit", cat="migration",
+                        args={"layers": len(layers), "done": True})
+        self._notify_plan_committed()
         if self._elastic is not None:
             self._elastic.on_layers_landed(plan, layers)
 
@@ -379,6 +405,23 @@ class Engine:
         if rep.done:
             self._mig = None
         self._charge_migration(rep.nbytes, stall, hidden)
+        trc = self.tracer
+        if trc.enabled:
+            # span starts at the stall charge and extends through the
+            # hidden (forward-overlapped) share; dur = stall + hidden so
+            # summed drain spans reconcile with the telemetry totals
+            trc.complete("migration.drain", self.clock() - stall,
+                         stall + hidden, cat="migration",
+                         args={"mode": "async", "bytes": int(rep.nbytes),
+                               "stall_s": stall, "hidden_s": hidden,
+                               "layers": len(rep.layers),
+                               "done": bool(rep.done)})
+            if rep.layers:
+                trc.instant("table.commit", cat="migration",
+                            args={"layers": len(rep.layers),
+                                  "done": bool(rep.done)})
+        if rep.done:
+            self._notify_plan_committed()
         if self._elastic is not None and rep.layers:
             # landed layers' lost experts are re-materialized (the
             # executor's patch_fn ran pre-commit); clear them and stamp
@@ -393,6 +436,18 @@ class Engine:
         self.migration_bytes_moved += int(nbytes)
         self.migration_stall_s += stall_s
         self.migration_hidden_s += hidden_s
+
+    def _notify_plan_committed(self):
+        """A staged plan fully landed: count the commit and open a fresh
+        prediction-accuracy window stamped with the predictor's per-layer
+        rank loads under the new tables (read-only — no engine state)."""
+        if self.telemetry is None:
+            return
+        self.telemetry.record_plan_commit()
+        if self._placement is not None \
+                and hasattr(self._placement, "predicted_rank_loads"):
+            self.telemetry.open_prediction_window(
+                self._it, self._placement.predicted_rank_loads())
 
     @property
     def migration_draining(self) -> bool:
@@ -543,8 +598,26 @@ class Engine:
                 # calibrated replan gate: measured routed tokens (and the
                 # engine clock) replace the static roofline constant
                 gate.observe_iter(tokens, stat.t_wall)
+            if self.telemetry is not None \
+                    and hasattr(self._placement, "rank_heatmap"):
+                # realized [n_blocks, ep] rank loads under the routable
+                # tables -> expert-load heatmap + prediction accuracy
+                self.telemetry.record_rank_heatmap(
+                    self._placement.rank_heatmap(
+                        np.asarray(aux["expert_stats"]),
+                        np.asarray(aux["slot_stats"])
+                        if "slot_stats" in aux else None))
         if self.telemetry is not None:
             self.telemetry.record_iter(stat)
+        trc = self.tracer
+        if trc.enabled:
+            trc.instant("dispatch.policy", cat="policy",
+                        args={"it": self._it, "phase": phase,
+                              "tokens": tokens,
+                              "ib_global": stat.ib_global,
+                              "fp4_ranks": stat.fp4_ranks,
+                              "gate_open": stat.gate_open,
+                              "drop_frac": stat.drop_frac})
 
     def _finish(self, req: Request):
         req.finish_time = self.clock()
@@ -576,9 +649,12 @@ class Engine:
                 else np.zeros((self.cfg.enc_seq_len, self.cfg.d_model),
                               np.float32),
                 jnp.dtype(self.cfg.param_dtype))[None]
-        logits, new_cache, self.m_state, aux = self._prefill_one(
-            self.params, self.m_state, batch, self._place_args())
-        self._tick(req.prompt_len)
+        with self.tracer.span("forward.prefill", cat="forward") as sp:
+            logits, new_cache, self.m_state, aux = self._prefill_one(
+                self.params, self.m_state, batch, self._place_args())
+            self._tick(req.prompt_len)
+            if self.tracer.enabled:
+                sp.set(tokens=req.prompt_len)
         self._insert_cache(req.slot, new_cache)
         req.prefill_pos = req.prompt_len
         self._first_token(req, int(self._sample(logits)[0]))
@@ -616,11 +692,14 @@ class Engine:
             modality[slot, :take] = req.modality[p0:p0 + take]
             start[slot] = p0
             chunk_len[slot] = take
-        logits, self.cache, self.m_state, aux = self._chunk(
-            self.params, self.cache, self.m_state, jnp.asarray(tokens),
-            jnp.asarray(start), jnp.asarray(chunk_len),
-            jnp.asarray(modality), self._place_args())
-        self._tick(b * s_bucket)
+        with self.tracer.span("forward.chunk", cat="forward") as sp:
+            logits, self.cache, self.m_state, aux = self._chunk(
+                self.params, self.cache, self.m_state, jnp.asarray(tokens),
+                jnp.asarray(start), jnp.asarray(chunk_len),
+                jnp.asarray(modality), self._place_args())
+            self._tick(b * s_bucket)
+            if self.tracer.enabled:
+                sp.set(slots=len(plan), batch_tokens=b * s_bucket)
         completing = [slot for slot, take in plan
                       if self.scheduler.active[slot].prefill_pos + take
                       >= self.scheduler.active[slot].prompt_len]
@@ -640,6 +719,15 @@ class Engine:
     # -- the iteration --------------------------------------------------------
     def step(self) -> int:
         """One continuous-batching iteration. Returns #active sequences."""
+        trc = self.tracer
+        if not trc.enabled:
+            return self._step()
+        with trc.span("iter", cat="engine") as sp:
+            n = self._step()
+            sp.set(it=self._it, n_active=n)
+        return n
+
+    def _step(self) -> int:
         self._it += 1
         # -2) scripted rank faults fire between iterations — the event
         # boundary of the elastic subsystem (dispatch tables, params and
@@ -676,15 +764,20 @@ class Engine:
             self._prefill_fifo = [s for s in self._prefill_fifo
                                   if s in self.scheduler.active]
         # 1) admit new requests; route each to the chunked or one-shot path
-        for req in self.scheduler.admit():
-            self.active_mask[req.slot] = True
-            self.decode_ready[req.slot] = False
-            self.mod_state[req.slot] = req.decode_modality
-            if self.chunked and req.vision_embeds is None:
-                req.prefill_pos = 0
-                self._prefill_fifo.append(req.slot)
-            else:
-                self._prefill_oneshot(req)
+        with self.tracer.span("admit", cat="engine") as sp:
+            n_admitted = 0
+            for req in self.scheduler.admit():
+                n_admitted += 1
+                self.active_mask[req.slot] = True
+                self.decode_ready[req.slot] = False
+                self.mod_state[req.slot] = req.decode_modality
+                if self.chunked and req.vision_embeds is None:
+                    req.prefill_pos = 0
+                    self._prefill_fifo.append(req.slot)
+                else:
+                    self._prefill_oneshot(req)
+            if self.tracer.enabled:
+                sp.set(admitted=n_admitted)
 
         # 2) one batched chunk of prefill work across all pending slots
         if self._prefill_fifo:
@@ -711,10 +804,15 @@ class Engine:
                               jnp.int32)
             modality = jnp.asarray(
                 np.where(ready, self.mod_state, False)[:, None])
-            logits, self.cache, self.m_state, aux = self._decode(
-                self.params, self.cache, self.m_state, tokens, pos, modality,
-                jnp.asarray(ready[:, None]), self._place_args())
-            self._tick(self.max_slots)
+            with self.tracer.span("forward.decode", cat="forward") as sp:
+                logits, self.cache, self.m_state, aux = self._decode(
+                    self.params, self.cache, self.m_state, tokens, pos,
+                    modality, jnp.asarray(ready[:, None]),
+                    self._place_args())
+                self._tick(self.max_slots)
+                if self.tracer.enabled:
+                    sp.set(batch_tokens=self.max_slots,
+                           ready=int(ready.sum()))
             toks = self._sample(logits)
             for slot, req in list(self.scheduler.active.items()):
                 if ready[slot] and not req.done:

@@ -9,44 +9,27 @@ long-running server reports *recent* percentiles, and exposes the headline
 quantities of the paper's serving evaluation: TTFT / TPOT percentiles,
 ``ib_global`` distribution, and LB-gate / FP4 duty cycles split by phase.
 
-Percentiles use the linear-interpolation definition (numpy's default) but
-are implemented locally so the math is unit-testable without an engine.
+Cumulative quantities (migration bytes/seconds, plan commits, elastic
+availability, recoveries) live on a typed
+:class:`~repro.obs.metrics.MetricsRegistry` — the seed's ad-hoc instance
+attributes survive as property shims so existing readers keep working —
+and two :mod:`repro.obs.metrics` recorders ride along: the per-layer
+per-rank expert-load heatmap and the predicted-vs-realized peak-rank-load
+accuracy tracker (opened per committed replan window).
+
+Percentiles use the linear-interpolation definition (numpy's default);
+the math lives in :mod:`repro.obs.metrics` and is re-exported here.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional
 
+from repro.obs.metrics import (HeatmapRecorder, MetricsRegistry,
+                               PredictionTracker, percentile, summarize)
 
-def percentile(xs: Sequence[float], q: float) -> float:
-    """Linear-interpolation percentile (numpy 'linear' method).
-
-    q in [0, 100].  Defined locally (not np.percentile) so the telemetry
-    math is dependency-light and directly unit-tested.
-    """
-    if not 0.0 <= q <= 100.0:
-        raise ValueError(f"percentile q out of range: {q}")
-    xs = sorted(xs)
-    if not xs:
-        raise ValueError("percentile of empty sequence")
-    if len(xs) == 1:
-        return float(xs[0])
-    rank = (q / 100.0) * (len(xs) - 1)
-    lo = int(rank)
-    hi = min(lo + 1, len(xs) - 1)
-    frac = rank - lo
-    return float(xs[lo] * (1.0 - frac) + xs[hi] * frac)
-
-
-def summarize(xs: Sequence[float], qs=(50, 90, 99)) -> Dict[str, float]:
-    """{"p50": ..., "p90": ..., ...} plus mean; empty input -> {}."""
-    xs = list(xs)
-    if not xs:
-        return {}
-    out = {f"p{int(q)}": percentile(xs, q) for q in qs}
-    out["mean"] = sum(xs) / len(xs)
-    return out
+__all__ = ["percentile", "summarize", "RequestLatency", "Telemetry"]
 
 
 @dataclasses.dataclass
@@ -62,38 +45,88 @@ class RequestLatency:
 class Telemetry:
     """Rolling-window collector; feed it from the engine, read summaries."""
 
-    def __init__(self, window: int = 512):
+    def __init__(self, window: int = 512,
+                 registry: Optional[MetricsRegistry] = None):
         self.window = window
         self.iters: Deque = deque(maxlen=window)        # IterStats
         self.requests: Deque[RequestLatency] = deque(maxlen=window)
         self.n_iters = 0
         self.n_requests = 0
+        self.registry = registry if registry is not None else MetricsRegistry()
+        reg = self.registry
         # migration accounting is cumulative (not windowed): the question
         # the paper's comparison asks is "how many bytes did placement move
         # over the whole run, vs. ReaLB's zero".  Bytes stay integral
         # end-to-end (plans count whole weight bytes, never fractions);
         # seconds are split into serving *stall* (migration_s_total) and
         # transfer time *hidden* under the forward by async overlap.
-        self.migration_bytes_total = 0
-        self.migration_s_total = 0.0
-        self.migration_hidden_s_total = 0.0
-        self.n_migrations = 0
+        self._mig_bytes = reg.counter(
+            "migration_bytes", "weight bytes moved by replans")
+        self._mig_s = reg.counter(
+            "migration_stall_s", "serving seconds stalled on migration")
+        self._mig_hidden_s = reg.counter(
+            "migration_hidden_s",
+            "migration transfer seconds hidden under the forward")
+        # one count per iteration that carried migration traffic — under
+        # async draining that is one per chunk batch, not per plan; plan
+        # commits are counted separately (record_plan_commit)
+        self._mig_iters = reg.counter(
+            "migration_iters", "iterations carrying migration traffic")
+        self._plan_commits = reg.counter(
+            "plans_committed", "replan plans fully committed")
         # elastic-serving availability accounting (cumulative, like the
         # migration counters): an iteration is *degraded* when >= 1
         # expert was unroutable (a rank died and took the only replica);
         # each completed recovery stamps its wall seconds
-        self.degraded_iters = 0
-        self.lost_tokens_total = 0.0
-        self.recoveries: List[float] = []
+        self._degraded = reg.counter(
+            "degraded_iters", "iterations with >=1 unroutable expert")
+        self._lost_tokens = reg.counter(
+            "lost_tokens", "expected tokens lost to unroutable experts")
+        self._recovery_hist = reg.histogram(
+            "recovery_s", "seconds from rank loss to full routability")
+        self.heatmap = HeatmapRecorder()
+        self.prediction = PredictionTracker()
+
+    # -- seed-compat shims: cumulative attrs now live on the registry -----
+    @property
+    def migration_bytes_total(self) -> int:
+        return int(self._mig_bytes.value())
+
+    @property
+    def migration_s_total(self) -> float:
+        return float(self._mig_s.value())
+
+    @property
+    def migration_hidden_s_total(self) -> float:
+        return float(self._mig_hidden_s.value())
+
+    @property
+    def n_migrations(self) -> int:
+        return int(self._mig_iters.value())
+
+    @property
+    def n_plans_committed(self) -> int:
+        return int(self._plan_commits.value())
+
+    @property
+    def degraded_iters(self) -> int:
+        return int(self._degraded.value())
+
+    @property
+    def lost_tokens_total(self) -> float:
+        return float(self._lost_tokens.value())
+
+    @property
+    def recoveries(self) -> List[float]:
+        return self._recovery_hist.values()
 
     # -- feeds ------------------------------------------------------------
     def record_iter(self, stat) -> None:
         self.iters.append(stat)
         self.n_iters += 1
         if getattr(stat, "n_unroutable", 0) > 0:
-            self.degraded_iters += 1
-            self.lost_tokens_total += float(
-                getattr(stat, "lost_tokens", 0.0))
+            self._degraded.inc()
+            self._lost_tokens.inc(float(getattr(stat, "lost_tokens", 0.0)))
         mig = getattr(stat, "migration_bytes", 0)
         mig_s = getattr(stat, "migration_s", 0.0)
         mig_h = getattr(stat, "migration_hidden_s", 0.0)
@@ -101,19 +134,33 @@ class Telemetry:
         # drained replica batch of same-rank copies priced at 0 bytes
         # under a wall clock) — never drop measured time on the floor
         if mig > 0 or mig_s > 0 or mig_h > 0:
-            self.migration_bytes_total += int(mig)
-            self.migration_s_total += mig_s
-            self.migration_hidden_s_total += mig_h
-            # NOTE: one count per iteration that carried migration
-            # traffic — under async draining that is one per chunk
-            # batch, not per plan; the manager's n_migrations counts
-            # committed plans
-            self.n_migrations += 1
+            self._mig_bytes.inc(int(mig))
+            self._mig_s.inc(mig_s)
+            self._mig_hidden_s.inc(mig_h)
+            self._mig_iters.inc()
+
+    def record_plan_commit(self) -> None:
+        """One replan plan fully committed (sync apply, or the last
+        layer of an async drain landing)."""
+        self._plan_commits.inc()
+
+    def record_rank_heatmap(self, heatmap) -> None:
+        """Per-iteration ``[L, R]`` rank loads from the live tables;
+        feeds the expert-load heatmap and the open prediction window."""
+        if heatmap is None:
+            return
+        self.heatmap.record(heatmap)
+        self.prediction.record(heatmap)
+
+    def open_prediction_window(self, it: int, predicted) -> None:
+        """Stamp the predictor's per-layer rank loads at a plan commit;
+        closes the previous window (see PredictionTracker)."""
+        self.prediction.open(it, predicted)
 
     def record_recovery(self, seconds: float) -> None:
         """One completed elastic recovery (rank loss -> every expert
         routable again), in wall/virtual seconds."""
-        self.recoveries.append(float(seconds))
+        self._recovery_hist.observe(float(seconds))
 
     def record_request(self, req) -> None:
         if req.ttft is None:
@@ -186,6 +233,7 @@ class Telemetry:
             "vision": [r.ttft for r in self.requests if r.is_vision],
             "text": [r.ttft for r in self.requests if not r.is_vision],
         }
+        recoveries = self.recoveries
         return {
             "n_iters": self.n_iters,
             "n_requests": self.n_requests,
@@ -209,12 +257,21 @@ class Telemetry:
             # hidden share is the transfer time async overlap absorbed
             "migration_stall_s": self.migration_s_total,
             "migration_hidden_s": self.migration_hidden_s_total,
+            # "n_migrations" kept for old readers; it counts *iterations*
+            # that carried migration traffic (one per async chunk batch),
+            # NOT committed plans — the two unambiguous names:
             "n_migrations": self.n_migrations,
+            "n_migration_iters": self.n_migrations,
+            "n_plans_committed": self.n_plans_committed,
             # elastic serving: availability + recovery time
             "availability": self.availability,
             "degraded_iters": self.degraded_iters,
             "lost_tokens_total": self.lost_tokens_total,
-            "n_recoveries": len(self.recoveries),
-            "recovery_s": max(self.recoveries) if self.recoveries
-            else None,
+            "n_recoveries": len(recoveries),
+            # recovery_s stays the max (worst recovery) for old readers;
+            # "recovery" carries the full percentile summary
+            "recovery_s": max(recoveries) if recoveries else None,
+            "recovery": summarize(recoveries),
+            "expert_load_heatmap": self.heatmap.summary(),
+            "prediction_accuracy": self.prediction.summary(),
         }
