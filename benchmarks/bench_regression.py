@@ -7,7 +7,10 @@ Compares each arm's ``throughput_tok_per_s`` in a fresh
 ``BENCH_serve.json`` against the checked-in baseline and prints a
 markdown table (arm, baseline tok/s, current tok/s, delta, verdict).
 Arms slower than ``baseline * (1 - tolerance)`` are flagged ``WARN``;
-arms missing from either file are flagged ``NEW`` / ``GONE``.
+arms missing from either file are flagged ``NEW`` / ``GONE``.  When
+both files carry the profiler's ``mfu`` key, an MFU drop beyond
+``--mfu-tolerance`` (default 10%, tighter than tok/s because the ratio
+cancels runner speed) is flagged ``WARN(mfu)``.
 
 The guard **never fails the build** (exit 0 always, unless an input
 file is unreadable): serving throughput is measured in real wall
@@ -33,7 +36,8 @@ def load_arms(path: str) -> Dict[str, Dict]:
 
 
 def compare(current: Dict[str, Dict], baseline: Dict[str, Dict],
-            tolerance: float) -> Dict[str, Dict]:
+            tolerance: float, mfu_tolerance: float = 0.10
+            ) -> Dict[str, Dict]:
     rows: Dict[str, Dict] = {}
     for arm in sorted(set(current) | set(baseline)):
         cur = current.get(arm, {}).get("throughput_tok_per_s")
@@ -46,9 +50,18 @@ def compare(current: Dict[str, Dict], baseline: Dict[str, Dict],
             verdict = "WARN"
         else:
             verdict = "OK"
+        # MFU rides along under its own (tighter) band: utilization is
+        # a flops-over-measured-seconds ratio, so it is less
+        # runner-speed-dependent than raw tok/s
+        cur_mfu = current.get(arm, {}).get("mfu")
+        base_mfu = baseline.get(arm, {}).get("mfu")
+        if verdict == "OK" and cur_mfu is not None and base_mfu \
+                and cur_mfu < base_mfu * (1.0 - mfu_tolerance):
+            verdict = "WARN(mfu)"
         rows[arm] = dict(baseline=base, current=cur, verdict=verdict,
                          delta=(cur / base - 1.0)
-                         if cur is not None and base else None)
+                         if cur is not None and base else None,
+                         baseline_mfu=base_mfu, current_mfu=cur_mfu)
     return rows
 
 
@@ -56,14 +69,20 @@ def markdown_table(rows: Dict[str, Dict], tolerance: float) -> str:
     out = [f"### serve_bench throughput vs baseline "
            f"(warn below -{tolerance:.0%})",
            "",
-           "| arm | baseline tok/s | current tok/s | delta | verdict |",
-           "|---|---:|---:|---:|---|"]
+           "| arm | baseline tok/s | current tok/s | delta | "
+           "baseline mfu | current mfu | verdict |",
+           "|---|---:|---:|---:|---:|---:|---|"]
     for arm, r in rows.items():
         base = f"{r['baseline']:.0f}" if r["baseline"] is not None else "-"
         cur = f"{r['current']:.0f}" if r["current"] is not None else "-"
         delta = f"{r['delta']:+.1%}" if r["delta"] is not None else "-"
-        out.append(f"| {arm} | {base} | {cur} | {delta} | {r['verdict']} |")
-    n_warn = sum(r["verdict"] == "WARN" for r in rows.values())
+        bm = f"{r['baseline_mfu']:.4f}" \
+            if r.get("baseline_mfu") is not None else "-"
+        cm = f"{r['current_mfu']:.4f}" \
+            if r.get("current_mfu") is not None else "-"
+        out.append(f"| {arm} | {base} | {cur} | {delta} | {bm} | {cm} "
+                   f"| {r['verdict']} |")
+    n_warn = sum(r["verdict"].startswith("WARN") for r in rows.values())
     out += ["", f"{n_warn} arm(s) below the tolerance band"
                 if n_warn else "all arms within the tolerance band"]
     return "\n".join(out)
@@ -78,6 +97,10 @@ def main(argv=None) -> int:
                     help="relative slowdown that triggers a WARN "
                          "(default 0.30: wall-clock throughput on shared "
                          "CI runners is noisy)")
+    ap.add_argument("--mfu-tolerance", type=float, default=0.10,
+                    help="relative MFU drop that triggers a WARN(mfu) "
+                         "(tighter than tok/s: utilization is a ratio, "
+                         "less runner-dependent)")
     args = ap.parse_args(argv)
     try:
         current = load_arms(args.current)
@@ -85,7 +108,8 @@ def main(argv=None) -> int:
     except (OSError, json.JSONDecodeError) as e:
         print(f"bench_regression: cannot read inputs: {e}", file=sys.stderr)
         return 1
-    rows = compare(current, baseline, args.tolerance)
+    rows = compare(current, baseline, args.tolerance,
+                   mfu_tolerance=args.mfu_tolerance)
     print(markdown_table(rows, args.tolerance))
     return 0    # warn-only by design: the table is the signal
 

@@ -30,10 +30,9 @@ import numpy as np
 
 from benchmarks import traces as tr
 from repro.configs.base import MIGRATION_BW_DEFAULT
+from repro.configs.hw import HBM_BW, PEAK_BF16, PEAK_INT8  # single-sourced
+#                              with launch.roofline and obs.ledger (v5e)
 
-PEAK_BF16 = 197e12
-PEAK_INT8 = 394e12            # TPU v5e int8 MXU rate (w4a8 execution)
-HBM_BW = 819e9
 ICI_BW = MIGRATION_BW_DEFAULT  # per link — single-sourced with the
 #                                managers' migration_bw default, so sims,
 #                                replan gates and engine accounting price
@@ -142,6 +141,21 @@ class ReplanCostGate:
     bandwidth: object = None        # None = static ICI_BW; the managers
     #                                 wire their measured-bandwidth EWMA
     #                                 in here so gate pricing tracks it
+    time_scale: object = None       # None = trust the analytic model;
+    #                                 the profiler wires its measured/
+    #                                 predicted drift EWMA in here so the
+    #                                 savings side of the gate tracks
+    #                                 reality the way bandwidth does for
+    #                                 the migration side
+
+    def _time_scale(self) -> float:
+        """Measured-over-predicted calibration of the savings side: 1.0
+        when unwired, else anything float()-able — in particular the
+        profiler's :meth:`repro.obs.profiler.Profiler.time_scale` EWMA."""
+        if self.time_scale is None:
+            return 1.0
+        ts = self.time_scale
+        return max(float(ts() if callable(ts) else ts), 1e-3)
 
     def layer_seconds(self, rank_loads: np.ndarray) -> float:
         """MoE layer time of one iteration under the given (relative)
@@ -153,7 +167,7 @@ class ReplanCostGate:
         tok = loads * (self.tokens_per_iter * self.g.top_k / tot)
         t, _ = moe_layer_time(tok, np.zeros(self.ep), self.g, self.ep,
                               self.tokens_per_iter)
-        return t
+        return t * self._time_scale()
 
     def accept(self, old_rank_loads: np.ndarray,
                new_rank_loads: np.ndarray, n_moved: int) -> bool:
@@ -209,6 +223,10 @@ class CalibratedReplanCostGate:
         # a manager wires its measured-bandwidth EWMA in (then replans
         # are priced at observed apply_to_params bytes/s, not ICI_BW)
         self.bandwidth = bandwidth
+        # savings-side calibration: None until the profiler wires its
+        # measured/predicted drift EWMA in (then predicted savings are
+        # rescaled by how fast the hardware actually runs the model)
+        self.time_scale = None
         self._tokens: List[float] = []
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
@@ -242,7 +260,8 @@ class CalibratedReplanCostGate:
     def _gate(self) -> ReplanCostGate:
         return ReplanCostGate(self.g, self.ep, self.horizon_iters,
                               tokens_per_iter=self.tokens_per_iter,
-                              bandwidth=self.bandwidth)
+                              bandwidth=self.bandwidth,
+                              time_scale=self.time_scale)
 
     def layer_seconds(self, rank_loads: np.ndarray) -> float:
         return self._gate().layer_seconds(rank_loads)

@@ -1,0 +1,168 @@
+"""Text summary of a serve_bench hot-loop profile: phase table, MFU,
+and costmodel-drift reconciliation.
+
+    PYTHONPATH=src python benchmarks/profile_report.py profile.json
+
+Loads + structurally validates the profile JSON written by
+``serve_bench --profile-out`` (schema ``repro.profile.v1``), then
+prints:
+
+- the per-phase table: measured seconds (forward time attributed to the
+  phase), ledger-predicted seconds, measured share of the forward, and
+  the cumulative measured/predicted drift ratio,
+- the headline utilization numbers: MFU (useful model flops over
+  measured seconds at the BF16 peak), roofline fraction, and the
+  costmodel ``time_scale`` EWMA the replan cost gates calibrate with,
+- the kernel-PR acceptance number from ROADMAP item 1: the
+  ``dispatch + quantize_fp4`` share of the forward.
+
+Two accounting-integrity invariants are enforced (the same discipline as
+``trace_report.py``'s migration reconciliation):
+
+1. **Exhaustive attribution** — the per-phase measured seconds must sum
+   to the run's total forward seconds (the profiler attributes every
+   measured second to exactly one phase).
+2. **MFU consistency** — ``mfu * (PEAK_BF16 * forward_s)`` must equal
+   the cumulative useful model flops.
+
+Exit status is non-zero when the profile fails validation (1) or either
+reconciliation diverges beyond tolerance (2), so CI can use the report
+as a cheap profile-integrity check.  Per-phase *drift* (measured vs
+predicted) is reported but not gated — mixed prefill/decode iterations
+legitimately shift the share vector; ``--drift-tolerance`` turns it
+into a gate for controlled single-regime runs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict
+
+from repro.configs.hw import PEAK_BF16
+from repro.obs.profiler import PROFILE_SCHEMA
+from repro.obs.ledger import PHASES
+
+RECONCILE_RTOL = 1e-6
+RECONCILE_ATOL = 1e-12
+
+
+def load_profile(path: str) -> Dict:
+    with open(path) as f:
+        obj = json.load(f)
+    if not isinstance(obj, dict):
+        raise ValueError("profile must be a JSON object")
+    if obj.get("schema") != PROFILE_SCHEMA:
+        raise ValueError(f"schema {obj.get('schema')!r} != "
+                         f"{PROFILE_SCHEMA!r}")
+    phases = obj.get("phases")
+    if not isinstance(phases, dict) or not phases:
+        raise ValueError("missing/empty 'phases' object")
+    for ph, rec in phases.items():
+        if not isinstance(rec, dict) or "measured_s" not in rec \
+                or "predicted_s" not in rec:
+            raise ValueError(f"phase {ph!r} needs measured_s/predicted_s")
+    totals = obj.get("totals")
+    if not isinstance(totals, dict):
+        raise ValueError("missing 'totals' object")
+    for key in ("forward_s", "model_flops", "mfu"):
+        if key not in totals:
+            raise ValueError(f"totals missing {key!r}")
+    return obj
+
+
+def _close(got: float, want: float, rtol: float) -> bool:
+    return abs(got - want) <= RECONCILE_ATOL + rtol * abs(want)
+
+
+def report(path: str, rtol: float = RECONCILE_RTOL,
+           drift_tolerance: float = 0.0) -> int:
+    try:
+        obj = load_profile(path)
+    except (ValueError, OSError, json.JSONDecodeError) as e:
+        print(f"INVALID profile {path}: {e}", file=sys.stderr)
+        return 1
+    meta = obj.get("metadata", {})
+    totals = obj["totals"]
+    phases = obj["phases"]
+    fwd_s = float(totals["forward_s"])
+    print(f"profile {path}: {obj.get('n_iters')} iters"
+          + (f", arm={meta.get('arm')}" if meta.get("arm") else "")
+          + (f", arch={meta.get('arch')}" if meta.get("arch") else "")
+          + (", virtual time" if meta.get("virtual_time") else ""))
+
+    order = [ph for ph in PHASES if ph in phases] \
+        + [ph for ph in phases if ph not in PHASES]
+    print(f"\n{'phase':14s} {'measured ms':>12s} {'predicted ms':>13s} "
+          f"{'share':>7s} {'drift':>7s}")
+    for ph in order:
+        meas = float(phases[ph]["measured_s"])
+        pred = float(phases[ph]["predicted_s"])
+        share = meas / fwd_s if fwd_s > 0 else 0.0
+        drift = meas / pred if pred > 0 else float("nan")
+        print(f"{ph:14s} {meas * 1e3:12.4f} {pred * 1e3:13.4f} "
+              f"{share:7.3f} {drift:7.3f}")
+
+    mfu = float(totals["mfu"])
+    print(f"\nMFU {mfu:.4f}"
+          + (f"  roofline_fraction {totals['roofline_fraction']:.4f}"
+             if "roofline_fraction" in totals else "")
+          + (f"  costmodel time_scale {totals['time_scale']:.4f}"
+             if "time_scale" in totals else ""))
+    # the ROADMAP item-1 acceptance number: the share a fused Pallas
+    # dispatch+quantize kernel must shrink
+    kern = sum(float(phases[ph]["measured_s"])
+               for ph in ("dispatch", "quantize_fp4") if ph in phases)
+    if fwd_s > 0:
+        print(f"dispatch+quantize_fp4 share: {kern / fwd_s:.3f} "
+              "(ROADMAP item 1 kernel-PR acceptance number)")
+
+    rc = 0
+    # 1) exhaustive attribution: phases partition the forward seconds
+    meas_sum = sum(float(rec["measured_s"]) for rec in phases.values())
+    ok = _close(meas_sum, fwd_s, rtol)
+    print(f"reconcile attribution: sum(phase measured)={meas_sum:.9f}s "
+          f"vs forward_s={fwd_s:.9f}s -> {'OK' if ok else 'MISMATCH'}")
+    rc = rc or (0 if ok else 2)
+    # 2) MFU consistency: the gauge must be the ledger flops over
+    # measured seconds at the single-sourced BF16 peak
+    want_flops = float(totals["model_flops"])
+    got_flops = mfu * PEAK_BF16 * fwd_s
+    ok = _close(got_flops, want_flops, rtol)
+    print(f"reconcile mfu: mfu*peak*forward_s={got_flops:.6e} flops "
+          f"vs model_flops={want_flops:.6e} -> "
+          f"{'OK' if ok else 'MISMATCH'}")
+    rc = rc or (0 if ok else 2)
+    # 3) optional drift gate for controlled single-regime runs
+    if drift_tolerance > 0:
+        for ph in order:
+            pred = float(phases[ph]["predicted_s"])
+            if pred <= 0:
+                continue
+            drift = float(phases[ph]["measured_s"]) / pred
+            scale = float(totals.get("time_scale", 1.0))
+            if abs(drift / max(scale, 1e-12) - 1.0) > drift_tolerance:
+                print(f"DRIFT phase {ph}: {drift:.3f} vs time_scale "
+                      f"{scale:.3f} beyond {drift_tolerance:.2f}")
+                rc = rc or 2
+    return rc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("profile", help="profile JSON from "
+                                    "serve_bench --profile-out")
+    ap.add_argument("--rtol", type=float, default=RECONCILE_RTOL,
+                    help="relative tolerance for the attribution and "
+                         "MFU reconciliation checks")
+    ap.add_argument("--drift-tolerance", type=float, default=0.0,
+                    help="gate per-phase drift vs the run's time_scale "
+                         "beyond this relative tolerance (0 = report "
+                         "only; leave 0 for mixed prefill/decode runs)")
+    args = ap.parse_args(argv)
+    return report(args.profile, rtol=args.rtol,
+                  drift_tolerance=args.drift_tolerance)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

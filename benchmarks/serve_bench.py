@@ -48,6 +48,14 @@ arm's:
 
     python benchmarks/serve_bench.py --scenario kill-rejoin \
         --json-out BENCH_serve.json
+
+Every arm runs with the hot-loop profiler live (FLOP/byte ledger →
+``mfu`` / ``roofline_fraction`` / per-phase seconds / costmodel drift in
+the summary and ``BENCH_serve.json``); ``--profile-out`` writes the
+profile JSON that ``benchmarks/profile_report.py`` summarizes and
+reconciles, and ``--xprof-out DIR`` captures a programmatic
+``jax.profiler`` device trace with the MoE phases labeled by
+``jax.named_scope``.
 """
 from __future__ import annotations
 
@@ -218,9 +226,21 @@ def parse_args(argv=None):
     ap.add_argument("--log-every", type=int, default=0, metavar="N",
                     help="print one structured JSONL log line every N "
                          "serving iterations (iter, phase, tokens, "
-                         "ib_global, fp4_ranks, migration stall/hidden, "
-                         "unroutable) for long-run debugging without a "
-                         "trace viewer")
+                         "ib_global, fp4_ranks, mfu, per-phase seconds, "
+                         "migration stall/hidden, unroutable) for "
+                         "long-run debugging without a trace viewer")
+    ap.add_argument("--profile-out", default=None, metavar="PATH",
+                    help="write the hot-loop profiler's phase/FLOP/drift "
+                         "JSON (schema repro.profile.v1); summarize and "
+                         "reconcile with benchmarks/profile_report.py. "
+                         "Under --arm all / kill-rejoin the profile "
+                         "covers the last run only (like --trace-out)")
+    ap.add_argument("--xprof-out", default=None, metavar="DIR",
+                    help="capture a programmatic jax.profiler device "
+                         "trace of the serve loop into DIR (open with "
+                         "xprof/tensorboard); the jax.named_scope phase "
+                         "annotations in core/ep_moe.py label the MoE "
+                         "stages in the timeline")
     return ap.parse_args(argv)
 
 
@@ -306,6 +326,15 @@ def serve(args, cfg, params, specs: List[RequestSpec],
                          "(replicas are the availability mechanism); "
                          f"got arm={args.arm!r}")
     telemetry = Telemetry()
+    # hot-loop profiler: FLOP/byte ledger + per-phase attribution +
+    # costmodel drift, on every arm; it shares the telemetry registry so
+    # mfu / roofline_fraction / phase seconds surface in summary() and
+    # every arm's BENCH_serve.json
+    profiler = None
+    if cfg.moe is not None:
+        from repro.obs import FlopByteLedger, Profiler
+        profiler = Profiler(FlopByteLedger(cfg, ep=vep),
+                            registry=telemetry.registry)
     if args.wall_time:
         # zero the wall clock at run start so it is comparable with the
         # stream's arrival times (seconds from 0) and paces the open loop
@@ -355,7 +384,13 @@ def serve(args, cfg, params, specs: List[RequestSpec],
                  migrate_async=args.migrate_async,
                  migrate_bytes_per_iter=args.migrate_bytes_per_iter
                  or None,
-                 elastic=elastic, fault_injector=injector, tracer=tracer)
+                 elastic=elastic, fault_injector=injector, tracer=tracer,
+                 profiler=profiler)
+
+    xprof_out = getattr(args, "xprof_out", None)
+    if xprof_out:
+        import jax
+        jax.profiler.start_trace(xprof_out)
 
     closed = None
     prof = profile(args.workload)
@@ -409,6 +444,17 @@ def serve(args, cfg, params, specs: List[RequestSpec],
     # finish any in-flight async chunk queue so the migration accounting
     # is complete and the engine is left in a checkpointable state
     eng.drain_migrations()
+    if xprof_out:
+        import jax
+        jax.profiler.stop_trace()
+        print(f"wrote xprof device trace -> {xprof_out}")
+    profile_out = getattr(args, "profile_out", None)
+    if profile_out and profiler is not None:
+        profiler.write(profile_out, metadata=dict(
+            arm=args.arm or args.policy, arch=cfg.name,
+            workload=args.workload, virtual_time=not args.wall_time,
+            n_iters=int(telemetry.n_iters)))
+        print(f"wrote profile ({profiler.n_iters} iters) -> {profile_out}")
     if tracer is not None:
         # the run totals travel with the trace so trace_report.py can
         # reconcile summed migration.drain span durations against them
@@ -433,14 +479,21 @@ def iter_log_record(eng: Engine, it: int) -> Dict:
     iteration (``--log-every``): long-run debugging without a trace
     viewer."""
     st = eng.stats[-1]
-    return dict(iter=it, t=round(float(st.t_wall), 6), phase=st.phase,
-                n_active=int(st.n_active), tokens=int(st.tokens),
-                ib_global=round(float(st.ib_global), 4),
-                fp4_ranks=float(st.fp4_ranks),
-                gate_open=float(st.gate_open),
-                migration_s=float(st.migration_s),
-                migration_hidden_s=float(st.migration_hidden_s),
-                n_unroutable=int(st.n_unroutable))
+    rec = dict(iter=it, t=round(float(st.t_wall), 6), phase=st.phase,
+               n_active=int(st.n_active), tokens=int(st.tokens),
+               ib_global=round(float(st.ib_global), 4),
+               fp4_ranks=float(st.fp4_ranks),
+               gate_open=float(st.gate_open),
+               migration_s=float(st.migration_s),
+               migration_hidden_s=float(st.migration_hidden_s),
+               n_unroutable=int(st.n_unroutable))
+    prof = eng.profiler
+    if prof.enabled and getattr(prof, "last", None) is not None:
+        rec["mfu"] = round(prof.mfu(), 6)
+        rec["time_scale"] = round(prof.time_scale(), 4)
+        rec["phase_s"] = {ph: round(v, 6)
+                          for ph, v in prof.phase_seconds().items()}
+    return rec
 
 
 def summarize_run(telemetry: Telemetry, eng: Engine, wall: float) -> Dict:

@@ -1,0 +1,30 @@
+"""Single source of truth for TPU v5e hardware constants.
+
+Every module that prices compute against the hardware — the launch-time
+roofline (`repro.launch.roofline`), the analytic serving cost model
+(`benchmarks/costmodel.py`), and the runtime FLOP/byte ledger
+(`repro.obs.ledger`) — imports these numbers from here so a calibration
+change lands everywhere at once.
+
+Per-chip figures:
+
+- ``PEAK_BF16``: 197 TFLOP/s dense bf16 MXU rate.
+- ``PEAK_INT8``: 394 TFLOP/s int8 MXU rate (2x bf16) — the rate FP4
+  experts run at after dequant-to-int8-scale inside the grouped GEMM.
+- ``HBM_BW``: 819 GB/s HBM bandwidth.
+- ``PEAK_FLOPS``: legacy alias for ``PEAK_BF16`` kept for the roofline
+  module's public name.
+
+Inter-chip (ICI) bandwidth is *not* defined here: the serving stack
+single-sources it as ``repro.configs.base.MIGRATION_BW_DEFAULT`` (50
+GB/s/link) because the measured-bandwidth EWMA can override it at run
+time; static consumers import that constant directly.
+"""
+from __future__ import annotations
+
+PEAK_BF16 = 197e12           # FLOP/s / chip, dense bf16
+PEAK_INT8 = 394e12           # FLOP/s / chip, int8 MXU rate (2x bf16)
+PEAK_FLOPS = PEAK_BF16       # legacy roofline name
+HBM_BW = 819e9               # B/s / chip
+
+__all__ = ["PEAK_BF16", "PEAK_INT8", "PEAK_FLOPS", "HBM_BW"]

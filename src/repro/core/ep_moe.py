@@ -390,11 +390,17 @@ def _quantize_experts(w: Dict[str, jax.Array], use_fp4: jax.Array,
 # dispatch path (train / prefill)
 # --------------------------------------------------------------------------
 def _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, rep,
-                  pol_ep, train):
+                  pol_ep, train, stop_stage=None):
     """x_t [t,D] local tokens; mod_t [t] vision flags; val_t [t] real-token
     flags (False = batch padding); m_vec [pol_ep] AIMD; rep maps logical
     experts onto replica slots strided over ``pol_ep`` policy ranks
-    (== comm.ep on a real EP mesh; a virtual topology when comm.ep == 1)."""
+    (== comm.ep on a real EP mesh; a virtual topology when comm.ep == 1).
+
+    ``stop_stage`` (trace-time static) truncates the computation after the
+    named phase and returns that phase's live boundary values — the
+    profiler's instrumented mode jits each cumulative prefix and times it
+    standalone; ``None`` (the default, and the last prefix) is the normal
+    fused layer, so instrumentation shares every op with production."""
     e_cfg = cfg.moe
     ep, e = comm.ep, cfg.moe.num_experts
     n_slots = rep.slot_owner.shape[0]    # physical weight slots (>= E)
@@ -404,107 +410,128 @@ def _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, rep,
     k = e_cfg.top_k
 
     # ① routing + metadata (the lightweight "S" collection) ---------------
-    gates, eidx, probs = _route(p["router"], x_t, e_cfg)
-    flat_e = eidx.reshape(t * k)
-    # deterministic round-robin token split over each expert's replicas
-    # (valid assignments only — padding pins to the primary)
-    val_flat = jnp.repeat(val_t.astype(bool), k)
-    flat_p, secondary = _split_assignments(rep, flat_e, val_flat)
-    # counts are valid-weighted so the LB gate, IB_d, the AIMD update and
-    # the dispatch packing all see only real tokens — chunk-bucket padding
-    # neither moves the policy nor claims expert capacity
-    w_val = jnp.repeat(val_t.astype(F32), k)
-    w_vis = jnp.repeat((mod_t & val_t).astype(F32), k)
-    counts_stat = jnp.bincount(flat_e, weights=w_val, length=e)
-    vis_local = jnp.bincount(flat_e, weights=w_vis, length=e)
-    counts_global = comm.psum_model(counts_stat)              # [E] logical
-    vis_global = comm.psum_model(vis_local)
-    # per-physical-slot *post-split* loads: the policy, the packing and
-    # the diagnostics all observe the replica-balanced topology
-    slot_stat = jnp.bincount(flat_p, weights=w_val, length=n_slots)
-    slot_load = comm.psum_model(slot_stat)                    # [S] physical
-    slot_vis = comm.psum_model(
-        jnp.bincount(flat_p, weights=w_vis, length=n_slots))
-    load_d = slot_load.reshape(pol_ep, s_pol).sum(-1)
-    vis_d = slot_vis.reshape(pol_ep, s_pol).sum(-1)
-    split = comm.psum_model(jnp.sum(secondary.astype(F32) * w_val))
+    with jax.named_scope("route"):
+        gates, eidx, probs = _route(p["router"], x_t, e_cfg)
+        flat_e = eidx.reshape(t * k)
+        # deterministic round-robin token split over each expert's replicas
+        # (valid assignments only — padding pins to the primary)
+        val_flat = jnp.repeat(val_t.astype(bool), k)
+        flat_p, secondary = _split_assignments(rep, flat_e, val_flat)
+        # counts are valid-weighted so the LB gate, IB_d, the AIMD update
+        # and the dispatch packing all see only real tokens — chunk-bucket
+        # padding neither moves the policy nor claims expert capacity
+        w_val = jnp.repeat(val_t.astype(F32), k)
+        w_vis = jnp.repeat((mod_t & val_t).astype(F32), k)
+        counts_stat = jnp.bincount(flat_e, weights=w_val, length=e)
+        vis_local = jnp.bincount(flat_e, weights=w_vis, length=e)
+        counts_global = comm.psum_model(counts_stat)          # [E] logical
+        vis_global = comm.psum_model(vis_local)
+        # per-physical-slot *post-split* loads: the policy, the packing and
+        # the diagnostics all observe the replica-balanced topology
+        slot_stat = jnp.bincount(flat_p, weights=w_val, length=n_slots)
+        slot_load = comm.psum_model(slot_stat)                # [S] physical
+        slot_vis = comm.psum_model(
+            jnp.bincount(flat_p, weights=w_vis, length=n_slots))
+        load_d = slot_load.reshape(pol_ep, s_pol).sum(-1)
+        vis_d = slot_vis.reshape(pol_ep, s_pol).sum(-1)
+        split = comm.psum_model(jnp.sum(secondary.astype(F32) * w_val))
 
-    # ② modality-aware LB scheduling (AIMD policy) -------------------------
-    dec = realb_policy(load_d, vis_d, m_vec, rcfg)
-    if ep == pol_ep:
-        use_fp4_rank = dec.use_fp4[comm.my_rank]
-    else:   # virtual policy topology on one physical rank: compress if any
-        use_fp4_rank = jnp.any(dec.use_fp4)
-    use_fp4_me = jnp.asarray(False) if train else use_fp4_rank
+        # ② modality-aware LB scheduling (AIMD policy) ---------------------
+        dec = realb_policy(load_d, vis_d, m_vec, rcfg)
+        if ep == pol_ep:
+            use_fp4_rank = dec.use_fp4[comm.my_rank]
+        else:  # virtual policy topology on one physical rank: any -> all
+            use_fp4_rank = jnp.any(dec.use_fp4)
+        use_fp4_me = jnp.asarray(False) if train else use_fp4_rank
+    if stop_stage == "route":
+        return gates, flat_p, dec.m_new, load_d, use_fp4_me
 
-    w = _gather_weights(p, comm)
+    with jax.named_scope("weight_gather"):
+        w = _gather_weights(p, comm)
+    if stop_stage == "weight_gather":
+        return gates, flat_p, dec.m_new, use_fp4_me, w
 
     # ③ conditional on-the-fly quantization (overlaps with a2a below) ------
     wq = None
     if not train and rcfg.overlap:
-        wq = _quantize_experts(w, use_fp4_me, rcfg, None)
+        with jax.named_scope("quantize_fp4"):
+            wq = _quantize_experts(w, use_fp4_me, rcfg, None)
+    if stop_stage == "quantize_fp4":
+        # under ReaLB-seq / train the transformation has not run here —
+        # its cost lands inside the dispatch prefix instead
+        return gates, flat_p, dec.m_new, use_fp4_me, w if wq is None else wq
 
     # dispatch --------------------------------------------------------------
     # padding tokens are sorted to the back and never claim a capacity
     # slot, so they cannot crowd real tokens out of the per-rank cap (the
     # cap itself is provisioned from the static t, which over- rather than
     # under-provisions when chunks underfill the bucket)
-    dest = flat_p // s_loc
-    valid_flat = val_flat
-    order = jnp.argsort(jnp.where(valid_flat, dest, ep), stable=True)
-    dest_s = dest[order]
-    valid_s = valid_flat[order]
-    send_counts = slot_stat.reshape(ep, s_loc).sum(-1) \
-        .astype(jnp.int32)                                     # [ep] valid
-    offsets = jnp.cumsum(send_counts) - send_counts
-    pos_in_rank = jnp.arange(t * k, dtype=jnp.int32) - offsets[dest_s]
-    cap = max(8, -(-math.ceil(t * k / ep * e_cfg.capacity_factor) // 8) * 8)
-    big = ep * cap + 7                       # OOB -> dropped (mode="drop")
-    slot_s = jnp.where(valid_s & (pos_in_rank < cap),
-                       dest_s * cap + pos_in_rank, big)
+    with jax.named_scope("dispatch"):
+        dest = flat_p // s_loc
+        valid_flat = val_flat
+        order = jnp.argsort(jnp.where(valid_flat, dest, ep), stable=True)
+        dest_s = dest[order]
+        valid_s = valid_flat[order]
+        send_counts = slot_stat.reshape(ep, s_loc).sum(-1) \
+            .astype(jnp.int32)                                 # [ep] valid
+        offsets = jnp.cumsum(send_counts) - send_counts
+        pos_in_rank = jnp.arange(t * k, dtype=jnp.int32) - offsets[dest_s]
+        cap = max(8, -(-math.ceil(t * k / ep * e_cfg.capacity_factor)
+                       // 8) * 8)
+        big = ep * cap + 7                   # OOB -> dropped (mode="drop")
+        slot_s = jnp.where(valid_s & (pos_in_rank < cap),
+                           dest_s * cap + pos_in_rank, big)
 
-    tok_idx_s = (order // k).astype(jnp.int32)
-    vals_s = jnp.take(x_t, tok_idx_s, axis=0)
-    leid_s = (flat_p % s_loc)[order]
-    send = jnp.zeros((ep * cap, d), x_t.dtype).at[slot_s].set(
-        vals_s, mode="drop")
-    eid_send = jnp.full((ep * cap,), s_loc, jnp.int32).at[slot_s].set(
-        leid_s, mode="drop")
-    slot_flat = jnp.full((t * k,), big, jnp.int32).at[order].set(
-        slot_s.astype(jnp.int32))
+        tok_idx_s = (order // k).astype(jnp.int32)
+        vals_s = jnp.take(x_t, tok_idx_s, axis=0)
+        leid_s = (flat_p % s_loc)[order]
+        send = jnp.zeros((ep * cap, d), x_t.dtype).at[slot_s].set(
+            vals_s, mode="drop")
+        eid_send = jnp.full((ep * cap,), s_loc, jnp.int32).at[slot_s].set(
+            leid_s, mode="drop")
+        slot_flat = jnp.full((t * k,), big, jnp.int32).at[order].set(
+            slot_s.astype(jnp.int32))
 
-    recv = comm.a2a(send.reshape(ep, cap, d)).reshape(ep * cap, d)
-    eid_recv = comm.a2a(eid_send.reshape(ep, cap)).reshape(ep * cap)
+        recv = comm.a2a(send.reshape(ep, cap, d)).reshape(ep * cap, d)
+        eid_recv = comm.a2a(eid_send.reshape(ep, cap)).reshape(ep * cap)
 
     if not train and wq is None:   # ReaLB-seq: serialise T after dispatch
-        token = (recv.sum() * 0.0).astype(F32)
-        wq = _quantize_experts(w, use_fp4_me, rcfg, token)
+        with jax.named_scope("quantize_fp4"):
+            token = (recv.sum() * 0.0).astype(F32)
+            wq = _quantize_experts(w, use_fp4_me, rcfg, token)
+    if stop_stage == "dispatch":
+        return gates, dec.m_new, recv, eid_recv, slot_flat
 
     # ④ balanced local expert compute ---------------------------------------
-    order2 = jnp.argsort(eid_recv, stable=True)
-    xs = jnp.take(recv, order2, axis=0)
-    gs = jnp.bincount(eid_recv, length=s_loc + 1).astype(jnp.int32)
-    pad_row = lambda a: jnp.concatenate([a, a[:1]], axis=0)
-    w_pad = {n: pad_row(v) for n, v in w.items()}
-    if train:
-        ys = _grouped_ffn(xs, gs, w_pad["w_gate"], w_pad["w_up"],
-                          w_pad["w_down"], act)
-    else:
-        wq_pad = {n: quant.QTensor(pad_row(v.packed), pad_row(v.scales),
-                                   v.global_scale) for n, v in wq.items()}
-        ys = jax.lax.cond(
-            use_fp4_me,
-            lambda o: _grouped_ffn_fp4(o[0], gs, o[2], rcfg, act),
-            lambda o: _grouped_ffn(o[0], gs, o[1]["w_gate"], o[1]["w_up"],
-                                   o[1]["w_down"], act),
-            (xs, w_pad, wq_pad))
-    y_buf = jnp.zeros_like(ys).at[order2].set(ys)
+    with jax.named_scope("expert_gemm"):
+        order2 = jnp.argsort(eid_recv, stable=True)
+        xs = jnp.take(recv, order2, axis=0)
+        gs = jnp.bincount(eid_recv, length=s_loc + 1).astype(jnp.int32)
+        pad_row = lambda a: jnp.concatenate([a, a[:1]], axis=0)
+        w_pad = {n: pad_row(v) for n, v in w.items()}
+        if train:
+            ys = _grouped_ffn(xs, gs, w_pad["w_gate"], w_pad["w_up"],
+                              w_pad["w_down"], act)
+        else:
+            wq_pad = {n: quant.QTensor(pad_row(v.packed), pad_row(v.scales),
+                                       v.global_scale)
+                      for n, v in wq.items()}
+            ys = jax.lax.cond(
+                use_fp4_me,
+                lambda o: _grouped_ffn_fp4(o[0], gs, o[2], rcfg, act),
+                lambda o: _grouped_ffn(o[0], gs, o[1]["w_gate"],
+                                       o[1]["w_up"], o[1]["w_down"], act),
+                (xs, w_pad, wq_pad))
+        y_buf = jnp.zeros_like(ys).at[order2].set(ys)
+    if stop_stage == "expert_gemm":
+        return gates, dec.m_new, y_buf, slot_flat
 
-    ret = comm.a2a(y_buf.reshape(ep, cap, d)).reshape(ep * cap, d)
-    y_flat = jnp.take(ret, slot_flat, axis=0, mode="fill", fill_value=0)
-    y_flat = jnp.where((slot_flat < big)[:, None], y_flat, 0)
-    out = jnp.sum(y_flat.reshape(t, k, d)
-                  * gates[..., None].astype(y_flat.dtype), axis=1)
+    with jax.named_scope("combine"):
+        ret = comm.a2a(y_buf.reshape(ep, cap, d)).reshape(ep * cap, d)
+        y_flat = jnp.take(ret, slot_flat, axis=0, mode="fill", fill_value=0)
+        y_flat = jnp.where((slot_flat < big)[:, None], y_flat, 0)
+        out = jnp.sum(y_flat.reshape(t, k, d)
+                      * gates[..., None].astype(y_flat.dtype), axis=1)
 
     # diagnostics ------------------------------------------------------------
     total = jnp.sum(load_d)
@@ -527,8 +554,11 @@ def _moe_dispatch(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, rep,
 # broadcast path (decode)
 # --------------------------------------------------------------------------
 def _moe_broadcast(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, rep,
-                   pol_ep):
-    """Decode-regime MoE: tokens replicated over the EP axis."""
+                   pol_ep, stop_stage=None):
+    """Decode-regime MoE: tokens replicated over the EP axis.
+
+    ``stop_stage`` — see :func:`_moe_dispatch`; the broadcast path has no
+    a2a, so its prefix vocabulary skips ``dispatch``."""
     e_cfg = cfg.moe
     ep, e = comm.ep, e_cfg.num_experts
     n_slots = rep.slot_owner.shape[0]
@@ -537,63 +567,80 @@ def _moe_broadcast(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, rep,
     t = x_t.shape[0]
     k = e_cfg.top_k
 
-    gates, eidx, probs = _route(p["router"], x_t, e_cfg)
-    flat_e = eidx.reshape(t * k)
-    # every rank sees the full (replicated) token set, so the round-robin
-    # counter is identical on all ranks: each assignment has exactly one
-    # computing replica and the psum combine never double-counts
-    flat_p, secondary = _split_assignments(
-        rep, flat_e, jnp.repeat(val_t.astype(bool), k))
-    # valid-weighted: dummy decode rows (inactive slots) don't count
-    w_val = jnp.repeat(val_t.astype(F32), k)
-    w_vis = jnp.repeat((mod_t & val_t).astype(F32), k)
-    counts = jnp.bincount(flat_e, weights=w_val, length=e)     # row totals
-    vis = jnp.bincount(flat_e, weights=w_vis, length=e)
-    slot_load = jnp.bincount(flat_p, weights=w_val, length=n_slots)
-    slot_vis = jnp.bincount(flat_p, weights=w_vis, length=n_slots)
-    load_d = slot_load.reshape(pol_ep, s_pol).sum(-1)
-    vis_d = slot_vis.reshape(pol_ep, s_pol).sum(-1)
-    split = jnp.sum(secondary.astype(F32) * w_val)
-    dec = realb_policy(load_d, vis_d, m_vec, rcfg)
-    if ep == pol_ep:
-        use_fp4_me = dec.use_fp4[comm.my_rank]
-    else:
-        use_fp4_me = jnp.any(dec.use_fp4)
+    with jax.named_scope("route"):
+        gates, eidx, probs = _route(p["router"], x_t, e_cfg)
+        flat_e = eidx.reshape(t * k)
+        # every rank sees the full (replicated) token set, so the
+        # round-robin counter is identical on all ranks: each assignment
+        # has exactly one computing replica and the psum combine never
+        # double-counts
+        flat_p, secondary = _split_assignments(
+            rep, flat_e, jnp.repeat(val_t.astype(bool), k))
+        # valid-weighted: dummy decode rows (inactive slots) don't count
+        w_val = jnp.repeat(val_t.astype(F32), k)
+        w_vis = jnp.repeat((mod_t & val_t).astype(F32), k)
+        counts = jnp.bincount(flat_e, weights=w_val, length=e)  # row totals
+        vis = jnp.bincount(flat_e, weights=w_vis, length=e)
+        slot_load = jnp.bincount(flat_p, weights=w_val, length=n_slots)
+        slot_vis = jnp.bincount(flat_p, weights=w_vis, length=n_slots)
+        load_d = slot_load.reshape(pol_ep, s_pol).sum(-1)
+        vis_d = slot_vis.reshape(pol_ep, s_pol).sum(-1)
+        split = jnp.sum(secondary.astype(F32) * w_val)
+        dec = realb_policy(load_d, vis_d, m_vec, rcfg)
+        if ep == pol_ep:
+            use_fp4_me = dec.use_fp4[comm.my_rank]
+        else:
+            use_fp4_me = jnp.any(dec.use_fp4)
+    if stop_stage == "route":
+        return gates, flat_p, dec.m_new, load_d, use_fp4_me
 
-    w = _gather_weights(p, comm)
-    wq = _quantize_experts(w, use_fp4_me, rcfg, None)
+    with jax.named_scope("weight_gather"):
+        w = _gather_weights(p, comm)
+    if stop_stage == "weight_gather":
+        return gates, flat_p, dec.m_new, use_fp4_me, w
 
-    pidx = flat_p.reshape(t, k)                                # [t,K] placed
-    sel = (pidx // s_loc) == comm.my_rank                      # [t,K]
-    local_gate = jnp.where(sel, gates, 0.0)
-    leid = pidx % s_loc
+    with jax.named_scope("quantize_fp4"):
+        wq = _quantize_experts(w, use_fp4_me, rcfg, None)
+    if stop_stage == "quantize_fp4":
+        return gates, flat_p, dec.m_new, use_fp4_me, wq
 
-    def per_expert(x_all, wg, wu, wd):
-        g = jnp.einsum("td,edf->etf", x_all, wg.astype(x_all.dtype))
-        u = jnp.einsum("td,edf->etf", x_all, wu.astype(x_all.dtype))
-        h = act(g.astype(F32)).astype(x_all.dtype) * u
-        return jnp.einsum("etf,efd->etd", h, wd.astype(x_all.dtype))
+    with jax.named_scope("expert_gemm"):
+        pidx = flat_p.reshape(t, k)                            # [t,K] placed
+        sel = (pidx // s_loc) == comm.my_rank                  # [t,K]
+        local_gate = jnp.where(sel, gates, 0.0)
+        leid = pidx % s_loc
 
-    def bf16_branch(o):
-        x_, w_, _ = o
-        return per_expert(x_, w_["w_gate"], w_["w_up"], w_["w_down"])
+        def per_expert(x_all, wg, wu, wd):
+            g = jnp.einsum("td,edf->etf", x_all, wg.astype(x_all.dtype))
+            u = jnp.einsum("td,edf->etf", x_all, wu.astype(x_all.dtype))
+            h = act(g.astype(F32)).astype(x_all.dtype) * u
+            return jnp.einsum("etf,efd->etd", h, wd.astype(x_all.dtype))
 
-    def fp4_branch(o):
-        x_, _, wq_ = o
-        xq = quant.fp4_sim(x_, rcfg.group_size)
-        wd = {n: _dq_t(q, x_.dtype) for n, q in wq_.items()}
-        g = jnp.einsum("td,edf->etf", xq, wd["w_gate"])
-        u = jnp.einsum("td,edf->etf", xq, wd["w_up"])
-        h = act(g.astype(F32)).astype(x_.dtype) * u
-        hq = quant.fp4_sim(h, rcfg.group_size)
-        return jnp.einsum("etf,efd->etd", hq, wd["w_down"])
+        def bf16_branch(o):
+            x_, w_, _ = o
+            return per_expert(x_, w_["w_gate"], w_["w_up"], w_["w_down"])
 
-    y_e = jax.lax.cond(use_fp4_me, fp4_branch, bf16_branch, (x_t, w, wq))
+        def fp4_branch(o):
+            x_, _, wq_ = o
+            xq = quant.fp4_sim(x_, rcfg.group_size)
+            wd = {n: _dq_t(q, x_.dtype) for n, q in wq_.items()}
+            g = jnp.einsum("td,edf->etf", xq, wd["w_gate"])
+            u = jnp.einsum("td,edf->etf", xq, wd["w_up"])
+            h = act(g.astype(F32)).astype(x_.dtype) * u
+            hq = quant.fp4_sim(h, rcfg.group_size)
+            return jnp.einsum("etf,efd->etd", hq, wd["w_down"])
 
-    onehot = jax.nn.one_hot(leid, s_loc, dtype=y_e.dtype)      # [t,K,s_loc]
-    weight_e = jnp.einsum("tk,tke->te", local_gate.astype(y_e.dtype), onehot)
-    y_partial = jnp.einsum("te,etd->td", weight_e, y_e)
-    out = comm.psum_model(y_partial)
+        y_e = jax.lax.cond(use_fp4_me, fp4_branch, bf16_branch,
+                           (x_t, w, wq))
+    if stop_stage == "expert_gemm":
+        return gates, dec.m_new, y_e, leid
+
+    with jax.named_scope("combine"):
+        onehot = jax.nn.one_hot(leid, s_loc, dtype=y_e.dtype)  # [t,K,s_loc]
+        weight_e = jnp.einsum("tk,tke->te", local_gate.astype(y_e.dtype),
+                              onehot)
+        y_partial = jnp.einsum("te,etd->td", weight_e, y_e)
+        out = comm.psum_model(y_partial)
 
     total = jnp.sum(load_d)
     aux = _aux_losses(probs, counts, total / max(k, 1), e_cfg, lambda v: v)
@@ -651,7 +698,8 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
                    mode: str = "dispatch", train: bool = False,
                    fsdp: bool = False,
                    valid: Optional[jax.Array] = None,
-                   placement: Optional[Placement] = None):
+                   placement: Optional[Placement] = None,
+                   stop_stage: Optional[str] = None):
     """MoE layer with ReaLB.  x [B,S,D]; m_state [groups, ep] (see
     :func:`moe_state_shape`); valid [B,S] marks real tokens (None = all) —
     padding still computes but is excluded from the routing stats the
@@ -662,7 +710,13 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
     round-robin token splitting.  The expert weight arrays in ``p`` must
     be stored in the matching *placed* physical-slot order (``[S, ...]``
     with ``S >= num_experts`` under replication).
-    Returns (y, new_m_state, aux_dict)."""
+    Returns (y, new_m_state, aux_dict).
+
+    ``stop_stage`` (instrumented profiling, local path only): truncate
+    after the named phase (``route`` / ``weight_gather`` /
+    ``quantize_fp4`` / ``dispatch`` / ``expert_gemm``) and return that
+    prefix's raw boundary values instead — see
+    :func:`repro.obs.profiler.time_moe_phases`."""
     mesh = current_mesh()
     if modality is None:
         modality = jnp.zeros(x.shape[:2], jnp.bool_)
@@ -685,13 +739,21 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
         comm = _local_comm()
         b, s, d = x.shape
         act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
-        fn = _moe_broadcast if mode == "broadcast" else partial(
-            _moe_dispatch, train=train)
-        y, m_new, aux = fn(x.reshape(b * s, d), modality.reshape(b * s),
-                           valid.reshape(b * s), p, m_state.reshape(-1),
-                           cfg, rcfg, comm, act, rep, pol_ep)
+        fn = partial(_moe_broadcast, stop_stage=stop_stage) \
+            if mode == "broadcast" else partial(
+                _moe_dispatch, train=train, stop_stage=stop_stage)
+        out = fn(x.reshape(b * s, d), modality.reshape(b * s),
+                 valid.reshape(b * s), p, m_state.reshape(-1),
+                 cfg, rcfg, comm, act, rep, pol_ep)
+        if stop_stage is not None:       # instrumented prefix: raw boundary
+            return out
+        y, m_new, aux = out
         return (y.reshape(b, s, d), m_new.reshape(m_state.shape), aux)
 
+    if stop_stage is not None:
+        raise NotImplementedError(
+            "stop_stage instrumentation is local-path only; profile real "
+            "meshes with serve_bench --xprof-out (jax.profiler capture)")
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     ep = sizes["model"]
     row_axes = tuple(a for a in mesh.axis_names if a != "model")

@@ -19,8 +19,8 @@ from __future__ import annotations
 import re
 from typing import Dict, List, Optional, Tuple
 
-PEAK_FLOPS = 197e12          # bf16 / chip
-HBM_BW = 819e9               # B/s / chip
+from repro.configs.hw import HBM_BW, PEAK_FLOPS  # single-sourced (v5e)
+
 ICI_BW = 50e9                # B/s / link (assignment constant)
 
 def roofline_terms(flops_per_dev: float, bytes_per_dev: float,

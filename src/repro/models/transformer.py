@@ -290,78 +290,91 @@ def apply_layer(lp: Tree, x: jax.Array, cfg: ModelConfig, rcfg: ReaLBConfig,
     with_cache = mode in ("prefill", "decode", "chunk")
 
     # ---- token mixer ----
-    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
-    if mix in ("attn", "dec"):
-        if mode == "chunk":
-            # cached multi-token prefill continuation (plain GQA/MQA only;
-            # callers gate on cfg — see chunk_forward)
-            o, kv = attn.gqa_chunk(lp["attn"], h,
-                                   {"k": cache_in["k"], "v": cache_in["v"]},
-                                   cfg, positions=positions,
-                                   chunk_len=chunk_len)
-        elif cfg.mla is not None:
-            if decode:
-                o, kv = attn.mla_decode(lp["attn"], h, cache_in, cfg, pos=pos)
+    # named_scope = profiler phase vocabulary (metadata only, no data
+    # deps): "attention" covers every mixer flavor, "moe"/"ffn" the block
+    # below — the xprof timeline groups ops accordingly
+    with jax.named_scope("attention"):
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        if mix in ("attn", "dec"):
+            if mode == "chunk":
+                # cached multi-token prefill continuation (plain GQA/MQA
+                # only; callers gate on cfg — see chunk_forward)
+                o, kv = attn.gqa_chunk(lp["attn"], h,
+                                       {"k": cache_in["k"],
+                                        "v": cache_in["v"]},
+                                       cfg, positions=positions,
+                                       chunk_len=chunk_len)
+            elif cfg.mla is not None:
+                if decode:
+                    o, kv = attn.mla_decode(lp["attn"], h, cache_in, cfg,
+                                            pos=pos)
+                else:
+                    o, kv = attn.mla_forward(lp["attn"], h, cfg,
+                                             positions=positions)
+                    if mode == "prefill":
+                        kv = {k: _pad_kv(v, cache_len)
+                              for k, v in kv.items()}
             else:
-                o, kv = attn.mla_forward(lp["attn"], h, cfg,
-                                         positions=positions)
-                if mode == "prefill":
-                    kv = {k: _pad_kv(v, cache_len) for k, v in kv.items()}
-        else:
+                if decode:
+                    o, kv = attn.gqa_decode(lp["attn"], h,
+                                            {"k": cache_in["k"],
+                                             "v": cache_in["v"]}, cfg,
+                                            pos=pos)
+                else:
+                    causal = not (cfg.is_encdec and mode == "encode")
+                    o, kv = attn.gqa_forward(lp["attn"], h, cfg,
+                                             positions=positions,
+                                             causal=causal)
+                    if mode == "prefill":
+                        kv = {k: _pad_kv(v, cache_len)
+                              for k, v in kv.items()}
+            if with_cache and mix in ("attn", "dec"):
+                cache_out.update(kv)
+            if mode == "train":
+                o = jax.ad_checkpoint.checkpoint_name(o, "attn_out")
+            x = x + o
+        elif mix == "ssm":
             if decode:
-                o, kv = attn.gqa_decode(lp["attn"], h,
-                                        {"k": cache_in["k"],
-                                         "v": cache_in["v"]}, cfg, pos=pos)
+                o, st = ssm_mod.ssm_decode(lp["ssm"], h,
+                                           {"conv": cache_in["conv"],
+                                            "ssm": cache_in["ssm"]}, cfg)
             else:
-                causal = not (cfg.is_encdec and mode == "encode")
-                o, kv = attn.gqa_forward(lp["attn"], h, cfg,
-                                         positions=positions, causal=causal)
-                if mode == "prefill":
-                    kv = {k: _pad_kv(v, cache_len) for k, v in kv.items()}
-        if with_cache and mix in ("attn", "dec"):
-            cache_out.update(kv)
-        if mode == "train":
-            o = jax.ad_checkpoint.checkpoint_name(o, "attn_out")
-        x = x + o
-    elif mix == "ssm":
-        if decode:
-            o, st = ssm_mod.ssm_decode(lp["ssm"], h,
-                                       {"conv": cache_in["conv"],
-                                        "ssm": cache_in["ssm"]}, cfg)
-        else:
-            o, st = ssm_mod.ssm_forward(lp["ssm"], h, cfg)
-        if mode in ("prefill", "decode"):
-            cache_out.update(st)
-        x = x + o
-    if mix in ("cross", "dec"):
-        key = "cross"
-        hn = rms_norm(x, lp.get("norm_cross", lp["norm1"]), cfg.norm_eps)
-        if decode:
-            o, xkv = attn.cross_decode(lp[key], hn,
-                                       {"k": cache_in["xk"],
-                                        "v": cache_in["xv"]}, cfg)
-            xkv = {"xk": xkv["k"], "xv": xkv["v"]}
-        else:
-            o, kv2 = attn.cross_forward(lp[key], hn, memory, cfg)
-            xkv = {"xk": kv2["k"], "xv": kv2["v"]}
-        if mode in ("prefill", "decode"):
-            cache_out.update(xkv)
-        x = x + o
+                o, st = ssm_mod.ssm_forward(lp["ssm"], h, cfg)
+            if mode in ("prefill", "decode"):
+                cache_out.update(st)
+            x = x + o
+        if mix in ("cross", "dec"):
+            key = "cross"
+            hn = rms_norm(x, lp.get("norm_cross", lp["norm1"]),
+                          cfg.norm_eps)
+            if decode:
+                o, xkv = attn.cross_decode(lp[key], hn,
+                                           {"k": cache_in["xk"],
+                                            "v": cache_in["xv"]}, cfg)
+                xkv = {"xk": xkv["k"], "xv": xkv["v"]}
+            else:
+                o, kv2 = attn.cross_forward(lp[key], hn, memory, cfg)
+                xkv = {"xk": kv2["k"], "xv": kv2["v"]}
+            if mode in ("prefill", "decode"):
+                cache_out.update(xkv)
+            x = x + o
 
     # ---- ffn / moe ----
     if ffn == "dense" and "ffn" in lp:
-        h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
-        x = x + ffn_mod.ffn_forward(lp["ffn"], h2, cfg)
+        with jax.named_scope("ffn"):
+            h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+            x = x + ffn_mod.ffn_forward(lp["ffn"], h2, cfg)
     elif ffn == "moe":
-        h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
-        y, m_state, moe_aux = ep_moe.ep_moe_forward(
-            lp["moe"], h2, cfg, rcfg, m_state, modality,
-            mode="broadcast" if decode else "dispatch",
-            train=(mode == "train"), fsdp=fsdp, valid=valid,
-            placement=placement)
-        if "shared" in lp:
-            y = y + ffn_mod.ffn_forward(lp["shared"], h2, cfg)
-        x = x + y
+        with jax.named_scope("moe"):
+            h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+            y, m_state, moe_aux = ep_moe.ep_moe_forward(
+                lp["moe"], h2, cfg, rcfg, m_state, modality,
+                mode="broadcast" if decode else "dispatch",
+                train=(mode == "train"), fsdp=fsdp, valid=valid,
+                placement=placement)
+            if "shared" in lp:
+                y = y + ffn_mod.ffn_forward(lp["shared"], h2, cfg)
+            x = x + y
         aux = {k: moe_aux[k].astype(jnp.float32) for k in AUX_KEYS}
         stats = jnp.stack([
             jnp.broadcast_to(moe_aux["load_d"].reshape(-1),

@@ -15,15 +15,26 @@ Three cooperating pieces, all host-side and dependency-light:
   ``ReplanDiscipline`` verdict (cadence, warmup, min-gain, churn
   budget, cost gate, must-plan) as one structured event, queryable
   after a run.
+- :mod:`repro.obs.ledger` / :mod:`repro.obs.profiler` — the hot-loop
+  FLOP/byte ledger (exact per-layer per-rank flops and HBM/ICI bytes
+  from the realized routing stats) and the per-phase profiler feeding
+  ``mfu`` / ``roofline_fraction`` / costmodel-drift gauges into the
+  registry; disabled profiling is the same no-op-singleton discipline
+  as the tracer.
 """
 from repro.obs.audit import ReplanAudit
+from repro.obs.ledger import PHASES, FlopByteLedger, IterLedger
 from repro.obs.metrics import (Counter, Gauge, HeatmapRecorder, Histogram,
                                MetricsRegistry, PredictionTracker)
+from repro.obs.profiler import (MOE_STAGES, NULL_PROFILER, NullProfiler,
+                                Profiler, time_moe_phases)
 from repro.obs.trace import (NULL_TRACER, NullTracer, Tracer,
                              validate_chrome_trace)
 
 __all__ = [
-    "Counter", "Gauge", "HeatmapRecorder", "Histogram", "MetricsRegistry",
-    "NULL_TRACER", "NullTracer", "PredictionTracker", "ReplanAudit",
-    "Tracer", "validate_chrome_trace",
+    "Counter", "FlopByteLedger", "Gauge", "HeatmapRecorder", "Histogram",
+    "IterLedger", "MetricsRegistry", "MOE_STAGES", "NULL_PROFILER",
+    "NULL_TRACER", "NullProfiler", "NullTracer", "PHASES",
+    "PredictionTracker", "Profiler", "ReplanAudit", "Tracer",
+    "time_moe_phases", "validate_chrome_trace",
 ]

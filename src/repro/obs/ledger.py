@@ -1,0 +1,233 @@
+"""FLOP/byte ledger — exact per-iteration accounting of the MoE hot loop.
+
+The ledger turns the *realized* routing statistics already threaded
+through the layer scan (``aux["moe_stats"]``: per-layer per-rank routed
+assignment counts, plus the ``fp4_ranks`` policy scalar) into exact
+arithmetic/byte counts and analytic per-phase seconds:
+
+- **flops** per phase: router GEMM (``route``), grouped expert GEMM
+  (``expert_gemm``, counted at the precision each rank actually ran —
+  BF16 vs FP4-at-the-int8-MXU-rate), and the dense remainder of the
+  model (``other``: attention, dense FFN, embeddings, norms).
+- **HBM bytes** per phase: expert weight streaming (4.25-bit FP4 packs
+  vs 2-byte BF16), activation traffic, the BF16→FP4 transformation's
+  read+write traffic on compressed ranks, and dense weight streaming.
+- **ICI bytes**: the dispatch and combine all-to-alls over the (virtual)
+  EP group.
+- **predicted seconds** per phase, mirroring ``benchmarks/costmodel.py``
+  formula-for-formula (``expert_gemm_time`` / ``quantize_time`` /
+  ``dispatch_time`` / ``nongemm_time``) from the same single-sourced
+  hardware constants (:mod:`repro.configs.hw`), so the profiler's
+  drift detector compares measured time against exactly the model the
+  replan cost gates price migrations with.  The ledger re-implements
+  rather than imports them because ``src/repro`` cannot depend on
+  ``benchmarks/``; ``tests/test_profiler.py`` pins the numeric match.
+
+Approximation (documented, deliberate): the policy aux exposes how
+*many* ranks ran FP4 per layer, not which — the ledger attributes FP4 to
+the most-loaded ranks of each layer, faithful to ReaLB's
+compress-the-hot-ranks policy.
+
+``model_flops`` (the MFU numerator) is the standard useful-work count
+``2 · active_param_count · routed_tokens`` — padding computed by the
+hardware does not earn utilization.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.hw import HBM_BW, PEAK_BF16, PEAK_INT8
+
+# mirrored from benchmarks/costmodel.py (pinned equal by test_profiler)
+FIXED_US = 12.0               # dispatch/kernel fixed overhead per stage
+BYTES_BF16 = 2.0
+BYTES_FP4 = 0.53125           # 4 bits + e4m3 scale per 16-group = 4.25 b
+
+#: phase vocabulary — matches the ``jax.named_scope`` annotations in
+#: ``core/ep_moe.py`` plus the non-MoE remainder of the forward.
+PHASES = ("route", "weight_gather", "quantize_fp4", "dispatch",
+          "expert_gemm", "combine", "other")
+
+
+def _zero_phases() -> Dict[str, float]:
+    return {ph: 0.0 for ph in PHASES}
+
+
+@dataclasses.dataclass
+class IterLedger:
+    """One iteration's accounting: flops / bytes / predicted seconds."""
+    tokens: float                       # routed (non-pad) tokens
+    batch_tokens: float                 # padded batch size the step ran at
+    flops: Dict[str, float]             # per phase
+    flops_by_rate: Dict[str, float]     # {"bf16": ..., "int8": ...} GEMM split
+    hbm_bytes: Dict[str, float]         # per phase
+    ici_bytes: Dict[str, float]         # per phase (dispatch/combine only)
+    pred_s: Dict[str, float]            # analytic per-phase seconds
+    model_flops: float                  # MFU numerator
+
+    @property
+    def flops_total(self) -> float:
+        return sum(self.flops.values())
+
+    @property
+    def hbm_total(self) -> float:
+        return sum(self.hbm_bytes.values())
+
+    @property
+    def ici_total(self) -> float:
+        return sum(self.ici_bytes.values())
+
+    @property
+    def pred_total(self) -> float:
+        return sum(self.pred_s.values())
+
+
+class FlopByteLedger:
+    """Per-iteration FLOP/byte accounting for one model config.
+
+    ``ep`` is the *policy* EP width (the virtual group dispatch packs
+    for), matching the geometry the cost gates price — on the virtual
+    single-process bench that is ``vep``, on a real mesh the EP axis
+    size.
+    """
+
+    def __init__(self, cfg, ep: int):
+        if cfg.moe is None:
+            raise ValueError("FlopByteLedger needs an MoE config")
+        self.cfg = cfg
+        self.ep = int(ep)
+        self.d = int(cfg.d_model)
+        self.d_ff = int(cfg.moe.d_ff)
+        self.n_experts = int(cfg.moe.num_experts)
+        self.top_k = int(cfg.moe.top_k)
+        self.e_loc = max(self.n_experts // self.ep, 1)
+        self.mult = 3 if cfg.activation in ("swiglu", "geglu") else 2
+        self.n_moe = sum(1 for k in cfg.ffn_kinds() if k == "moe")
+        self.active_params = float(cfg.active_param_count())
+        # params outside the routed-expert GEMMs and the router: the
+        # "other" phase streams these (attention, dense FFN, shared
+        # experts, embeddings, norms)
+        moe_routed = self.n_moe * self.top_k * self.mult * self.d * self.d_ff
+        router = self.n_moe * self.d * self.n_experts
+        self.other_params = max(self.active_params - moe_routed - router, 0.0)
+
+    # -- costmodel mirrors (same formulas, same hw constants) ------------
+    def _expert_gemm_s(self, tokens_r: float, fp4: bool) -> float:
+        flops = tokens_r * 2.0 * self.mult * self.d * self.d_ff
+        w_bytes = self.e_loc * self.mult * self.d * self.d_ff * (
+            BYTES_FP4 if fp4 else BYTES_BF16)
+        act_bytes = tokens_r * self.d * BYTES_BF16 * 4.0
+        rate = PEAK_INT8 if fp4 else PEAK_BF16
+        return max(flops / rate, (w_bytes + act_bytes) / HBM_BW)
+
+    def _quantize_s(self) -> float:
+        w = self.e_loc * self.mult * self.d * self.d_ff
+        return (w * BYTES_BF16 + w * BYTES_FP4) / HBM_BW
+
+    def _dispatch_s(self, tokens_total: float, ici_bw: float) -> float:
+        per_rank = (tokens_total / self.ep * (self.ep - 1) / self.ep
+                    * self.d * BYTES_BF16)
+        return per_rank / ici_bw + FIXED_US * 1e-6
+
+    def _nongemm_s(self, tokens_r: float) -> float:
+        return (tokens_r * self.d * 6.0) / HBM_BW + 3 * FIXED_US * 1e-6
+
+    # --------------------------------------------------------------------
+    def rank_loads(self, moe_stats) -> np.ndarray:
+        """``[L, ep]`` realized per-layer per-rank assignment counts from
+        the scan's ``aux["moe_stats"]`` (``[L, 2, groups, ep]`` or
+        ``[L, 2, ep]``); the groups axis is averaged (rows are replicas
+        of the same loads in local mode)."""
+        ms = np.asarray(moe_stats, dtype=np.float64)
+        load = ms[:, 0] if ms.ndim >= 3 else ms[None, 0]
+        if load.ndim == 3:                      # [L, groups, ep]
+            load = load.mean(axis=1)
+        return load.reshape(load.shape[0], -1)[:, -self.ep:]
+
+    def account(self, moe_stats, fp4_layers: float, tokens: float,
+                batch_tokens: float, ici_bw: Optional[float] = None
+                ) -> IterLedger:
+        """Account one iteration.
+
+        ``moe_stats``: the scan's ``aux["moe_stats"]``; ``fp4_layers``:
+        mean FP4 rank count per layer (the engine's ``stat.fp4_ranks``);
+        ``tokens``/``batch_tokens``: routed vs padded token counts;
+        ``ici_bw``: optional measured ICI bytes/s (defaults to the
+        migration-bandwidth constant the cost model prices at).
+        """
+        from repro.configs.base import MIGRATION_BW_DEFAULT
+        bw = float(ici_bw) if ici_bw else MIGRATION_BW_DEFAULT
+        load = self.rank_loads(moe_stats)            # [L, ep]
+        n_rows, ep = load.shape
+        tokens = float(tokens)
+        batch_tokens = float(batch_tokens)
+        k_fp4 = int(np.clip(round(float(fp4_layers)), 0, ep))
+
+        flops = _zero_phases()
+        by_rate = {"bf16": 0.0, "int8": 0.0}
+        hbm = _zero_phases()
+        ici = _zero_phases()
+        pred = _zero_phases()
+
+        gemm_per_tok = 2.0 * self.mult * self.d * self.d_ff
+        w_slab = self.e_loc * self.mult * self.d * self.d_ff
+        for l in range(n_rows):
+            row = load[l]
+            # FP4 on the k hottest ranks of this layer (approximation:
+            # the aux scalar says how many, ReaLB's policy says hottest)
+            fp4_mask = np.zeros(ep, dtype=bool)
+            if k_fp4 > 0:
+                fp4_mask[np.argsort(row)[-k_fp4:]] = True
+
+            # route: router GEMM over this layer's local tokens + the
+            # sort/softmax non-gemm traffic
+            flops["route"] += tokens * self.d * self.n_experts * 2.0
+            hbm["route"] += row.sum() * self.d * 6.0
+            pred["route"] += self._nongemm_s(row.max(initial=0.0))
+
+            # weight_gather: a local-FSDP no-op on the virtual bench
+            # (the mesh path's all-gather is charged by the roofline)
+
+            # quantize_fp4: read BF16, write packed, on FP4 ranks only
+            q_bytes = fp4_mask.sum() * w_slab * (BYTES_BF16 + BYTES_FP4)
+            hbm["quantize_fp4"] += q_bytes
+            if k_fp4 > 0:
+                pred["quantize_fp4"] += self._quantize_s()
+
+            # dispatch / combine: a2a of routed activations both ways
+            a2a_rank = (tokens * self.top_k / ep * (ep - 1) / ep
+                        * self.d * BYTES_BF16)
+            ici["dispatch"] += a2a_rank * ep
+            ici["combine"] += a2a_rank * ep
+            pred["dispatch"] += self._dispatch_s(tokens * self.top_k, bw)
+            pred["combine"] += self._dispatch_s(tokens * self.top_k, bw)
+
+            # expert_gemm: per-rank grouped GEMM; wall time is the
+            # straggler rank, flops/bytes sum over ranks
+            for r in range(ep):
+                f = row[r] * gemm_per_tok
+                by_rate["int8" if fp4_mask[r] else "bf16"] += f
+                flops["expert_gemm"] += f
+                hbm["expert_gemm"] += (
+                    w_slab * (BYTES_FP4 if fp4_mask[r] else BYTES_BF16)
+                    + row[r] * self.d * BYTES_BF16 * 4.0)
+            pred["expert_gemm"] += max(
+                self._expert_gemm_s(row[r], bool(fp4_mask[r]))
+                for r in range(ep))
+
+        # other: the dense remainder, roofline-priced
+        flops["other"] = 2.0 * self.other_params * tokens
+        hbm["other"] = (self.other_params * BYTES_BF16
+                        + tokens * self.d * BYTES_BF16 * 8.0)
+        pred["other"] = max(flops["other"] / PEAK_BF16,
+                            hbm["other"] / HBM_BW)
+
+        as_f = lambda d: {k: float(v) for k, v in d.items()}
+        return IterLedger(
+            tokens=tokens, batch_tokens=batch_tokens,
+            flops=as_f(flops), flops_by_rate=as_f(by_rate),
+            hbm_bytes=as_f(hbm), ici_bytes=as_f(ici), pred_s=as_f(pred),
+            model_flops=2.0 * self.active_params * tokens)

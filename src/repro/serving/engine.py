@@ -78,6 +78,7 @@ from repro.configs.base import ModelConfig, ReaLBConfig
 from repro.core import ep_moe
 from repro.models import transformer as tf
 from repro.models.common import current_mesh
+from repro.obs.profiler import NULL_PROFILER
 from repro.obs.trace import NULL_TRACER
 from repro.serving.scheduler import Request, Scheduler
 from repro.serving.telemetry import Telemetry
@@ -133,7 +134,8 @@ class Engine:
                  capacity_margin: Optional[float] = None,
                  migrate_async: bool = False,
                  migrate_bytes_per_iter: Optional[int] = None,
-                 elastic=None, fault_injector=None, tracer=None):
+                 elastic=None, fault_injector=None, tracer=None,
+                 profiler=None):
         self.cfg, self.params, self.rcfg = cfg, params, rcfg
         # span tracer (repro.obs.trace.Tracer); None -> the shared no-op
         # singleton, whose calls record nothing and read no clock — an
@@ -147,6 +149,19 @@ class Engine:
                 placement.tracer = tracer
             if elastic is not None:
                 elastic.tracer = tracer
+        # hot-loop profiler (repro.obs.profiler.Profiler); None -> the
+        # shared no-op singleton under the same discipline as the tracer:
+        # no stats conversion, no clock math, bitwise-identical outputs.
+        self.profiler = NULL_PROFILER if profiler is None else profiler
+        if profiler is not None and placement is not None:
+            # wire the measured/predicted drift EWMA into the replan cost
+            # gate's savings side (same idiom as the manager's bandwidth
+            # auto-wiring): replans are priced at how fast the hardware
+            # actually runs the analytic model's seconds
+            gate = getattr(placement, "cost_gate", None)
+            if gate is not None \
+                    and getattr(gate, "time_scale", False) is None:
+                gate.time_scale = profiler.time_scale
         self.max_slots, self.max_len = max_slots, max_len
         self.temperature = temperature
         self.prefill_budget = prefill_budget
@@ -560,7 +575,8 @@ class Engine:
             self.clock.advance(self.cost_model.cost(batch_tokens))
 
     def _record(self, *, phase: str, n_active: int, tokens: int,
-                batch_tokens: int, aux: Dict[str, Any]):
+                batch_tokens: int, aux: Dict[str, Any],
+                fwd_s: float = 0.0):
         # moe_stats: [n_blocks, 2, groups, ep] stacked (load_d, vis_d) rows
         ms = np.asarray(aux["moe_stats"], np.float64)
         load_sum, vis_sum = float(ms[:, 0].sum()), float(ms[:, 1].sum())
@@ -609,6 +625,13 @@ class Engine:
                         if "slot_stats" in aux else None))
         if self.telemetry is not None:
             self.telemetry.record_iter(stat)
+        if self.profiler.enabled:
+            # FLOP/byte ledger + drift EWMA off the stats array already
+            # in hand; fwd_s is this forward's engine-clock seconds
+            # (virtual charge or wall time alike)
+            self.profiler.observe_iter(
+                moe_stats=ms, fp4_layers=stat.fp4_ranks, tokens=tokens,
+                batch_tokens=batch_tokens, fwd_s=fwd_s, phase=phase)
         trc = self.tracer
         if trc.enabled:
             trc.instant("dispatch.policy", cat="policy",
@@ -649,17 +672,19 @@ class Engine:
                 else np.zeros((self.cfg.enc_seq_len, self.cfg.d_model),
                               np.float32),
                 jnp.dtype(self.cfg.param_dtype))[None]
+        t_fwd = self.clock()
         with self.tracer.span("forward.prefill", cat="forward") as sp:
             logits, new_cache, self.m_state, aux = self._prefill_one(
                 self.params, self.m_state, batch, self._place_args())
             self._tick(req.prompt_len)
             if self.tracer.enabled:
                 sp.set(tokens=req.prompt_len)
+        fwd_s = self.clock() - t_fwd
         self._insert_cache(req.slot, new_cache)
         req.prefill_pos = req.prompt_len
         self._first_token(req, int(self._sample(logits)[0]))
         self._record(phase="prefill", n_active=1, tokens=req.prompt_len,
-                     batch_tokens=req.prompt_len, aux=aux)
+                     batch_tokens=req.prompt_len, aux=aux, fwd_s=fwd_s)
 
     def _plan_chunks(self) -> List:
         """Allocate the token budget over slots with pending prefill work,
@@ -692,6 +717,7 @@ class Engine:
             modality[slot, :take] = req.modality[p0:p0 + take]
             start[slot] = p0
             chunk_len[slot] = take
+        t_fwd = self.clock()
         with self.tracer.span("forward.chunk", cat="forward") as sp:
             logits, self.cache, self.m_state, aux = self._chunk(
                 self.params, self.cache, self.m_state, jnp.asarray(tokens),
@@ -700,6 +726,7 @@ class Engine:
             self._tick(b * s_bucket)
             if self.tracer.enabled:
                 sp.set(slots=len(plan), batch_tokens=b * s_bucket)
+        fwd_s = self.clock() - t_fwd
         completing = [slot for slot, take in plan
                       if self.scheduler.active[slot].prefill_pos + take
                       >= self.scheduler.active[slot].prompt_len]
@@ -713,7 +740,7 @@ class Engine:
                 self._prefill_fifo.remove(slot)
                 self._first_token(req, int(toks[slot]))
         self._record(phase="prefill", n_active=len(plan), tokens=n_tok,
-                     batch_tokens=b * s_bucket, aux=aux)
+                     batch_tokens=b * s_bucket, aux=aux, fwd_s=fwd_s)
         return n_tok
 
     # -- the iteration --------------------------------------------------------
@@ -724,7 +751,7 @@ class Engine:
             return self._step()
         with trc.span("iter", cat="engine") as sp:
             n = self._step()
-            sp.set(it=self._it, n_active=n)
+            sp.set(it=self._it, n_active=n, **self.profiler.span_args())
         return n
 
     def _step(self) -> int:
@@ -804,6 +831,7 @@ class Engine:
                               jnp.int32)
             modality = jnp.asarray(
                 np.where(ready, self.mod_state, False)[:, None])
+            t_fwd = self.clock()
             with self.tracer.span("forward.decode", cat="forward") as sp:
                 logits, self.cache, self.m_state, aux = self._decode(
                     self.params, self.cache, self.m_state, tokens, pos,
@@ -813,6 +841,7 @@ class Engine:
                 if self.tracer.enabled:
                     sp.set(batch_tokens=self.max_slots,
                            ready=int(ready.sum()))
+            fwd_s = self.clock() - t_fwd
             toks = self._sample(logits)
             for slot, req in list(self.scheduler.active.items()):
                 if ready[slot] and not req.done:
@@ -823,7 +852,7 @@ class Engine:
                     if req.done:
                         self._finish(req)
             self._record(phase="decode", n_active=n_active, tokens=n_active,
-                         batch_tokens=self.max_slots, aux=aux)
+                         batch_tokens=self.max_slots, aux=aux, fwd_s=fwd_s)
         self.scheduler.retire()
         self._observe_iter_s(t_step0)
         return max(n_active, len(self._prefill_fifo))

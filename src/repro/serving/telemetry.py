@@ -274,4 +274,30 @@ class Telemetry:
             "recovery": summarize(recoveries),
             "expert_load_heatmap": self.heatmap.summary(),
             "prediction_accuracy": self.prediction.summary(),
+            **self._profiler_summary(),
         }
+
+    def _profiler_summary(self) -> Dict[str, object]:
+        """Profiler-fed registry metrics, when a Profiler shares this
+        registry (empty otherwise — legacy readers see no new keys on
+        unprofiled runs, and the keys above never change meaning)."""
+        reg = self.registry
+        mfu = reg.get("mfu")
+        if mfu is None or mfu.value() is None:
+            return {}
+        out: Dict[str, object] = {"mfu": float(mfu.value())}
+        roof = reg.get("roofline_fraction")
+        if roof is not None and roof.value() is not None:
+            out["roofline_fraction"] = float(roof.value())
+        scale = reg.get("costmodel_time_scale")
+        if scale is not None and scale.value() is not None:
+            out["costmodel_time_scale"] = float(scale.value())
+        flops = reg.get("model_flops")
+        if flops is not None:
+            out["model_flops_total"] = float(flops.total())
+        for name in ("phase_seconds", "phase_seconds_pred"):
+            ctr = reg.get(name)
+            if ctr is not None:
+                out[name] = {k[0]: float(ctr.value(phase=k[0]))
+                             for k in ctr.labelsets()}
+        return out
