@@ -35,6 +35,45 @@ def load_arms(path: str) -> Dict[str, Dict]:
     return payload.get("arms", payload)
 
 
+def dispatch_quantize_share(profile: Dict) -> float:
+    """The ROADMAP item-1 acceptance number, same arithmetic as
+    ``profile_report.py``: measured dispatch + quantize_fp4 seconds over
+    the measured forward seconds."""
+    phases = profile["phases"]
+    fwd_s = float(profile["totals"]["forward_s"])
+    kern = sum(float(phases[ph]["measured_s"])
+               for ph in ("dispatch", "quantize_fp4") if ph in phases)
+    return kern / fwd_s if fwd_s > 0 else 0.0
+
+
+def compare_profile(profile: Dict, base: Dict, band: float) -> str:
+    """Markdown block for the profiled arm's dispatch+quantize_fp4 share
+    against the checked-in baseline (warn-only, absolute band).
+
+    The share is a within-run ratio, so unlike tok/s it barely moves with
+    runner speed — a narrow absolute band catches the one regression this
+    PR class cares about: un-fusing the FP4 path (the quantize stage
+    reappearing as visible wall time) or bloating dispatch.
+    """
+    cur = dispatch_quantize_share(profile)
+    ref = float(base["dispatch_quantize_share"])
+    verdict = "WARN" if cur > ref + band else "OK"
+    meta = profile.get("metadata", {})
+    out = ["### profiled arm: dispatch+quantize_fp4 share",
+           "",
+           "| arm | backend | baseline share | current share | band "
+           "| verdict |",
+           "|---|---|---:|---:|---:|---|",
+           f"| {meta.get('arm', '?')} | {meta.get('ffn_backend', '?')}"
+           f"{' (fused)' if meta.get('fused') else ''} | {ref:.3f} "
+           f"| {cur:.3f} | +{band:.3f} | {verdict} |"]
+    if base.get("ffn_backend") and \
+            meta.get("ffn_backend") != base["ffn_backend"]:
+        out.append(f"\nnote: baseline was recorded with "
+                   f"backend={base['ffn_backend']}")
+    return "\n".join(out)
+
+
 def compare(current: Dict[str, Dict], baseline: Dict[str, Dict],
             tolerance: float, mfu_tolerance: float = 0.10
             ) -> Dict[str, Dict]:
@@ -90,9 +129,19 @@ def markdown_table(rows: Dict[str, Dict], tolerance: float) -> str:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("current", help="fresh BENCH_serve.json")
+    ap.add_argument("current", nargs="?", default=None,
+                    help="fresh BENCH_serve.json (omit for a "
+                         "profile-only comparison)")
     ap.add_argument("--baseline", default="benchmarks/BENCH_baseline.json",
                     help="checked-in per-arm baseline summaries")
+    ap.add_argument("--profile", default=None,
+                    help="fresh profile.json from the profiled arm; its "
+                         "dispatch+quantize_fp4 share is compared against "
+                         "the baseline's 'profile' entry")
+    ap.add_argument("--share-band", type=float, default=0.05,
+                    help="absolute increase of the dispatch+quantize_fp4 "
+                         "share that triggers a WARN (the share is a "
+                         "within-run ratio, so the band can be narrow)")
     ap.add_argument("--tolerance", type=float, default=0.30,
                     help="relative slowdown that triggers a WARN "
                          "(default 0.30: wall-clock throughput on shared "
@@ -102,15 +151,32 @@ def main(argv=None) -> int:
                          "(tighter than tok/s: utilization is a ratio, "
                          "less runner-dependent)")
     args = ap.parse_args(argv)
+    if args.current is None and args.profile is None:
+        ap.error("nothing to compare: pass BENCH_serve.json, --profile, "
+                 "or both")
     try:
-        current = load_arms(args.current)
-        baseline = load_arms(args.baseline)
+        if args.current is not None:
+            current = load_arms(args.current)
+            baseline = load_arms(args.baseline)
+        with open(args.baseline) as f:
+            base_profile = json.load(f).get("profile")
+        if args.profile is not None:
+            with open(args.profile) as f:
+                profile = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
         print(f"bench_regression: cannot read inputs: {e}", file=sys.stderr)
         return 1
-    rows = compare(current, baseline, args.tolerance,
-                   mfu_tolerance=args.mfu_tolerance)
-    print(markdown_table(rows, args.tolerance))
+    if args.current is not None:
+        rows = compare(current, baseline, args.tolerance,
+                       mfu_tolerance=args.mfu_tolerance)
+        print(markdown_table(rows, args.tolerance))
+    if args.profile is not None:
+        if base_profile is None:
+            print("\nno 'profile' entry in the baseline; skipping the "
+                  "dispatch+quantize_fp4 share check")
+        else:
+            print()
+            print(compare_profile(profile, base_profile, args.share_band))
     return 0    # warn-only by design: the table is the signal
 
 

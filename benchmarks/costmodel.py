@@ -60,12 +60,22 @@ QWEN3_VL = MoEGeometry("Qwen3-VL", 2048, 768, 128, 8, 48,
 
 
 def expert_gemm_time(tokens_r: float, g: MoEGeometry, ep: int,
-                     fp4: bool) -> float:
-    """Per-rank grouped expert GEMM time (seconds)."""
+                     fp4: bool, fused: bool = True) -> float:
+    """Per-rank grouped expert GEMM time (seconds).
+
+    ``fused=True`` (default — what every strategy sim prices, and what the
+    serving hot loop now runs via ``repro.kernels.grouped_fp4_ffn``):
+    packed FP4 weights stream HBM→VMEM once at 4.25 bits/weight and are
+    dequantized in-register.  ``fused=False`` models the unfused jnp
+    fallback, which materializes a BF16 dequantized copy of the slab in
+    HBM (write + read) before the grouped GEMM.
+    """
     e_loc = g.n_experts // ep
     flops = tokens_r * 6.0 * g.d_model * g.d_ff           # gate+up+down
-    w_bytes = e_loc * 3.0 * g.d_model * g.d_ff * (BYTES_FP4 if fp4
-                                                  else BYTES_BF16)
+    w_raw = e_loc * 3.0 * g.d_model * g.d_ff
+    w_bytes = w_raw * (BYTES_FP4 if fp4 else BYTES_BF16)
+    if fp4 and not fused:
+        w_bytes += w_raw * 2.0 * BYTES_BF16   # dequant round-trip (wr + rd)
     act_bytes = tokens_r * g.d_model * BYTES_BF16 * 4.0
     rate = PEAK_INT8 if fp4 else PEAK_BF16
     return max(flops / rate, (w_bytes + act_bytes) / HBM_BW)
@@ -77,6 +87,21 @@ def quantize_time(g: MoEGeometry, ep: int) -> float:
     e_loc = g.n_experts // ep
     w = e_loc * 3.0 * g.d_model * g.d_ff
     return (w * BYTES_BF16 + w * BYTES_FP4) / HBM_BW
+
+
+def quantize_visible_time(g: MoEGeometry, ep: int, dispatch_s: float,
+                          fused: bool = True) -> float:
+    """Wall-visible share of the transformation T (paper §4.3).
+
+    Fused, T issues inside the dispatch window (no data dependency on the
+    a2a — the Pallas quantize kernel launches with dispatch in flight), so
+    only the part longer than dispatch peeks out.  Unfused it is a
+    separate serial stage: fully visible bytes plus the per-stage fixed
+    launch overhead (the same FIXED_US every other standalone stage pays —
+    cf. the ``+15e-6`` the ReaLB-seq sim charges a serialized T).
+    """
+    q = quantize_time(g, ep)
+    return max(0.0, q - dispatch_s) if fused else q + FIXED_US * 1e-6
 
 
 def dispatch_time(tokens_total: float, ep: int, d_model: float) -> float:

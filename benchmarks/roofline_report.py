@@ -76,6 +76,40 @@ def main():
             print(f"| {a} | {c1/1e9:.1f} | {c2/1e9:.1f} |"
                   f" {c2/max(c1, 1):.2f} |")
 
+    fused_vs_unfused()
+
+
+def fused_vs_unfused(ep: int = 16):
+    """Analytic fused-vs-unfused FP4 expert-FFN arm (costmodel terms).
+
+    ``fused`` is what the serving hot loop now runs (the Pallas grouped
+    FP4 FFN + quantize kernels: packed weights stream once, the
+    transformation hides inside the dispatch window); ``unfused`` is the
+    jnp fallback (BF16 dequant slab round-trips HBM, the transformation
+    is a fully visible stage).  Per-rank per-layer seconds on the paper
+    geometries at a sweep of routed-token loads.
+    """
+    from benchmarks import costmodel as cm
+
+    print()
+    print(f"### FP4 expert FFN: fused kernel vs unfused fallback "
+          f"(analytic, per rank/layer, ep={ep})")
+    print("| geometry | tokens/rank | bf16 s | fp4 unfused s | "
+          "fp4 fused s | fused/unfused | fused gemm only s |")
+    print("|---|---:|---:|---:|---:|---:|---:|")
+    for g in (cm.KIMI_VL, cm.QWEN3_VL):
+        for t in (64.0, 512.0, 4096.0):
+            disp = cm.dispatch_time(t * ep, ep, g.d_model)
+            bf16 = cm.expert_gemm_time(t, g, ep, fp4=False)
+            unf = (cm.expert_gemm_time(t, g, ep, fp4=True, fused=False)
+                   + cm.quantize_visible_time(g, ep, disp, fused=False))
+            fus = (cm.expert_gemm_time(t, g, ep, fp4=True, fused=True)
+                   + cm.quantize_visible_time(g, ep, disp, fused=True))
+            gemm_f = cm.expert_gemm_time(t, g, ep, fp4=True, fused=True)
+            print(f"| {g.name} | {t:.0f} | {bf16 * 1e3:.3f} |"
+                  f" {unf * 1e3:.3f} | {fus * 1e3:.3f} |"
+                  f" {fus / unf:.2f} | {gemm_f * 1e3:.3f} |")
+
 
 if __name__ == "__main__":
     main()

@@ -195,6 +195,21 @@ def parse_args(argv=None):
                     help="LB gate Γ on *real* routed tokens; sized so "
                          "multi-request prefill chunks cross it while "
                          "decode batches stay far below")
+    ap.add_argument("--md-init", type=float, default=None, metavar="M",
+                    help="override ReaLB AIMD threshold start m_d "
+                         "(default: config's md_init; 0 makes every "
+                         "hot vision-heavy rank eligible for FP4 from "
+                         "iteration one)")
+    ap.add_argument("--no-aimd", action="store_true",
+                    help="freeze m_d at its start value (adaptive=False) "
+                         "— used by the profiled CI arm to keep the FP4 "
+                         "duty cycle deterministic")
+    ap.add_argument("--fused", default="auto",
+                    choices=["auto", "pallas", "interpret", "jnp"],
+                    help="FP4 expert-FFN backend (kernels/ops.py): fused "
+                         "Pallas grouped kernel (native / interpret) or "
+                         "the jnp oracle; auto = pallas on TPU, jnp on "
+                         "CPU")
     ap.add_argument("--text-reserve", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--wall-time", action="store_true",
@@ -296,7 +311,14 @@ def serve(args, cfg, params, specs: List[RequestSpec],
     scenario: a pre-kill checkpoint, an :class:`ElasticCoordinator` over
     the replica manager and a scripted :class:`FaultInjector`."""
     kind = resolve_arm(args)
-    rcfg = ReaLBConfig(gate_gamma=args.gate_gamma, **POLICIES[args.policy])
+    from repro.kernels import ops as kops
+    kops.set_ffn_backend(args.fused)
+    pol = dict(POLICIES[args.policy])
+    if args.md_init is not None:
+        pol["md_init"] = args.md_init
+    if args.no_aimd:
+        pol["adaptive"] = False
+    rcfg = ReaLBConfig(gate_gamma=args.gate_gamma, **pol)
     manager = None
     vep = args.virtual_ep or 4
     gate = make_cost_gate(args, cfg, vep) \
@@ -333,7 +355,8 @@ def serve(args, cfg, params, specs: List[RequestSpec],
     profiler = None
     if cfg.moe is not None:
         from repro.obs import FlopByteLedger, Profiler
-        profiler = Profiler(FlopByteLedger(cfg, ep=vep),
+        profiler = Profiler(FlopByteLedger(cfg, ep=vep,
+                                           fused=kops.ffn_fused()),
                             registry=telemetry.registry)
     if args.wall_time:
         # zero the wall clock at run start so it is comparable with the
@@ -450,9 +473,11 @@ def serve(args, cfg, params, specs: List[RequestSpec],
         print(f"wrote xprof device trace -> {xprof_out}")
     profile_out = getattr(args, "profile_out", None)
     if profile_out and profiler is not None:
+        from repro.kernels import ops as kops
         profiler.write(profile_out, metadata=dict(
             arm=args.arm or args.policy, arch=cfg.name,
             workload=args.workload, virtual_time=not args.wall_time,
+            ffn_backend=kops.ffn_backend(), fused=kops.ffn_fused(),
             n_iters=int(telemetry.n_iters)))
         print(f"wrote profile ({profiler.n_iters} iters) -> {profile_out}")
     if tracer is not None:

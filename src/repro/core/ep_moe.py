@@ -90,6 +90,8 @@ from jax.sharding import PartitionSpec
 from repro.configs.base import ModelConfig, MoEConfig, ReaLBConfig
 from repro.core import quant
 from repro.core.policy import realb_policy
+from repro.kernels import nvfp4
+from repro.kernels import ops as kops
 from repro.models.common import P, current_mesh, resolve_spec, shard_map
 
 Params = Dict[str, jax.Array]
@@ -340,13 +342,23 @@ def _dq_t(q: quant.QTensor, dtype) -> jax.Array:
 
 def _grouped_ffn_fp4(xs, gs, wq: Dict[str, quant.QTensor],
                      rcfg: ReaLBConfig, act):
-    """NVFP4 W4A4 grouped FFN (jnp numerics oracle; swapped for the Pallas
-    ``fp4_matmul`` kernel on real TPU backends — see kernels/ops.py)."""
-    xq = quant.fp4_sim(xs, rcfg.group_size)
+    """NVFP4 W4A4 grouped FFN, backend-switched at trace time.
+
+    With ``kernels.ops.ffn_backend() != "jnp"`` this is the fused Pallas
+    grouped kernel (native on TPU, interpret-mode on CPU): packed weights
+    stream HBM→VMEM at 4.25 bits/weight and the intermediate ``h`` never
+    round-trips HBM.  The jnp fallback below is the numerics oracle the
+    kernel is pinned against — same dynamic per-group-16 activation
+    fake-quant (``nvfp4.fake_quant_a4``), dequantize + ``ragged_dot``.
+    """
+    if kops.ffn_backend() != "jnp":
+        return kops.grouped_fp4_ffn(xs, gs, wq, group=rcfg.group_size,
+                                    act=act)
+    xq = nvfp4.fake_quant_a4(xs, rcfg.group_size).astype(xs.dtype)
     g = _rdot(xq, _dq_t(wq["w_gate"], xs.dtype), gs)
     u = _rdot(xq, _dq_t(wq["w_up"], xs.dtype), gs)
     h = act(g.astype(F32)).astype(xs.dtype) * u
-    hq = quant.fp4_sim(h, rcfg.group_size)
+    hq = nvfp4.fake_quant_a4(h, rcfg.group_size).astype(xs.dtype)
     return _rdot(hq, _dq_t(wq["w_down"], xs.dtype), gs)
 
 
@@ -364,11 +376,18 @@ def _quantize_experts(w: Dict[str, jax.Array], use_fp4: jax.Array,
 
     def do_quant(ws):
         out = {}
+        use_kernel = kops.ffn_backend() != "jnp"
         for name, wt in ws.items():
             wt_t = wt.swapaxes(-1, -2)  # [G, N, K]: quantize along K
             if overlap_token is not None:
                 wt_t = wt_t + overlap_token.astype(wt_t.dtype)
-            out[name] = quant.quantize_fp4(wt_t, rcfg.group_size)
+            if use_kernel:
+                # Pallas quantize kernel — bitwise-identical to the jnp
+                # recipe, but streams the slab once at 4.25 bits/wt out.
+                out[name] = kops.quantize_experts_fp4(
+                    wt_t, group=rcfg.group_size)
+            else:
+                out[name] = quant.quantize_fp4(wt_t, rcfg.group_size)
         return out
 
     def no_quant(ws):
@@ -621,13 +640,15 @@ def _moe_broadcast(x_t, mod_t, val_t, p, m_vec, cfg, rcfg, comm, act, rep,
             return per_expert(x_, w_["w_gate"], w_["w_up"], w_["w_down"])
 
         def fp4_branch(o):
+            # same dynamic per-group a4 recipe as the grouped kernel, so
+            # decode and prefill FP4 numerics agree across backends
             x_, _, wq_ = o
-            xq = quant.fp4_sim(x_, rcfg.group_size)
+            xq = nvfp4.fake_quant_a4(x_, rcfg.group_size).astype(x_.dtype)
             wd = {n: _dq_t(q, x_.dtype) for n, q in wq_.items()}
             g = jnp.einsum("td,edf->etf", xq, wd["w_gate"])
             u = jnp.einsum("td,edf->etf", xq, wd["w_up"])
             h = act(g.astype(F32)).astype(x_.dtype) * u
-            hq = quant.fp4_sim(h, rcfg.group_size)
+            hq = nvfp4.fake_quant_a4(h, rcfg.group_size).astype(x_.dtype)
             return jnp.einsum("etf,efd->etd", hq, wd["w_down"])
 
         y_e = jax.lax.cond(use_fp4_me, fp4_branch, bf16_branch,
@@ -787,12 +808,15 @@ def ep_moe_forward(p: Params, x: jax.Array, cfg: ModelConfig,
     if sched is not None:                # replicated [E, Q] split schedule
         table_args += (sched,)
         table_specs += (t2_spec,)
+    # check_rep=False: pallas_call (the FP4 quantize / grouped-FFN
+    # kernels) has no replication rule; the out_specs above already state
+    # the sharding we require, so only the static replication lint is lost
     y, m_new, aux_s, stats, estats, sstats = shard_map(
         fn, mesh=mesh,
         in_specs=(x_spec, mod_spec, mod_spec, m_spec, r_spec, wg_spec,
                   wg_spec, wd_spec) + table_specs,
         out_specs=(x_spec, m_spec, aux_spec, stats_spec, stats_spec,
-                   stats_spec),
+                   stats_spec), check_rep=False,
     )(x, modality, valid, m_state, p["router"], p["w_gate"], p["w_up"],
       p["w_down"], *table_args)
 

@@ -16,56 +16,23 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import nvfp4
+
+# Explicit level table kept for tests/inspection; the rounding math is
+# single-sourced in repro.kernels.nvfp4 (compare-select, bitwise identical
+# to a table gather) so the Pallas kernels and this oracle cannot drift.
 FP4_LEVELS = jnp.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], jnp.float32)
 # decision boundaries between consecutive levels (round-to-nearest)
-FP4_MIDPOINTS = jnp.array([0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0], jnp.float32)
-FP4_MAX = 6.0
-INV_FP4_MAX = float(jnp.float32(1.0) / jnp.float32(6.0))
-E4M3_MAX = 448.0
-GROUP = 16
+FP4_MIDPOINTS = jnp.array(nvfp4.FP4_MIDPOINTS, jnp.float32)
+FP4_MAX = nvfp4.FP4_MAX
+INV_FP4_MAX = nvfp4.INV_FP4_MAX
+E4M3_MAX = nvfp4.E4M3_MAX
+GROUP = nvfp4.GROUP
 
-
-def fp4_round(x: jax.Array) -> jax.Array:
-    """Round to the nearest E2M1-representable value. Any shape, f32 math."""
-    xf = x.astype(jnp.float32)
-    mag = jnp.abs(xf)
-    idx = jnp.zeros(xf.shape, jnp.int32)
-    for mid in [0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0]:
-        idx = idx + (mag > mid).astype(jnp.int32)
-    lev = FP4_LEVELS[idx]
-    return jnp.sign(xf) * lev
-
-
-def fp4_code(x: jax.Array) -> jax.Array:
-    """4-bit code: bit3 = sign, bits0..2 = level index. uint8 in [0,15]."""
-    xf = x.astype(jnp.float32)
-    mag = jnp.abs(xf)
-    idx = jnp.zeros(xf.shape, jnp.int32)
-    for mid in [0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0]:
-        idx = idx + (mag > mid).astype(jnp.int32)
-    sign = (xf < 0).astype(jnp.int32)
-    return (sign * 8 + idx).astype(jnp.uint8)
-
-
-def fp4_decode(code: jax.Array) -> jax.Array:
-    """Inverse of :func:`fp4_code`."""
-    idx = (code & 7).astype(jnp.int32)
-    sign = jnp.where((code & 8) > 0, -1.0, 1.0)
-    return sign * FP4_LEVELS[idx]
-
-
-def e4m3_round(x: jax.Array) -> jax.Array:
-    """Round-to-nearest-even onto FP8 E4M3 (±448, denormals at 2^-9)."""
-    xf = x.astype(jnp.float32)
-    mag = jnp.clip(jnp.abs(xf), 0.0, E4M3_MAX)
-    # exponent of the representation bucket; denormal floor at 2^-6
-    e = jnp.floor(jnp.log2(jnp.maximum(mag, 1e-38)))
-    e = jnp.clip(e, -6.0, 8.0)
-    ulp = jnp.exp2(e - 3.0)                    # 3 mantissa bits
-    q = jnp.round(mag / ulp) * ulp
-    # rounding up may bump the exponent (e.g. 1.9375 -> 2.0): representable.
-    q = jnp.where(mag == 0.0, 0.0, jnp.minimum(q, E4M3_MAX))
-    return jnp.sign(xf) * q
+fp4_round = nvfp4.fp4_round
+fp4_code = nvfp4.fp4_code
+fp4_decode = nvfp4.decode_level
+e4m3_round = nvfp4.e4m3_round
 
 
 def pack_u4(codes: jax.Array) -> jax.Array:

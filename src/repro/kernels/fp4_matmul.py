@@ -29,37 +29,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-GROUP = 16
-FP4_MAX = 6.0
-E4M3_MAX = 448.0
-
-
-def _decode_level(code):
-    """E2M1 magnitude from a 4-bit code (bit3=sign, bits0..2=index)."""
-    idx = (code & 7).astype(jnp.float32)
-    # levels: [0, .5, 1, 1.5, 2, 3, 4, 6] == idx/2 for idx<4 else idx-2 (7->6 ok? 7-2=5 != 6)
-    hi = jnp.where(idx == 7.0, 6.0, idx - 2.0)
-    mag = jnp.where(idx < 4.0, 0.5 * idx, hi)
-    sign = 1.0 - 2.0 * ((code >> 3) & 1).astype(jnp.float32)
-    return sign * mag
-
-
-def _fake_quant_a4(x, group):
-    """In-kernel activation NVFP4 fake-quant along K (vector ops only)."""
-    bm, bk = x.shape
-    xg = x.reshape(bm, bk // group, group)
-    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
-    gs = jnp.maximum(amax / FP4_MAX, 1e-20)       # dynamic per-group scale
-    y = xg / gs
-    mag = jnp.abs(y)
-    idx = jnp.zeros(y.shape, jnp.int32)
-    for mid in (0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0):
-        idx = idx + (mag > mid).astype(jnp.int32)
-    idxf = idx.astype(jnp.float32)
-    lev = jnp.where(idxf < 4.0, 0.5 * idxf,
-                    jnp.where(idxf == 7.0, 6.0, idxf - 2.0))
-    q = jnp.sign(y) * lev * gs
-    return q.reshape(bm, bk)
+from repro.kernels.nvfp4 import (E4M3_MAX, FP4_MAX, GROUP,
+                                 decode_level as _decode_level,
+                                 fake_quant_a4 as _fake_quant_a4)
 
 
 def _matmul_kernel(gscale_ref, x_ref, w_ref, s_ref, o_ref, acc_ref, *,

@@ -1,0 +1,194 @@
+"""Pallas TPU kernel: grouped NVFP4 expert FFN over the slot dimension.
+
+This is the serving hot loop's expert compute (``_grouped_ffn_fp4`` in
+``repro.core.ep_moe``) as ONE fused ragged-GEMM pipeline instead of
+dequantize → ``ragged_dot`` × 3:
+
+* tokens arrive sorted by local expert slot (``xs [M, D]``), with per-slot
+  counts ``gs [G]``; the prefix-sum offsets and a skip map over empty
+  slots are **scalar-prefetched** so BlockSpec index maps can steer weight
+  DMA before the grid step runs;
+* packed E2M1 codes + E4M3-valued group-16 scales stream HBM→VMEM at
+  4.25 bits/weight and are dequantized in-register (compare-select decode
+  from ``repro.kernels.nvfp4`` — no gathers);
+* activation fake-quant (a4), the SwiGLU ``act(x·Wg) ⊙ (x·Wu)`` elementwise
+  stage, and the down projection all happen on the same VMEM-resident
+  tiles, so the intermediate ``h [M, d_ff]`` never round-trips HBM and the
+  BF16 dequantized weights never exist outside a register tile.
+
+Grid ``(M/bm, G, F/bf)``: token-block outermost so the f32 output
+accumulator (VMEM scratch, zeroed at ``g==f==0``, flushed at the last
+``(g, f)`` step) is revisited only on consecutive steps.  A slot with no
+tokens (or no row overlap with the current token block) skips all compute
+via ``pl.when``; its weight-block index is remapped to the last non-empty
+slot at or before it (``gmap``), so consecutive grid steps see the same
+block index and Pallas elides the DMA — empty slots cost neither flops nor
+HBM traffic.
+
+VMEM per step (full-model shapes D=2048, F=1408 → bf=128, bm=128):
+x 512 KiB + acc 1 MiB + gate/up packed 2·128 KiB + down packed 128 KiB +
+scales ~48 KiB ≈ 1.9 MiB, comfortably inside ~16 MiB with double
+buffering.  On CPU the same kernel runs under ``interpret=True`` for
+oracle parity (see ``repro.kernels.ops.ffn_backend``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.nvfp4 import GROUP, decode_level, fake_quant_a4
+
+
+def _dequant_tile(packed, scales, gscale, group, dtype):
+    """[R, C/2] u8 + [R, C/group] scales -> [R, C] weight tile in ``dtype``.
+
+    Mirrors the jnp oracle's multiply order exactly:
+    ``(levels * local_scale) * global_scale`` (see quant.dequantize_fp4).
+    """
+    r, c2 = packed.shape
+    lo = decode_level(packed & 0x0F)
+    hi = decode_level((packed >> 4) & 0x0F)
+    vals = jnp.stack([lo, hi], axis=-1).reshape(r, c2 * 2)
+    w = (vals.reshape(r, c2 * 2 // group, group) * scales[..., None]) * gscale
+    return w.reshape(r, c2 * 2).astype(dtype)
+
+
+def _ffn_kernel(offs_ref, gmap_ref, x_ref, gsc_ref,
+                wgp_ref, wgs_ref, wup_ref, wus_ref, wdp_ref, wds_ref,
+                o_ref, acc_ref, *, group, act, n_g, n_f, block_m):
+    i = pl.program_id(0)
+    g = pl.program_id(1)
+    f = pl.program_id(2)
+
+    @pl.when((g == 0) & (f == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    r0 = offs_ref[g]
+    r1 = offs_ref[g + 1]
+    row0 = i * block_m
+
+    # Skip empty slots and token blocks with no rows in this slot.
+    @pl.when((r1 > r0) & (row0 < r1) & (row0 + block_m > r0))
+    def _compute():
+        dtype = x_ref.dtype
+        x = x_ref[...].astype(jnp.float32)                   # [bm, D]
+        rows = row0 + jax.lax.broadcasted_iota(
+            jnp.int32, (block_m, 1), 0)
+        mask = (rows >= r0) & (rows < r1)
+        x = jnp.where(mask, x, 0.0)
+        # oracle: xq = fake_quant_a4(xs) once over all rows — row-local, so
+        # recomputing per (block, slot) with masked rows is identical.
+        xq = fake_quant_a4(x, group).astype(dtype)
+
+        gsc = gsc_ref[...]                                    # [1, 3]
+        wg = _dequant_tile(wgp_ref[0], wgs_ref[0], gsc[0, 0], group, dtype)
+        wu = _dequant_tile(wup_ref[0], wus_ref[0], gsc[0, 1], group, dtype)
+
+        gate = jax.lax.dot_general(                           # [bm, bf]
+            xq, wg, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(dtype)
+        up = jax.lax.dot_general(
+            xq, wu, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(dtype)
+        h = (act(gate.astype(jnp.float32)).astype(dtype) * up)
+        hq = fake_quant_a4(h, group).astype(dtype)
+
+        wd = _dequant_tile(wdp_ref[0], wds_ref[0], gsc[0, 2], group, dtype)
+        acc_ref[...] += jax.lax.dot_general(                  # [bm, D]
+            hq, wd, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when((g == n_g - 1) & (f == n_f - 1))
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pick_block_f(f: int, group: int) -> int:
+    """Largest divisor of d_ff ≤ 512 that keeps group-16 scale tiles whole."""
+    for cand in (512, 256, 128, 64, 32, 16):
+        if f % cand == 0 and cand % group == 0:
+            return cand
+    return f
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("group", "act", "block_m",
+                                    "interpret", "out_dtype"))
+def grouped_fp4_ffn_kernel(xs: jax.Array, gs: jax.Array,
+                           gate_packed: jax.Array, gate_scales: jax.Array,
+                           up_packed: jax.Array, up_scales: jax.Array,
+                           down_packed: jax.Array, down_scales: jax.Array,
+                           global_scales: jax.Array, *,
+                           group: int = GROUP, act=jax.nn.silu,
+                           block_m: int = 128, interpret: bool = False,
+                           out_dtype=None) -> jax.Array:
+    """Fused grouped FP4 SwiGLU FFN: ``xs [M, D]`` sorted by slot → ``[M, D]``.
+
+    ``gs [G]`` int32 token counts per slot (``sum(gs) == M``);
+    gate/up quantized along D (``packed [G, F, D/2]``, ``scales
+    [G, F, D/group]``), down along F (``[G, D, F/2]``, ``[G, D, F/group]``);
+    ``global_scales [3]`` f32 per-tensor scales (gate, up, down).
+    Rows are padded to ``block_m`` internally — callers pass real ``M``.
+    """
+    m, d = xs.shape
+    n_groups = gs.shape[0]
+    f = gate_packed.shape[1]
+    assert d % (2 * group) == 0 and f % (2 * group) == 0, (d, f)
+
+    block_m = min(block_m, max(8, m))
+    mp = -(-m // block_m) * block_m
+    if mp != m:
+        xs = jnp.pad(xs, ((0, mp - m), (0, 0)))
+    block_f = _pick_block_f(f, group)
+    grid = (mp // block_m, n_groups, f // block_f)
+
+    gs = gs.astype(jnp.int32)
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(gs)])
+    # empty-slot skip map: index of the last non-empty slot at or before g
+    # (0 if none yet) — consecutive grid steps then reuse the same weight
+    # block and the DMA is elided.
+    nz = gs > 0
+    gmap = jnp.maximum(
+        jax.lax.cummax(jnp.where(nz, jnp.arange(n_groups, dtype=jnp.int32),
+                                 -1)), 0)
+
+    kernel = functools.partial(_ffn_kernel, group=group, act=act,
+                               n_g=n_groups, n_f=grid[2], block_m=block_m)
+    out_dtype = out_dtype or xs.dtype
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, d), lambda i, g, f, offs, gmap: (i, 0)),
+                pl.BlockSpec((1, 3), lambda i, g, f, offs, gmap: (0, 0)),
+                pl.BlockSpec((1, block_f, d // 2),
+                             lambda i, g, f, offs, gmap: (gmap[g], f, 0)),
+                pl.BlockSpec((1, block_f, d // group),
+                             lambda i, g, f, offs, gmap: (gmap[g], f, 0)),
+                pl.BlockSpec((1, block_f, d // 2),
+                             lambda i, g, f, offs, gmap: (gmap[g], f, 0)),
+                pl.BlockSpec((1, block_f, d // group),
+                             lambda i, g, f, offs, gmap: (gmap[g], f, 0)),
+                pl.BlockSpec((1, d, block_f // 2),
+                             lambda i, g, f, offs, gmap: (gmap[g], 0, f)),
+                pl.BlockSpec((1, d, block_f // group),
+                             lambda i, g, f, offs, gmap: (gmap[g], 0, f)),
+            ],
+            out_specs=pl.BlockSpec((block_m, d),
+                                   lambda i, g, f, offs, gmap: (i, 0)),
+            scratch_shapes=[pltpu.VMEM((block_m, d), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((mp, d), out_dtype),
+        interpret=interpret,
+    )(offs, gmap, xs,
+      jnp.asarray(global_scales, jnp.float32).reshape(1, 3),
+      gate_packed, gate_scales, up_packed, up_scales,
+      down_packed, down_scales)
+    return out[:m]

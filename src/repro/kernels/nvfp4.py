@@ -1,0 +1,102 @@
+"""Single-source NVFP4 (E2M1 + E4M3 group scales) numerics.
+
+Every implementation of the FP4 grid in this repo — the jnp oracle in
+``repro.core.quant``, the Pallas quantize kernel
+(``repro.kernels.quantize_fp4``), the W4A4 GEMM kernel
+(``repro.kernels.fp4_matmul``) and the grouped expert-FFN kernel
+(``repro.kernels.grouped_fp4_ffn``) — imports the helpers below instead of
+re-implementing the level table.  Everything here is pure ``jnp`` vector
+math (compare-select, no gathers) so the same functions trace both inside
+Pallas kernel bodies and in ordinary jitted code, and the kernels cannot
+drift from the oracle (``tests/test_nvfp4.py`` pins identity and bitwise
+parity against the explicit level table).
+
+Format recap (paper Appendix E): values quantize to E2M1
+``{0, ±0.5, ±1, ±1.5, ±2, ±3, ±4, ±6}``; symmetric min-max per group of 16
+along the contraction dim with local scale ``amax/6`` rounded to FP8 E4M3;
+one global f32 scale per tensor keeps local scales inside E4M3 range.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+GROUP = 16
+FP4_MAX = 6.0
+INV_FP4_MAX = float(jnp.float32(1.0) / jnp.float32(6.0))
+E4M3_MAX = 448.0
+# round-to-nearest decision boundaries between consecutive E2M1 levels
+FP4_MIDPOINTS = (0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0)
+
+
+def fp4_index(mag: jax.Array) -> jax.Array:
+    """Level index in [0,7] for a non-negative magnitude (int32)."""
+    idx = jnp.zeros(mag.shape, jnp.int32)
+    for mid in FP4_MIDPOINTS:
+        idx = idx + (mag > mid).astype(jnp.int32)
+    return idx
+
+
+def fp4_level(idx: jax.Array) -> jax.Array:
+    """E2M1 magnitude for a level index, via compare-select (no gather).
+
+    levels [0, .5, 1, 1.5, 2, 3, 4, 6] == idx/2 for idx<4, idx-2 for
+    idx in {4,5,6}, and 6 for idx==7.  Bitwise identical to a
+    ``FP4_LEVELS[idx]`` table gather (all values exact in f32).
+    """
+    idxf = idx.astype(jnp.float32)
+    hi = jnp.where(idxf == 7.0, 6.0, idxf - 2.0)
+    return jnp.where(idxf < 4.0, 0.5 * idxf, hi)
+
+
+def fp4_round(x: jax.Array) -> jax.Array:
+    """Round to the nearest E2M1-representable value. Any shape, f32 math."""
+    xf = x.astype(jnp.float32)
+    return jnp.sign(xf) * fp4_level(fp4_index(jnp.abs(xf)))
+
+
+def fp4_code(x: jax.Array) -> jax.Array:
+    """4-bit code: bit3 = sign, bits0..2 = level index. uint8 in [0,15]."""
+    xf = x.astype(jnp.float32)
+    idx = fp4_index(jnp.abs(xf))
+    sign = (xf < 0).astype(jnp.int32)
+    return (sign * 8 + idx).astype(jnp.uint8)
+
+
+def decode_level(code: jax.Array) -> jax.Array:
+    """Signed E2M1 value from a 4-bit code (f32)."""
+    idx = (code & 7).astype(jnp.int32)
+    sign = 1.0 - 2.0 * ((code >> 3) & 1).astype(jnp.float32)
+    return sign * fp4_level(idx)
+
+
+def e4m3_round(x: jax.Array) -> jax.Array:
+    """Round-to-nearest-even onto FP8 E4M3 (±448, denormals at 2^-9)."""
+    xf = x.astype(jnp.float32)
+    mag = jnp.clip(jnp.abs(xf), 0.0, E4M3_MAX)
+    # exponent of the representation bucket; denormal floor at 2^-6
+    e = jnp.floor(jnp.log2(jnp.maximum(mag, 1e-38)))
+    e = jnp.clip(e, -6.0, 8.0)
+    ulp = jnp.exp2(e - 3.0)                    # 3 mantissa bits
+    q = jnp.round(mag / ulp) * ulp
+    # rounding up may bump the exponent (e.g. 1.9375 -> 2.0): representable.
+    q = jnp.where(mag == 0.0, 0.0, jnp.minimum(q, E4M3_MAX))
+    return jnp.sign(xf) * q
+
+
+def fake_quant_a4(x: jax.Array, group: int = GROUP) -> jax.Array:
+    """Activation NVFP4 fake-quant with *dynamic* per-group scales.
+
+    Groups of ``group`` along the last axis; local scale = amax/6 kept in
+    exact f32 (activations are quantized on the fly, so there is no E4M3
+    storage constraint — this matches the kernels and ``ref.fp4_matmul_ref``,
+    not the PTQ weight recipe).  Returns f32; callers cast as needed.
+    Works for any leading shape; last axis must divide by ``group``.
+    """
+    xf = x.astype(jnp.float32)
+    shape = xf.shape
+    xg = xf.reshape(shape[:-1] + (shape[-1] // group, group))
+    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    gs = jnp.maximum(amax / FP4_MAX, 1e-20)       # dynamic per-group scale
+    q = jnp.sign(xg / gs) * fp4_level(fp4_index(jnp.abs(xg / gs))) * gs
+    return q.reshape(shape)

@@ -1,38 +1,125 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Public jit'd wrappers for the Pallas kernels + the serving backend switch.
 
 On TPU backends the kernels compile natively; on CPU (this container) they
 execute in ``interpret=True`` mode, which runs the kernel body in Python —
 the correctness tests sweep shapes/dtypes against :mod:`repro.kernels.ref`.
+
+The serving hot loop (``repro.core.ep_moe``) picks its FP4 expert-FFN
+implementation through :func:`ffn_backend`:
+
+* ``"pallas"``    — fused grouped kernel, compiled natively (TPU default);
+* ``"interpret"`` — same kernel under the Pallas interpreter (CPU oracle
+  parity; slow, used by tests and the profiled CI bench arm);
+* ``"jnp"``       — the dequantize + ``ragged_dot`` jnp oracle (CPU
+  default: fast enough to serve, numerically the reference).
+
+The choice is read at *trace* time: call :func:`set_ffn_backend` (or set
+``REPRO_FFN_BACKEND``) before building/jitting an engine; already-compiled
+functions keep the backend they were traced with.
+
+All wrappers pad inputs to block multiples internally and slice the
+result, so real routed token counts (``ep·cap`` with cap rounded to 8,
+arbitrary d_ff) need no caller-side padding.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+import os
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import global_scale_for
+from repro.core.quant import QTensor, global_scale_for
 from repro.kernels.fp4_matmul import fp4_matmul_kernel
+from repro.kernels.grouped_fp4_ffn import grouped_fp4_ffn_kernel
 from repro.kernels.quantize_fp4 import quantize_fp4_kernel
+
+FFN_BACKENDS = ("pallas", "interpret", "jnp")
+_ffn_backend_override: Optional[str] = None
 
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# --------------------------------------------------------------------------
+# serving backend switch
+# --------------------------------------------------------------------------
+def ffn_backend() -> str:
+    """Resolve the FP4 expert-FFN backend for the serving hot loop."""
+    if _ffn_backend_override is not None:
+        return _ffn_backend_override
+    env = os.environ.get("REPRO_FFN_BACKEND", "").strip().lower()
+    if env in FFN_BACKENDS:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def set_ffn_backend(name: Optional[str]) -> str:
+    """Override the backend ("pallas" | "interpret" | "jnp"); ``None`` or
+    ``"auto"`` restores env/default resolution.  Returns the active backend.
+    Takes effect for functions traced *after* the call."""
+    global _ffn_backend_override
+    if name is None or name == "auto":
+        _ffn_backend_override = None
+    else:
+        if name not in FFN_BACKENDS:
+            raise ValueError(f"unknown ffn backend {name!r}; "
+                             f"expected one of {FFN_BACKENDS} or 'auto'")
+        _ffn_backend_override = name
+    return ffn_backend()
+
+
+def ffn_fused() -> bool:
+    """True when the hot loop runs the fused grouped kernel (either mode),
+    i.e. FP4 weights stream packed and ``h`` stays in VMEM — the ledger /
+    costmodel should then drop the BF16 dequant HBM round-trip."""
+    return ffn_backend() != "jnp"
+
+
+# --------------------------------------------------------------------------
+# padding helpers (satellite: no hard shape asserts at the call sites)
+# --------------------------------------------------------------------------
+def _pad_dim(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _fit_block(size: int, block: int, align: int) -> int:
+    """Largest usable block ≤ ``block`` that is a multiple of ``align``;
+    sizes below one block collapse to the (aligned-up) size itself."""
+    if size <= block:
+        return -(-size // align) * align
+    return max(align, (block // align) * align)
+
+
 def quantize_fp4(w: jax.Array, global_scale: jax.Array | None = None, *,
                  group: int = 16, block_n: int = 256, block_k: int = 512,
                  interpret: bool | None = None
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """NVFP4-quantize ``w [N,K]`` along K. Returns (packed, scales, gscale)."""
+    """NVFP4-quantize ``w [N,K]`` along K. Returns (packed, scales, gscale).
+
+    ``K`` must be a multiple of ``2·group`` (the storage format); ``N`` and
+    ``K`` are otherwise arbitrary — tiles are padded internally.
+    """
+    n, k = w.shape
+    assert k % (2 * group) == 0, (w.shape, group)
     if global_scale is None:
         global_scale = global_scale_for(w)
     interpret = _interpret_default() if interpret is None else interpret
+    bn = _fit_block(n, block_n, 8)
+    bk = _fit_block(k, block_k, 2 * group)
+    wp = _pad_dim(_pad_dim(w, 0, bn), 1, bk)
     packed, scales = quantize_fp4_kernel(
-        w, global_scale, group=group, block_n=block_n, block_k=block_k,
+        wp, global_scale, group=group, block_n=bn, block_k=bk,
         interpret=interpret)
-    return packed, scales, jnp.asarray(global_scale, jnp.float32)
+    return (packed[:n, :k // 2], scales[:n, :k // group],
+            jnp.asarray(global_scale, jnp.float32))
 
 
 def fp4_matmul(x: jax.Array, packed: jax.Array, scales: jax.Array,
@@ -40,12 +127,27 @@ def fp4_matmul(x: jax.Array, packed: jax.Array, scales: jax.Array,
                a4: bool = False, out_dtype=jnp.float32,
                block_m: int = 128, block_n: int = 256, block_k: int = 512,
                interpret: bool | None = None) -> jax.Array:
-    """``x [M,K] @ W^T`` with W stored as packed NVFP4 ``[N,K/2]``."""
+    """``x [M,K] @ W^T`` with W stored as packed NVFP4 ``[N,K/2]``.
+
+    Arbitrary M/N; K must be a multiple of ``2·group``.  Inputs are padded
+    to block multiples (zero rows/cols/groups contribute exact zeros) and
+    the result is sliced back to ``[M,N]``.
+    """
     interpret = _interpret_default() if interpret is None else interpret
-    return fp4_matmul_kernel(
-        x, packed, scales, global_scale, group=group, a4=a4,
-        block_m=block_m, block_n=block_n, block_k=block_k,
+    m, k = x.shape
+    n = packed.shape[0]
+    assert k % (2 * group) == 0, (x.shape, group)
+    bm = _fit_block(m, block_m, 8)
+    bn = _fit_block(n, block_n, 8)
+    bk = _fit_block(k, block_k, 2 * group)
+    xp = _pad_dim(_pad_dim(x, 0, bm), 1, bk)
+    pp = _pad_dim(_pad_dim(packed, 0, bn), 1, bk // 2)
+    sp = _pad_dim(_pad_dim(scales, 0, bn), 1, bk // group)
+    out = fp4_matmul_kernel(
+        xp, pp, sp, global_scale, group=group, a4=a4,
+        block_m=bm, block_n=bn, block_k=bk,
         interpret=interpret, out_dtype=out_dtype)
+    return out[:m, :n]
 
 
 def fp4_linear(x: jax.Array, w: jax.Array, *, a4: bool = False,
@@ -59,3 +161,40 @@ def fp4_linear(x: jax.Array, w: jax.Array, *, a4: bool = False,
                                       interpret=interpret)
     return fp4_matmul(x, packed, scales, gs, group=group, a4=a4,
                       interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# serving hot-loop entry points (grouped over the expert-slot dimension)
+# --------------------------------------------------------------------------
+def quantize_experts_fp4(wt: jax.Array, *, group: int = 16,
+                         interpret: bool | None = None) -> QTensor:
+    """Quantize a ``[G, N, K]`` expert weight stack along K via the Pallas
+    kernel.  Bitwise-identical to ``quant.quantize_fp4`` (same global
+    scale over the whole stack, same per-group recipe)."""
+    g, n, k = wt.shape
+    gscale = global_scale_for(wt)
+    interpret = (ffn_backend() != "pallas") if interpret is None else interpret
+    packed, scales = quantize_fp4(wt.reshape(g * n, k), gscale, group=group,
+                                  interpret=interpret)[:2]
+    return QTensor(packed.reshape(g, n, k // 2),
+                   scales.reshape(g, n, k // group), gscale)
+
+
+def grouped_fp4_ffn(xs: jax.Array, gs: jax.Array,
+                    wq: Dict[str, QTensor], *, group: int = 16,
+                    act=jax.nn.silu,
+                    interpret: bool | None = None) -> jax.Array:
+    """Fused grouped FP4 SwiGLU FFN over slot-sorted tokens (see
+    ``repro.kernels.grouped_fp4_ffn``).  ``wq`` holds ``w_gate``/``w_up``
+    quantized along D and ``w_down`` quantized along d_ff, exactly as
+    produced by ``_quantize_experts`` in the hot loop."""
+    qg, qu, qd = wq["w_gate"], wq["w_up"], wq["w_down"]
+    interpret = (ffn_backend() != "pallas") if interpret is None else interpret
+    gscales = jnp.stack([
+        jnp.asarray(qg.global_scale, jnp.float32).reshape(()),
+        jnp.asarray(qu.global_scale, jnp.float32).reshape(()),
+        jnp.asarray(qd.global_scale, jnp.float32).reshape(())])
+    return grouped_fp4_ffn_kernel(
+        xs, gs, qg.packed, qg.scales, qu.packed, qu.scales,
+        qd.packed, qd.scales, gscales, group=group, act=act,
+        interpret=interpret)

@@ -21,31 +21,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-GROUP = 16
-FP4_MAX = 6.0
-INV_FP4_MAX = float(jnp.float32(1.0) / jnp.float32(6.0))
-E4M3_MAX = 448.0
-
-
-def _e4m3_round(x):
-    """RNE onto E4M3 (vector math, no gathers)."""
-    mag = jnp.clip(jnp.abs(x), 0.0, E4M3_MAX)
-    e = jnp.floor(jnp.log2(jnp.maximum(mag, 1e-38)))
-    e = jnp.clip(e, -6.0, 8.0)
-    ulp = jnp.exp2(e - 3.0)
-    q = jnp.round(mag / ulp) * ulp
-    q = jnp.where(mag == 0.0, 0.0, jnp.minimum(q, E4M3_MAX))
-    return jnp.sign(x) * q
-
-
-def _fp4_code(x):
-    """sign·level-index code (uint8 in [0,15]) on the E2M1 grid."""
-    mag = jnp.abs(x)
-    idx = jnp.zeros(x.shape, jnp.int32)
-    for mid in (0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0):
-        idx = idx + (mag > mid).astype(jnp.int32)
-    sign = (x < 0).astype(jnp.int32)
-    return (sign * 8 + idx).astype(jnp.uint8)
+from repro.kernels.nvfp4 import (E4M3_MAX, FP4_MAX, GROUP, INV_FP4_MAX,
+                                 e4m3_round as _e4m3_round,
+                                 fp4_code as _fp4_code)
 
 
 def _quantize_kernel(gscale_ref, w_ref, packed_ref, scales_ref, *,

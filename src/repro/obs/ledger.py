@@ -94,11 +94,19 @@ class FlopByteLedger:
     size.
     """
 
-    def __init__(self, cfg, ep: int):
+    def __init__(self, cfg, ep: int, fused: bool = False):
         if cfg.moe is None:
             raise ValueError("FlopByteLedger needs an MoE config")
         self.cfg = cfg
         self.ep = int(ep)
+        # fused=True: the hot loop runs the fused Pallas grouped FP4 FFN +
+        # quantize kernels (kernels.ops.ffn_fused()) — FP4 weights stream
+        # packed (no BF16 dequant HBM round-trip) and the transformation
+        # issues inside the dispatch window, so only its excess over
+        # dispatch is wall-visible (paper §4.3).  fused=False: the jnp
+        # fallback — dequantized BF16 slab round-trips HBM and the
+        # transformation is a fully-visible stage.
+        self.fused = bool(fused)
         self.d = int(cfg.d_model)
         self.d_ff = int(cfg.moe.d_ff)
         self.n_experts = int(cfg.moe.num_experts)
@@ -117,8 +125,10 @@ class FlopByteLedger:
     # -- costmodel mirrors (same formulas, same hw constants) ------------
     def _expert_gemm_s(self, tokens_r: float, fp4: bool) -> float:
         flops = tokens_r * 2.0 * self.mult * self.d * self.d_ff
-        w_bytes = self.e_loc * self.mult * self.d * self.d_ff * (
-            BYTES_FP4 if fp4 else BYTES_BF16)
+        w_raw = self.e_loc * self.mult * self.d * self.d_ff
+        w_bytes = w_raw * (BYTES_FP4 if fp4 else BYTES_BF16)
+        if fp4 and not self.fused:
+            w_bytes += w_raw * 2.0 * BYTES_BF16  # dequant round-trip
         act_bytes = tokens_r * self.d * BYTES_BF16 * 4.0
         rate = PEAK_INT8 if fp4 else PEAK_BF16
         return max(flops / rate, (w_bytes + act_bytes) / HBM_BW)
@@ -126,6 +136,15 @@ class FlopByteLedger:
     def _quantize_s(self) -> float:
         w = self.e_loc * self.mult * self.d * self.d_ff
         return (w * BYTES_BF16 + w * BYTES_FP4) / HBM_BW
+
+    def _quantize_visible_s(self, dispatch_s: float) -> float:
+        # mirrors costmodel.quantize_visible_time: fused T hides inside
+        # the dispatch window (only the excess peeks out); unfused T is a
+        # standalone stage — visible bytes + per-stage launch overhead
+        q = self._quantize_s()
+        if self.fused:
+            return max(0.0, q - dispatch_s)
+        return q + FIXED_US * 1e-6
 
     def _dispatch_s(self, tokens_total: float, ici_bw: float) -> float:
         per_rank = (tokens_total / self.ep * (self.ep - 1) / self.ep
@@ -191,11 +210,15 @@ class FlopByteLedger:
             # weight_gather: a local-FSDP no-op on the virtual bench
             # (the mesh path's all-gather is charged by the roofline)
 
-            # quantize_fp4: read BF16, write packed, on FP4 ranks only
+            # quantize_fp4: read BF16, write packed, on FP4 ranks only.
+            # Bytes are real traffic either way; the *visible* seconds
+            # depend on fusion — the fused kernel issues inside the
+            # dispatch window and only its excess peeks out.
             q_bytes = fp4_mask.sum() * w_slab * (BYTES_BF16 + BYTES_FP4)
             hbm["quantize_fp4"] += q_bytes
             if k_fp4 > 0:
-                pred["quantize_fp4"] += self._quantize_s()
+                pred["quantize_fp4"] += self._quantize_visible_s(
+                    self._dispatch_s(tokens * self.top_k, bw))
 
             # dispatch / combine: a2a of routed activations both ways
             a2a_rank = (tokens * self.top_k / ep * (ep - 1) / ep
@@ -211,9 +234,11 @@ class FlopByteLedger:
                 f = row[r] * gemm_per_tok
                 by_rate["int8" if fp4_mask[r] else "bf16"] += f
                 flops["expert_gemm"] += f
+                wb = w_slab * (BYTES_FP4 if fp4_mask[r] else BYTES_BF16)
+                if fp4_mask[r] and not self.fused:
+                    wb += w_slab * 2.0 * BYTES_BF16  # dequant round-trip
                 hbm["expert_gemm"] += (
-                    w_slab * (BYTES_FP4 if fp4_mask[r] else BYTES_BF16)
-                    + row[r] * self.d * BYTES_BF16 * 4.0)
+                    wb + row[r] * self.d * BYTES_BF16 * 4.0)
             pred["expert_gemm"] += max(
                 self._expert_gemm_s(row[r], bool(fp4_mask[r]))
                 for r in range(ep))

@@ -827,6 +827,52 @@ def check_elastic_kill_rejoin_under_ep():
     assert err < 5e-5, err
 
 
+def check_kernel_fp4_parity_under_ep():
+    """Pallas grouped FP4 FFN + quantize kernels wired into the hot loop
+    (interpret mode on CPU): FP4 genuinely fires on the (2,4) mesh and the
+    kernel output matches the jnp fallback *at the same sharding* to
+    float-reassociation noise.  (Local-vs-mesh is NOT compared under FP4:
+    the per-tensor global scale is computed per weight slab, so the local
+    one-slab and mesh four-slab quantizations legitimately differ.)"""
+    from repro.kernels import ops as kops
+    cfg, p, x, mod = _moe_setup()
+    p = dict(p)   # skew routing: rank 0 hot + all-vision -> FP4 fires
+    p["router"] = p["router"].at[:, 0].add(3.0).at[:, 1].add(2.5)
+    vis = jnp.ones_like(mod)
+    rcfg = ReaLBConfig(gate_gamma=1)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+    def run(local):
+        if local:
+            return ep_moe.ep_moe_forward(
+                p, x, cfg, rcfg, jnp.zeros((1, 4)), vis, mode="dispatch")
+        with use_mesh(mesh):
+            m = jnp.zeros(ep_moe.moe_state_shape(mesh, 4))
+            return jax.jit(lambda p, x, m, mod: ep_moe.ep_moe_forward(
+                p, x, cfg, rcfg, m, mod, mode="dispatch"))(p, x, m, vis)
+
+    kops.set_ffn_backend("interpret")
+    try:
+        assert kops.ffn_fused()
+        y_loc_k, _, aux_loc = run(local=True)
+        y_mesh_k, _, aux_mesh = run(local=False)
+    finally:
+        kops.set_ffn_backend(None)
+    assert float(aux_loc["fp4_ranks"]) >= 1.0, float(aux_loc["fp4_ranks"])
+    assert float(aux_mesh["fp4_ranks"]) >= 1.0, float(aux_mesh["fp4_ranks"])
+    y_loc_j, _, _ = run(local=True)          # default backend: jnp on CPU
+    y_mesh_j, _, _ = run(local=False)
+    d_loc = float(jnp.max(jnp.abs(y_loc_k - y_loc_j)))
+    d_mesh = float(jnp.max(jnp.abs(y_mesh_k - y_mesh_j)))
+    assert d_loc < 1e-3, d_loc
+    assert d_mesh < 1e-3, d_mesh
+    # and the quantization really happened: FP4 output != a bf16 run
+    y_off, _, _ = ep_moe.ep_moe_forward(
+        p, x, cfg, ReaLBConfig(enabled=False), jnp.zeros((1, 4)), vis,
+        mode="dispatch")
+    assert float(jnp.max(jnp.abs(y_mesh_k - y_off))) > 1e-6
+
+
 CHECKS = {k[len("check_"):]: v for k, v in list(globals().items())
           if k.startswith("check_")}
 

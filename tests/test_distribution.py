@@ -30,6 +30,7 @@ CHECKS = [
     "elastic_reshard",
     "weighted_split_under_ep",
     "elastic_kill_rejoin_under_ep",
+    "kernel_fp4_parity_under_ep",
 ]
 
 

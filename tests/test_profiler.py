@@ -80,8 +80,11 @@ def test_ledger_bf16_hand_counts(lcfg):
 
 def test_ledger_fp4_hot_rank_attribution(lcfg):
     """fp4_layers=k attributes FP4 (int8-rate flops, 4.25-bit slabs,
-    quantize traffic) to the k most-loaded ranks of each layer."""
-    led = FlopByteLedger(lcfg, ep=EP)
+    quantize traffic) to the k most-loaded ranks of each layer.  Runs
+    fused (the kernel-wired hot loop): packed slabs stream with no BF16
+    round-trip and the transformation hides inside the dispatch window."""
+    from repro.configs.base import MIGRATION_BW_DEFAULT
+    led = FlopByteLedger(lcfg, ep=EP, fused=True)
     loads = np.array([[6.0, 2.0, 1.0, 1.0]])
     it = led.account(_stats(loads), fp4_layers=1.0, tokens=10.0,
                      batch_tokens=16.0)
@@ -89,9 +92,13 @@ def test_ledger_fp4_hot_rank_attribution(lcfg):
     w_slab = led.e_loc * led.mult * led.d * led.d_ff
     assert it.flops_by_rate["int8"] == pytest.approx(6.0 * gemm_per_tok)
     assert it.flops_by_rate["bf16"] == pytest.approx(4.0 * gemm_per_tok)
+    # BF16-read + packed-write traffic is real either way; fusion only
+    # changes the *visible seconds* (excess over the dispatch window)
     q_bytes = w_slab * (BYTES_BF16 + BYTES_FP4)
     assert it.hbm_bytes["quantize_fp4"] == pytest.approx(q_bytes)
-    assert it.pred_s["quantize_fp4"] == pytest.approx(q_bytes / HBM_BW)
+    disp = led._dispatch_s(10.0 * led.top_k, MIGRATION_BW_DEFAULT)
+    assert it.pred_s["quantize_fp4"] == pytest.approx(
+        max(0.0, q_bytes / HBM_BW - disp))
     # the hot rank streams the packed slab, the cold ranks BF16
     assert it.hbm_bytes["expert_gemm"] == pytest.approx(
         3 * w_slab * BYTES_BF16 + w_slab * BYTES_FP4
@@ -102,6 +109,30 @@ def test_ledger_fp4_hot_rank_attribution(lcfg):
     assert it_all.flops_by_rate["bf16"] == 0.0
     assert it_all.pred_s["expert_gemm"] <= it.pred_s["expert_gemm"]
     assert PEAK_INT8 > PEAK_BF16
+
+
+def test_ledger_unfused_charges_dequant_round_trip(lcfg):
+    """fused=False (the jnp fallback): every FP4 rank pays the dequantized
+    BF16 slab round-trip on expert_gemm, and the transformation is a fully
+    visible standalone stage (bytes + per-stage launch overhead)."""
+    loads = np.array([[6.0, 2.0, 1.0, 1.0]])
+    kw = dict(fp4_layers=1.0, tokens=10.0, batch_tokens=16.0)
+    led_f = FlopByteLedger(lcfg, ep=EP, fused=True)
+    led_u = FlopByteLedger(lcfg, ep=EP)      # fused defaults to False
+    assert led_f.fused and not led_u.fused
+    it_f = led_f.account(_stats(loads), **kw)
+    it_u = led_u.account(_stats(loads), **kw)
+    w_slab = led_u.e_loc * led_u.mult * led_u.d * led_u.d_ff
+    # exactly one FP4 rank -> exactly one slab's write+read round-trip
+    assert (it_u.hbm_bytes["expert_gemm"] - it_f.hbm_bytes["expert_gemm"]
+            ) == pytest.approx(w_slab * 2.0 * BYTES_BF16)
+    assert it_u.pred_s["quantize_fp4"] == pytest.approx(
+        led_u._quantize_s() + FIXED_US * 1e-6)
+    assert it_u.pred_s["quantize_fp4"] > it_f.pred_s["quantize_fp4"]
+    # the quantize traffic itself is identical — only visibility differs
+    assert it_u.hbm_bytes["quantize_fp4"] == pytest.approx(
+        it_f.hbm_bytes["quantize_fp4"])
+    assert it_u.flops == it_f.flops and it_u.flops_by_rate == it_f.flops_by_rate
 
 
 def test_ledger_mirrors_costmodel_formulas(lcfg):
@@ -116,14 +147,23 @@ def test_ledger_mirrors_costmodel_formulas(lcfg):
                        lcfg.moe.num_experts, lcfg.moe.top_k, n_moe)
     led = FlopByteLedger(lcfg, ep=EP)
     assert led.mult == 3  # olmoe is swiglu; costmodel hardcodes 3.0
+    for fused in (False, True):
+        led_x = FlopByteLedger(lcfg, ep=EP, fused=fused)
+        for t in (0.0, 7.0, 513.0):
+            for fp4 in (False, True):
+                assert led_x._expert_gemm_s(t, fp4) == pytest.approx(
+                    cm.expert_gemm_time(t, g, EP, fp4, fused=fused))
+        for disp in (0.0, 3e-6, 1e-3):
+            assert led_x._quantize_visible_s(disp) == pytest.approx(
+                cm.quantize_visible_time(g, EP, disp, fused=fused))
     for t in (0.0, 7.0, 513.0):
-        for fp4 in (False, True):
-            assert led._expert_gemm_s(t, fp4) == pytest.approx(
-                cm.expert_gemm_time(t, g, EP, fp4))
         assert led._dispatch_s(t, cm.ICI_BW) == pytest.approx(
             cm.dispatch_time(t, EP, g.d_model))
         assert led._nongemm_s(t) == pytest.approx(cm.nongemm_time(t, g))
     assert led._quantize_s() == pytest.approx(cm.quantize_time(g, EP))
+    # costmodel default fused=True == what the kernel-wired hot loop runs
+    assert cm.expert_gemm_time(7.0, g, EP, True) == pytest.approx(
+        FlopByteLedger(lcfg, ep=EP, fused=True)._expert_gemm_s(7.0, True))
 
 
 def test_hw_constants_single_sourced():
@@ -251,28 +291,37 @@ def moe_setup():
 
 @pytest.mark.slow
 @pytest.mark.parametrize("mode", ["dispatch", "broadcast"])
-def test_instrumented_prefixes_bitwise_match_fused(moe_setup, mode):
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_instrumented_prefixes_bitwise_match_fused(moe_setup, mode, backend):
     """The final stop_stage prefix IS the fused layer: y / m_state are
-    bitwise identical, and every stage gets a non-negative timing."""
+    bitwise identical, and every stage gets a non-negative timing.  Runs
+    once on the jnp fallback and once with the Pallas grouped FP4 FFN /
+    quantize kernels wired in (interpret mode) — the stop_stage prefix
+    machinery must stay bitwise-transparent either way."""
     import jax
     import jax.numpy as jnp
 
     from repro.core import ep_moe
+    from repro.kernels import ops as kops
     cfg, p, x, mod = moe_setup
     # virtual 4-rank EP group (m_state trailing dim), gate_gamma=1 opens
     # the LB gate and m=0 drops the modality threshold so quantize_fp4
     # really runs on the hot ranks
     rcfg = ReaLBConfig(gate_gamma=1)
     m = jnp.zeros((1, EP))
-    seconds, out = time_moe_phases(p, x, cfg, rcfg, m, mode=mode,
-                                   modality=mod, repeats=1, warmup=1)
-    assert set(seconds) == set(MOE_STAGES[mode])
-    assert all(v >= 0.0 for v in seconds.values())
-    y, m2, aux = out
+    kops.set_ffn_backend(backend)
+    try:
+        seconds, out = time_moe_phases(p, x, cfg, rcfg, m, mode=mode,
+                                       modality=mod, repeats=1, warmup=1)
+        assert set(seconds) == set(MOE_STAGES[mode])
+        assert all(v >= 0.0 for v in seconds.values())
+        y, m2, aux = out
 
-    fused = jax.jit(lambda p_, x_, m_: ep_moe.ep_moe_forward(
-        p_, x_, cfg, rcfg, m_, mod, mode=mode))
-    y_ref, m_ref, aux_ref = fused(p, x, m)
+        fused = jax.jit(lambda p_, x_, m_: ep_moe.ep_moe_forward(
+            p_, x_, cfg, rcfg, m_, mod, mode=mode))
+        y_ref, m_ref, aux_ref = fused(p, x, m)
+    finally:
+        kops.set_ffn_backend(None)
     assert np.asarray(y).tobytes() == np.asarray(y_ref).tobytes()
     assert np.asarray(m2).tobytes() == np.asarray(m_ref).tobytes()
     assert set(aux) == set(aux_ref)
