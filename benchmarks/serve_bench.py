@@ -250,6 +250,14 @@ def parse_args(argv=None):
                          "reconcile with benchmarks/profile_report.py. "
                          "Under --arm all / kill-rejoin the profile "
                          "covers the last run only (like --trace-out)")
+    ap.add_argument("--sentinel", action="store_true",
+                    help="arm the repro.analysis runtime sentinel for "
+                         "the run: guard the hot loop against "
+                         "unsanctioned device->host syncs and count jit "
+                         "compiles per engine entry point")
+    ap.add_argument("--sentinel-out", default=None, metavar="PATH",
+                    help="write the sentinel report JSON (implies "
+                         "--sentinel)")
     ap.add_argument("--xprof-out", default=None, metavar="DIR",
                     help="capture a programmatic jax.profiler device "
                          "trace of the serve loop into DIR (open with "
@@ -397,6 +405,12 @@ def serve(args, cfg, params, specs: List[RequestSpec],
         injector = FaultInjector([(args.fail_iter, "fail", args.fail_rank),
                                   (args.rejoin_iter, "rejoin",
                                    args.fail_rank)])
+    sentinel = None
+    if getattr(args, "sentinel", False) or getattr(args, "sentinel_out",
+                                                   None):
+        from repro.analysis.sentinel import Sentinel
+        sentinel = Sentinel()
+        sentinel.arm()
     eng = Engine(cfg, params, rcfg, max_slots=args.slots,
                  max_len=args.max_len, prefill_budget=args.prefill_budget,
                  text_reserve=args.text_reserve, clock=clock,
@@ -408,7 +422,7 @@ def serve(args, cfg, params, specs: List[RequestSpec],
                  migrate_bytes_per_iter=args.migrate_bytes_per_iter
                  or None,
                  elastic=elastic, fault_injector=injector, tracer=tracer,
-                 profiler=profiler)
+                 profiler=profiler, sentinel=sentinel)
 
     xprof_out = getattr(args, "xprof_out", None)
     if xprof_out:
@@ -496,6 +510,18 @@ def serve(args, cfg, params, specs: List[RequestSpec],
             and getattr(manager, "audit", None) is not None:
         manager.audit.to_jsonl(audit_out)
         print(f"wrote {len(manager.audit)} replan decisions -> {audit_out}")
+    if sentinel is not None:
+        sentinel.disarm()
+        rep = sentinel.report()
+        print(f"sentinel: ok={rep['ok']} "
+              f"syncs={len(rep['violations'])} "
+              f"compiles={rep['compile_counts']} "
+              f"rebuilds={len(rep['rebuilds'])}")
+        sent_out = getattr(args, "sentinel_out", None)
+        if sent_out:
+            with open(sent_out, "w") as f:
+                json.dump(rep, f, indent=2)
+            print(f"wrote sentinel report -> {sent_out}")
     return telemetry, eng, realized, time.monotonic() - t0
 
 

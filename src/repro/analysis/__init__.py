@@ -1,0 +1,50 @@
+"""repro.analysis — hot-loop invariant checkers.
+
+Three layers, one goal: ReaLB's "zero scheduling overhead" claim only
+holds while the serving hot loop stays free of silent regressions — a
+stray host sync, an f64 upcast, an extra collective, or a shape-driven
+recompile after a replan would erase the fused-kernel win without any
+functional test failing.  This package machine-checks those properties:
+
+* :mod:`repro.analysis.lint` — AST lint over ``src/`` (RPL001–RPL007):
+  repo-specific rules for traced-value coercion, hardware-constant
+  single-sourcing, null-object hot-loop guards, staged-commit table
+  discipline, integral byte accounting and clock hygiene.
+* :mod:`repro.analysis.jaxpr_audit` — trace-time audit of the fused
+  step's jaxpr: no callbacks on the hot path, no f64, widening
+  ``convert_element_type`` on the FP4 path only via an allowlist, and a
+  collective census (count + bytes of psum/all_to_all/ppermute per
+  layer) that reconciles with the compiled-HLO census
+  (:func:`repro.launch.hlo_analysis.collective_census`) and the
+  :class:`repro.obs.ledger.FlopByteLedger` graph-level prediction.
+* :mod:`repro.analysis.sentinel` — runtime sentinel the engine and
+  ``serve_bench`` opt into: guards implicit device→host syncs inside
+  iterations (sanctioned pull sites whitelisted) and counts jit cache
+  misses per entry point, asserting zero recompiles after warmup.
+
+``benchmarks/analysis_report.py`` runs all three on the FP4-active
+profiled arm and emits a JSON invariant report (non-zero exit on any
+violation); CI uploads it as the ``analysis`` job artifact.
+"""
+from repro.analysis.lint import Finding, lint_paths, lint_source
+
+__all__ = [
+    "AuditViolation", "audit_jaxpr", "collective_census_jaxpr",
+    "Finding", "lint_paths", "lint_source",
+    "Sentinel", "NULL_SENTINEL",
+]
+
+_LAZY = {
+    "AuditViolation": "jaxpr_audit", "audit_jaxpr": "jaxpr_audit",
+    "collective_census_jaxpr": "jaxpr_audit",
+    "Sentinel": "sentinel", "NULL_SENTINEL": "sentinel",
+}
+
+
+def __getattr__(name):
+    # jaxpr_audit/sentinel pull in jax; the lint CLI must not
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f"repro.analysis.{_LAZY[name]}")
+        return getattr(mod, name)
+    raise AttributeError(name)

@@ -1,0 +1,299 @@
+"""Runtime sentinel — the dynamic third of the invariant checker.
+
+Two hot-loop properties that no functional test catches when they
+regress:
+
+* **Implicit device→host syncs.**  A stray ``float(jax_array)`` /
+  ``int()`` / ``bool()`` inside the iteration blocks the Python thread
+  on device completion and serializes dispatch.  The sentinel guards
+  the engine's hot window two ways: it arms ``jax.transfer_guard``
+  (authoritative on real accelerators, where device→host is a physical
+  transfer) **and** it hooks ``jax.Array``'s host-materialisation seam
+  (the ``_value`` cache property), which catches scalar coercions even
+  on the CPU backend where arrays already live in host memory and the
+  transfer guard never fires.  Sanctioned pull sites (sampling,
+  telemetry/statistics reads) open a :meth:`Sentinel.sanctioned`
+  window; anything else is recorded as a violation (or raised, under
+  ``strict=True``).
+
+  CPU-backend caveat (documented, deliberate): buffer-protocol reads
+  (``np.asarray`` on a committed array) are zero-copy host loads on
+  CPU and bypass ``_value``; on TPU/GPU they do go through the guarded
+  transfer path.  The scalar-coercion class — the way accidental syncs
+  are actually written — is caught on every backend.
+
+* **Recompiles after warmup.**  Replans, table commits, elastic
+  kill/rejoin and chunked-prefill buckets must all hit the jit cache.
+  Entry points register with :meth:`register_entry`; after
+  :meth:`mark_warm` every additional compilation (tracked via the
+  jitted function's ``_cache_size``) is a violation.  A deliberate
+  re-jit (the capacity-resize band) is declared with
+  :meth:`note_rebuild` and reported separately.
+
+The null object :data:`NULL_SENTINEL` follows the repo's tracer/
+profiler discipline: ``enabled`` is False, every context manager is a
+shared no-op, and an unsentineled engine is bitwise identical to one
+predating this module.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+__all__ = ["Sentinel", "NULL_SENTINEL", "SyncViolation"]
+
+
+@dataclasses.dataclass
+class SyncViolation:
+    where: str          # python source "file:line (function)"
+    context: str        # engine phase label if known
+    kind: str = "host_sync"
+
+
+class _HostPullGuard:
+    """Class-level hook on ``jax.Array``'s host materialisation.
+
+    Patches ``ArrayImpl._value`` (the cached numpy view every scalar
+    coercion — ``__float__`` / ``__int__`` / ``__bool__`` /
+    ``.tolist()`` / ``jax.device_get`` — funnels through) with a
+    thread-local armed/suspended flag.  Installed once per armed
+    sentinel; always uninstalled on exit.
+    """
+
+    def __init__(self, on_violation: Callable[[], None]):
+        self._on_violation = on_violation
+        self._tls = threading.local()
+        self._orig = None
+        self._installed = False
+
+    # thread-local depth counters: hot > 0 and sanctioned == 0 -> guarded
+    def _depth(self, name: str) -> int:
+        return getattr(self._tls, name, 0)
+
+    def _bump(self, name: str, d: int) -> None:
+        setattr(self._tls, name, self._depth(name) + d)
+
+    def install(self) -> None:
+        if self._installed:
+            return
+        from jax._src import array as _jarray
+        impl = _jarray.ArrayImpl
+        self._orig = impl.__dict__["_value"]
+        orig_get = self._orig.fget if isinstance(self._orig, property) \
+            else self._orig
+        guard = self
+
+        def guarded(self_arr):
+            if guard._depth("hot") > 0 and guard._depth("sanctioned") == 0:
+                guard._on_violation()
+            return orig_get(self_arr)
+
+        impl._value = property(guarded)
+        self._installed = True
+
+    def uninstall(self) -> None:
+        if not self._installed:
+            return
+        from jax._src import array as _jarray
+        _jarray.ArrayImpl._value = self._orig
+        self._installed = False
+
+    @contextlib.contextmanager
+    def hot(self):
+        self._bump("hot", 1)
+        try:
+            yield
+        finally:
+            self._bump("hot", -1)
+
+    @contextlib.contextmanager
+    def sanctioned(self):
+        self._bump("sanctioned", 1)
+        try:
+            yield
+        finally:
+            self._bump("sanctioned", -1)
+
+
+def _caller_site(skip_prefixes=("repro/analysis", "jax/_src",
+                                "site-packages/jax")) -> str:
+    import traceback
+    for frame in reversed(traceback.extract_stack(limit=24)[:-2]):
+        fn = frame.filename.replace("\\", "/")
+        if not any(p in fn for p in skip_prefixes):
+            return f"{fn}:{frame.lineno} ({frame.name})"
+    return "<unknown>"
+
+
+class Sentinel:
+    """Arms the transfer/recompile invariants around a serving run."""
+
+    enabled = True
+
+    def __init__(self, strict: bool = False):
+        #: strict: raise on the first unsanctioned host pull instead of
+        #: recording it (tests want the traceback; reports want totals)
+        self.strict = strict
+        self.violations: List[SyncViolation] = []
+        self.sanctioned_pulls: Dict[str, int] = {}
+        self.rebuilds: List[str] = []
+        self._entries: Dict[str, List[Any]] = {}
+        self._warm: Optional[Dict[str, int]] = None
+        self._armed = False
+        self._phase = ""
+        self._guard = _HostPullGuard(self._record_violation)
+
+    # -- arming ----------------------------------------------------------
+    def __enter__(self):
+        self.arm()
+        return self
+
+    def __exit__(self, *exc):
+        self.disarm()
+        return False
+
+    def arm(self) -> None:
+        if not self._armed:
+            self._guard.install()
+            self._armed = True
+
+    def disarm(self) -> None:
+        if self._armed:
+            self._guard.uninstall()
+            self._armed = False
+
+    def _record_violation(self) -> None:
+        v = SyncViolation(where=_caller_site(), context=self._phase)
+        self.violations.append(v)
+        if self.strict:
+            raise RuntimeError(
+                f"unsanctioned device->host sync inside the serving hot "
+                f"loop at {v.where} (phase {v.context or '?'}): wrap a "
+                "legitimate pull site in sentinel.sanctioned(label)")
+
+    # -- transfer windows ------------------------------------------------
+    @contextlib.contextmanager
+    def hot(self, phase: str = "iter"):
+        """The guarded window: one serving iteration's compute+dispatch.
+        Also arms jax's own transfer guard — a no-op on CPU (host==device
+        memory) but authoritative on real accelerators."""
+        prev = self._phase
+        self._phase = phase
+        try:
+            with jax.transfer_guard_device_to_host("disallow"):
+                with self._guard.hot():
+                    yield
+        finally:
+            self._phase = prev
+
+    @contextlib.contextmanager
+    def sanctioned(self, label: str):
+        """A whitelisted pull site inside the hot window (sampling,
+        telemetry reads, timing)."""
+        self.sanctioned_pulls[label] = self.sanctioned_pulls.get(label, 0) + 1
+        with jax.transfer_guard_device_to_host("allow"):
+            with self._guard.sanctioned():
+                yield
+
+    # -- recompile accounting --------------------------------------------
+    def register_entry(self, name: str, jitted: Any) -> None:
+        """Track a jit entry point.  Re-registering the same name (an
+        engine rebuild) keeps the old generation's compile counts — the
+        total is cumulative across generations, so a rebuild's fresh
+        compilations are visible post-warmup."""
+        gens = self._entries.setdefault(name, [])
+        if not any(g is jitted for g in gens):
+            gens.append(jitted)
+
+    def note_rebuild(self, reason: str) -> None:
+        """A deliberate re-jit (e.g. the capacity-resize band)."""
+        self.rebuilds.append(reason)
+
+    def _compiles(self, name: str) -> int:
+        total = 0
+        for fn in self._entries.get(name, []):
+            try:
+                total += int(fn._cache_size())
+            except Exception:
+                pass
+        return total
+
+    def compile_counts(self) -> Dict[str, int]:
+        return {n: self._compiles(n) for n in sorted(self._entries)}
+
+    def mark_warm(self) -> Dict[str, int]:
+        """End of warmup: snapshot per-entry compile counts.  Every
+        compilation after this point is a recompile violation."""
+        self._warm = self.compile_counts()
+        return dict(self._warm)
+
+    def post_warm_recompiles(self) -> Dict[str, int]:
+        if self._warm is None:
+            return {}
+        now = self.compile_counts()
+        return {n: now[n] - self._warm.get(n, 0) for n in now
+                if now[n] - self._warm.get(n, 0) > 0}
+
+    # -- report ----------------------------------------------------------
+    @property
+    def ok(self) -> bool:
+        return not self.violations and not self.post_warm_recompiles()
+
+    def report(self) -> Dict[str, Any]:
+        return {
+            "ok": self.ok,
+            "violations": [dataclasses.asdict(v) for v in self.violations],
+            "sanctioned_pulls": dict(sorted(self.sanctioned_pulls.items())),
+            "compile_counts": self.compile_counts(),
+            "warm_counts": dict(self._warm) if self._warm else None,
+            "post_warm_recompiles": self.post_warm_recompiles(),
+            "rebuilds": list(self.rebuilds),
+        }
+
+
+class _NullSentinel:
+    """Shared no-op: an unsentineled engine pays nothing."""
+
+    enabled = False
+    strict = False
+    violations: List[SyncViolation] = []
+    rebuilds: List[str] = []
+
+    _NULL_CTX = contextlib.nullcontext()
+
+    def hot(self, phase: str = "iter"):
+        return self._NULL_CTX
+
+    def sanctioned(self, label: str):
+        return self._NULL_CTX
+
+    def register_entry(self, name: str, jitted: Any) -> None:
+        pass
+
+    def note_rebuild(self, reason: str) -> None:
+        pass
+
+    def mark_warm(self) -> Dict[str, int]:
+        return {}
+
+    def post_warm_recompiles(self) -> Dict[str, int]:
+        return {}
+
+    def compile_counts(self) -> Dict[str, int]:
+        return {}
+
+    @property
+    def ok(self) -> bool:
+        return True
+
+    def report(self) -> Dict[str, Any]:
+        return {"ok": True, "violations": [], "sanctioned_pulls": {},
+                "compile_counts": {}, "warm_counts": None,
+                "post_warm_recompiles": {}, "rebuilds": []}
+
+
+NULL_SENTINEL = _NullSentinel()

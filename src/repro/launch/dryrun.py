@@ -50,11 +50,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     mesh = mesh_for(mesh_kind)
     n_dev = mesh.devices.size
     rcfg = ReaLBConfig(**(realb_overrides or {}))
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered = lower_cell(cfg, shape, mesh, rcfg=rcfg)
-    t1 = time.time()
+    t1 = time.perf_counter()
     compiled = lowered.compile()
-    t2 = time.time()
+    t2 = time.perf_counter()
 
     mem = compiled.memory_analysis()
     print(mem)  # proves it fits
@@ -67,8 +67,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     # analyze the post-SPMD HLO ourselves (dots, fusion IO, collectives).
     an = hlo_analysis.analyze(hlo)
     flops_dev = float(an["flops"])
-    bytes_dev = float(an["traffic_bytes"])
-    coll_total = float(an["collective_bytes"])
+    bytes_dev = int(an["traffic_bytes"])
+    coll_total = int(an["collective_bytes"])
     terms = roofline.roofline_terms(flops_dev, bytes_dev, coll_total)
     mf = roofline.model_flops(cfg, shape)
     hlo_total_flops = flops_dev * n_dev

@@ -48,6 +48,12 @@ _SKIP_TRAFFIC = {
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute", "ragged-all-to-all")
 
+#: jaxpr collective primitive names, as they appear as the leaf of an
+#: op_name metadata name stack when the *traced program* issued the
+#: collective (vs. partitioner-inserted resharding collectives)
+_USER_COLL_PRIMS = ("psum", "all_to_all", "ppermute", "all_gather",
+                    "reduce_scatter", "pmax", "pmin")
+
 
 @dataclass
 class Instr:
@@ -62,20 +68,22 @@ class Instr:
 
 @dataclass
 class Cost:
+    # byte counts are exact integers end-to-end (shapes x trip counts);
+    # only the flop count stays float (it can exceed 2**53 on big models)
     flops: float = 0.0
-    traffic: float = 0.0
-    coll: float = 0.0
-    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    traffic: int = 0
+    coll: int = 0
+    coll_by_kind: Dict[str, int] = field(default_factory=dict)
 
     def __iadd__(self, o: "Cost"):
         self.flops += o.flops
         self.traffic += o.traffic
         self.coll += o.coll
         for k, v in o.coll_by_kind.items():
-            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0) + v
         return self
 
-    def scaled(self, m: float) -> "Cost":
+    def scaled(self, m: int) -> "Cost":
         return Cost(self.flops * m, self.traffic * m, self.coll * m,
                     {k: v * m for k, v in self.coll_by_kind.items()})
 
@@ -83,8 +91,8 @@ class Cost:
         kinds = set(self.coll_by_kind) | set(o.coll_by_kind)
         return Cost(max(self.flops, o.flops), max(self.traffic, o.traffic),
                     max(self.coll, o.coll),
-                    {k: max(self.coll_by_kind.get(k, 0.0),
-                            o.coll_by_kind.get(k, 0.0)) for k in kinds})
+                    {k: max(self.coll_by_kind.get(k, 0),
+                            o.coll_by_kind.get(k, 0)) for k in kinds})
 
 
 def _shape_info(text: str) -> Tuple[int, int, Tuple[int, ...]]:
@@ -268,12 +276,11 @@ def analyze(hlo: str) -> Dict[str, float]:
     }
 
 
-def top_collectives(hlo: str, n: int = 12) -> List[Dict]:
-    """The n largest collective instructions (with loop multipliers) —
-    the §Perf iteration starts from this list."""
-    comps, entry = parse_module(hlo)
-    # compute multiplier per computation via one pass from entry
-    mult: Dict[str, float] = {entry: 1.0}
+def _comp_multipliers(comps: Dict[str, Dict[str, Instr]],
+                      entry: str) -> Dict[str, int]:
+    """Execution multiplier per computation reachable from `entry`:
+    the product of enclosing `while` trip counts (known_trip_count)."""
+    mult: Dict[str, int] = {entry: 1}
     stack = [entry]
     while stack:
         cname = stack.pop()
@@ -296,18 +303,92 @@ def top_collectives(hlo: str, n: int = 12) -> List[Dict]:
                     if mult.get(callee, 0) < m:
                         mult[callee] = m
                         stack.append(callee)
+    return mult
+
+
+def _coll_kind(op: str) -> Optional[str]:
+    if op.endswith("-done"):
+        return None  # async pair: counted at -start
+    for k in _COLLECTIVES:
+        if op.startswith(k):
+            return k
+    return None
+
+
+def collective_census(hlo: str) -> Dict:
+    """Post-XLA collective census: per-kind instruction counts and
+    payload bytes (per-device shapes, `while` trip counts multiplied
+    through), split into the steady-state per-layer body (instructions
+    inside a known-trip-count loop) and one-off collectives outside it.
+
+    Returns ``{"total": {kind: {count, bytes}},
+               "user": {kind: {count, bytes}},        # see below
+               "per_layer": {kind: {count, bytes}},   # one trip's worth
+               "outside": {kind: {count, bytes}},
+               "layers": L}``.
+
+    ``user`` restricts to instructions whose ``op_name`` metadata (the
+    jax name stack) ends in a collective *primitive* — collectives the
+    traced program issued, as opposed to all-reduces the SPMD
+    partitioner inserts to resolve shardings.  The jaxpr-level census
+    (:func:`repro.analysis.jaxpr_audit.collective_census_jaxpr`) and the
+    :meth:`FlopByteLedger.predict_graph_census` prediction reconcile
+    against ``user`` (counts may shrink where XLA merges or hoists
+    loop-invariant psums; bytes must agree within a small tolerance).
+    """
+    comps, entry = parse_module(hlo)
+    mult = _comp_multipliers(comps, entry)
+    total: Dict[str, Dict[str, int]] = {}
+    user: Dict[str, Dict[str, int]] = {}
+    per_layer: Dict[str, Dict[str, int]] = {}
+    outside: Dict[str, Dict[str, int]] = {}
+    layers = 0
+
+    def bump(table, kind, count, nbytes):
+        ent = table.setdefault(kind, {"count": 0, "bytes": 0})
+        ent["count"] += count
+        ent["bytes"] += nbytes
+
+    for cname, defs in comps.items():
+        m = mult.get(cname, 0)
+        if m == 0:
+            continue  # unreachable from entry
+        for ins in defs.values():
+            kind = _coll_kind(ins.op)
+            if kind is None:
+                continue
+            b = max(ins.out_bytes, sum(
+                defs[o].out_bytes for o in ins.operands if o in defs))
+            bump(total, kind, m, b * m)
+            nm = re.search(r'op_name="([^"]*)"', ins.attrs)
+            leaf = nm.group(1).rsplit("/", 1)[-1] if nm else ""
+            if any(leaf.startswith(p) for p in _USER_COLL_PRIMS):
+                bump(user, kind, m, b * m)
+            if m > 1:
+                layers = max(layers, m)
+                bump(per_layer, kind, 1, b)
+            else:
+                bump(outside, kind, 1, b)
+    return {"total": total, "user": user, "per_layer": per_layer,
+            "outside": outside, "layers": layers}
+
+
+def top_collectives(hlo: str, n: int = 12) -> List[Dict]:
+    """The n largest collective instructions (with loop multipliers) —
+    the §Perf iteration starts from this list."""
+    comps, entry = parse_module(hlo)
+    mult = _comp_multipliers(comps, entry)
     out = []
     for cname, defs in comps.items():
         for ins in defs.values():
-            if any(ins.op.startswith(k) for k in _COLLECTIVES) \
-                    and not ins.op.endswith("-done"):
+            if _coll_kind(ins.op) is not None:
                 b = max(ins.out_bytes, sum(
                     defs[o].out_bytes for o in ins.operands if o in defs))
                 meta = re.search(r'op_name="([^"]*)"', ins.attrs)
                 out.append({
                     "op": ins.op, "bytes": b,
-                    "mult": mult.get(cname, 1.0),
-                    "total": b * mult.get(cname, 1.0),
+                    "mult": mult.get(cname, 1),
+                    "total": b * mult.get(cname, 1),
                     "where": (meta.group(1) if meta else cname)[:140],
                 })
     out.sort(key=lambda r: -r["total"])
@@ -317,23 +398,7 @@ def top_collectives(hlo: str, n: int = 12) -> List[Dict]:
 def top_traffic(hlo: str, n: int = 15) -> List[Dict]:
     """The n largest memory-traffic instructions (with loop multipliers)."""
     comps, entry = parse_module(hlo)
-    mult: Dict[str, float] = {entry: 1.0}
-    stack = [entry]
-    while stack:
-        cname = stack.pop()
-        m = mult[cname]
-        for ins in comps.get(cname, {}).values():
-            trip = 1
-            tm = _TRIP_RE.search(ins.attrs)
-            if tm:
-                trip = int(tm.group(1))
-            for key in ("body", "condition", "calls", "to_apply",
-                        "true_computation", "false_computation"):
-                for callee in _called(ins.attrs, key):
-                    factor = m * (trip if ins.op == "while" else 1)
-                    if mult.get(callee, 0) < factor:
-                        mult[callee] = factor
-                        stack.append(callee)
+    mult = _comp_multipliers(comps, entry)
     rows = []
     for cname, defs in comps.items():
         for ins in defs.values():
@@ -344,8 +409,8 @@ def top_traffic(hlo: str, n: int = 15) -> List[Dict]:
                 defs[o].out_bytes for o in ins.operands if o in defs)
             meta = re.search(r'op_name="([^"]*)"', ins.attrs)
             rows.append({"op": ins.op, "bytes": io,
-                         "mult": mult.get(cname, 1.0),
-                         "total": io * mult.get(cname, 1.0),
+                         "mult": mult.get(cname, 1),
+                         "total": io * mult.get(cname, 1),
                          "where": (meta.group(1) if meta else cname)[-130:]})
     rows.sort(key=lambda r: -r["total"])
     return rows[:n]

@@ -19,9 +19,11 @@ from __future__ import annotations
 import re
 from typing import Dict, List, Optional, Tuple
 
+from repro.configs.base import MIGRATION_BW_DEFAULT
 from repro.configs.hw import HBM_BW, PEAK_FLOPS  # single-sourced (v5e)
 
-ICI_BW = 50e9                # B/s / link (assignment constant)
+ICI_BW = MIGRATION_BW_DEFAULT  # B/s / link — same constant the cost
+                               # gates and migration planner price at
 
 def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
                    coll_bytes_per_dev: float) -> Dict[str, float]:

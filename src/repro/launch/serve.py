@@ -74,9 +74,9 @@ def main(argv=None):
             req = spec.to_request()
             req.arrival_time = None    # stamp with the wall clock at submit
             eng.submit(req)
-        t0 = time.time()
+        t0 = time.perf_counter()
         done = eng.run()
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
 
     out_toks = sum(len(r.generated) for r in done)
     in_toks = sum(r.prompt_len for r in done)

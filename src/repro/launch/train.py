@@ -95,9 +95,9 @@ def main(argv=None):
         data = DataLoader(dc, multimodal=args.multimodal,
                           d_model=cfg.d_model if args.multimodal else 0,
                           start_step=start)
-        t0 = time.time()
+        t0 = time.perf_counter()
         state = loop.run(state, data, args.steps, start_step=start)
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         print(f"done: {args.steps - start} steps in {dt:.1f}s "
               f"({cfg.param_count()/1e6:.1f}M params)")
     return 0

@@ -363,9 +363,10 @@ def _project_qkv(p: Params, x: jax.Array, xkv: jax.Array, cfg: ModelConfig):
     k = jnp.einsum("btd,dke->btke", xkv, p["wk"].astype(x.dtype))
     v = jnp.einsum("btd,dke->btke", xkv, p["wv"].astype(x.dtype))
     if cfg.qkv_bias:
-        q = q + p["bq"].astype(x.dtype)
-        k = k + p["bk"].astype(x.dtype)
-        v = v + p["bv"].astype(x.dtype)
+        # explicit (1, 1, h, e) broadcast: rank promotion raises
+        q = q + p["bq"].astype(x.dtype)[None, None]
+        k = k + p["bk"].astype(x.dtype)[None, None]
+        v = v + p["bv"].astype(x.dtype)[None, None]
     q = logical_constraint(q, ("batch", None, "heads", None))
     k = logical_constraint(k, ("batch", None, "kv_heads", None))
     v = logical_constraint(v, ("batch", None, "kv_heads", None))
@@ -501,7 +502,7 @@ def cross_decode(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
     """Decode-time cross-attention against prefill-cached memory KV."""
     q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
     if cfg.qkv_bias:
-        q = q + p["bq"].astype(x.dtype)
+        q = q + p["bq"].astype(x.dtype)[None, None]
     q = logical_constraint(q, ("batch", None, "heads", None))
     out = scaled_attention(q, cache["k"].astype(x.dtype),
                            cache["v"].astype(x.dtype),

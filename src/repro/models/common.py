@@ -236,7 +236,9 @@ def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
     xf = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
     y = xf * jax.lax.rsqrt(var + eps)
-    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+    w = (1.0 + scale.astype(jnp.float32)).reshape(
+        (1,) * (x.ndim - 1) + (-1,))    # explicit: rank promotion raises
+    return (y * w).astype(x.dtype)
 
 
 def activation_fn(name: str) -> Callable[[jax.Array], jax.Array]:
@@ -254,6 +256,7 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     """x: [..., S, H, D] (or D rotary slice); positions: broadcastable to [..., S]."""
     d = x.shape[-1]
     freqs = rope_freqs(d, theta)                       # [d/2]
+    freqs = freqs.reshape((1,) * positions.ndim + (-1,))
     angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, d/2]
     # insert head axis
     angles = angles[..., None, :]                      # [..., S, 1, d/2]

@@ -55,9 +55,10 @@ def _ssm_core(p: Params, xz: jax.Array, conv_state: jax.Array,
     # depthwise causal conv1d over seq with carried history
     hist = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
     dc = s_cfg.d_conv
-    x_conv = sum(hist[:, i:i + x.shape[1], :] * p["conv_w"][i].astype(x.dtype)
+    x_conv = sum(hist[:, i:i + x.shape[1], :]
+                 * p["conv_w"][i].astype(x.dtype)[None, None]
                  for i in range(dc))
-    x_conv = x_conv + p["conv_b"].astype(x.dtype)
+    x_conv = x_conv + p["conv_b"].astype(x.dtype)[None, None]
     x_conv = jax.nn.silu(x_conv.astype(jnp.float32))      # [B,S,d_in] f32
     new_conv_state = hist[:, -(dc - 1):, :] if dc > 1 else hist[:, :0, :]
 
@@ -68,10 +69,10 @@ def _ssm_core(p: Params, xz: jax.Array, conv_state: jax.Array,
     dt, b_mat, c_mat = jnp.split(proj, [dtr, dtr + n], axis=-1)
     dt = jnp.einsum("bsr,rd->bsd", dt.astype(x.dtype),
                     p["w_dt"].astype(x.dtype)).astype(jnp.float32)
-    dt = jax.nn.softplus(dt + p["b_dt"])                  # [B,S,d_in]
+    dt = jax.nn.softplus(dt + p["b_dt"][None, None])      # [B,S,d_in]
     a = -jnp.exp(p["a_log"])                              # [d_in,N]
 
-    da = jnp.exp(dt[..., None] * a)                       # [B,S,d_in,N]
+    da = jnp.exp(dt[..., None] * a[None, None])           # [B,S,d_in,N]
     dbx = dt[..., None] * b_mat[:, :, None, :] * x_conv[..., None]
 
     if seq_mode:
@@ -89,7 +90,7 @@ def _ssm_core(p: Params, xz: jax.Array, conv_state: jax.Array,
         new_ssm_state = h[:, 0]
 
     y = jnp.einsum("bsdn,bsn->bsd", h, c_mat)             # [B,S,d_in]
-    y = y + x_conv * p["d_skip"]
+    y = y + x_conv * p["d_skip"][None, None]
     y = y * jax.nn.silu(z.astype(jnp.float32))
     return y.astype(xz.dtype), new_conv_state.astype(xz.dtype), new_ssm_state
 

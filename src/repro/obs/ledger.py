@@ -155,6 +155,46 @@ class FlopByteLedger:
         return (tokens_r * self.d * 6.0) / HBM_BW + 3 * FIXED_US * 1e-6
 
     # --------------------------------------------------------------------
+    def predict_graph_census(self, t_local: int, layers: int,
+                             itemsize: int = 2,
+                             n_slots: Optional[int] = None
+                             ) -> Dict[str, Dict[str, int]]:
+        """Predicted *graph-level* collective census for the mesh
+        (shard_map) dispatch path — the third leg of the jaxpr ↔ HLO ↔
+        ledger reconciliation (``repro.analysis``).
+
+        Unlike :meth:`account` (realized routed bytes), this predicts
+        what the traced graph materially moves: the all-to-alls carry
+        the full capacity buffer ``[ep, cap, d]`` regardless of how many
+        slots are real, so census bytes upper-bound the ledger's routed
+        ``ici_bytes``.  Per layer, ``core/ep_moe.py``'s dispatch path
+        emits exactly 3 all_to_alls (x send, expert-id send, combine
+        return) and 9 psums (counts/visitation globals, slot load/vis,
+        split+dropped scalars, p_mean, z, the fp4 one-hot m_vec).
+
+        ``t_local``: per-device token count entering the MoE layer;
+        ``itemsize``: activation dtype bytes (2 = bf16); ``n_slots``:
+        replication slot count (defaults to n_experts — no replicas).
+        """
+        import math
+        ep = self.ep
+        cap_raw = math.ceil(t_local * self.top_k / ep
+                            * float(self.cfg.moe.capacity_factor))
+        cap = max(8, -(-cap_raw // 8) * 8)   # mirrors ep_moe.py capacity
+        s = int(n_slots) if n_slots is not None else self.n_experts
+        a2a_bytes = (2 * ep * cap * self.d * itemsize   # x out + combine
+                     + ep * cap * 4)                    # eid_send (int32)
+        psum_elems = (ep            # m_vec one-hot [ep]
+                      + 3 * self.n_experts  # counts, vis, p_mean [E]
+                      + 2 * s               # slot_load, slot_vis [S]
+                      + 3)                  # split, dropped, z scalars
+        return {
+            "all_to_all": {"count": 3 * layers,
+                           "bytes": a2a_bytes * layers},
+            "psum": {"count": 9 * layers,
+                     "bytes": 4 * psum_elems * layers},
+        }
+
     def rank_loads(self, moe_stats) -> np.ndarray:
         """``[L, ep]`` realized per-layer per-rank assignment counts from
         the scan's ``aux["moe_stats"]`` (``[L, 2, groups, ep]`` or

@@ -107,8 +107,11 @@ class Profiler:
         self.fwd_s_total = 0.0
         self.model_flops_total = 0.0
         self.flops_total = 0.0
-        self.hbm_bytes_total = 0.0
-        self.ici_bytes_total = 0.0
+        # fractional bytes are correct here: FP4 weights price at 4.25
+        # bits/elem (ledger BYTES_FP4 = 0.53125), so per-iter HBM totals
+        # are analytic floats, not buffer sizes
+        self.hbm_bytes_total = 0.0  # repro-lint: disable=RPL006
+        self.ici_bytes_total = 0.0  # repro-lint: disable=RPL006
         self._meas_s = {ph: 0.0 for ph in PHASES}
         self._pred_s = {ph: 0.0 for ph in PHASES}
         self._scale_ewma: Optional[float] = None

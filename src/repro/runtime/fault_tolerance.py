@@ -110,7 +110,7 @@ class TrainLoop:
         self._install_signals()
         bad_streak = 0
         step = start_step
-        t0 = time.time()
+        t0 = time.perf_counter()
         while step < total_steps and not self._stop:
             batch = next(data_iter)
             new_state, metrics = self.step_fn(state, batch)
@@ -134,8 +134,8 @@ class TrainLoop:
                 state = new_state
                 step += 1
                 if step % self.log_every == 0:
-                    dt = (time.time() - t0) / max(self.log_every, 1)
-                    t0 = time.time()
+                    dt = (time.perf_counter() - t0) / max(self.log_every, 1)
+                    t0 = time.perf_counter()
                     self.log(f"[ft] step {step}: loss={loss:.4f} "
                              f"({dt*1e3:.0f} ms/step)")
                 if step % self.checkpoint_every == 0:

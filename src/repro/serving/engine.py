@@ -74,6 +74,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.sentinel import NULL_SENTINEL
 from repro.configs.base import ModelConfig, ReaLBConfig
 from repro.core import ep_moe
 from repro.models import transformer as tf
@@ -135,8 +136,14 @@ class Engine:
                  migrate_async: bool = False,
                  migrate_bytes_per_iter: Optional[int] = None,
                  elastic=None, fault_injector=None, tracer=None,
-                 profiler=None):
+                 profiler=None, sentinel=None):
         self.cfg, self.params, self.rcfg = cfg, params, rcfg
+        # invariant sentinel (repro.analysis.sentinel.Sentinel); None ->
+        # the shared no-op under the tracer/profiler null-object
+        # discipline.  When armed it guards the iteration hot window
+        # against unsanctioned device->host syncs and counts per-entry
+        # jit compilations (zero recompiles after warmup).
+        self.sentinel = NULL_SENTINEL if sentinel is None else sentinel
         # span tracer (repro.obs.trace.Tracer); None -> the shared no-op
         # singleton, whose calls record nothing and read no clock — an
         # untraced engine is bitwise identical to one predating the obs
@@ -291,6 +298,10 @@ class Engine:
         self._prefill_one = prefill_one
         self._chunk = chunk_step
         self._decode = decode
+        if self.sentinel.enabled:
+            self.sentinel.register_entry("prefill", prefill_one)
+            self.sentinel.register_entry("chunk", chunk_step)
+            self.sentinel.register_entry("decode", decode)
 
     def _place_args(self):
         """The traced table of the current plan — (e2r, local_slot) for a
@@ -530,6 +541,10 @@ class Engine:
         self.cfg = dataclasses.replace(
             self.cfg, moe=dataclasses.replace(self.cfg.moe,
                                               capacity_factor=eff))
+        # a deliberate re-jit: declare it so the sentinel's recompile
+        # report attributes the fresh compilations to the resize band
+        self.sentinel.note_rebuild(
+            f"capacity_factor {cur:.4f}->{eff:.4f}")
         self._build()
 
     # -- cache slot insertion ----------------------------------------------
@@ -563,11 +578,14 @@ class Engine:
         self.scheduler.submit(req)
 
     def _sample(self, logits: jax.Array) -> np.ndarray:
-        if self.temperature <= 0:
-            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        self.key, sub = jax.random.split(self.key)
-        return np.asarray(jax.random.categorical(
-            sub, logits / self.temperature, axis=-1), np.int32)
+        # sampling is a sanctioned sync: the generated token must reach
+        # the host to extend the sequence (the one pull serving requires)
+        with self.sentinel.sanctioned("sample"):
+            if self.temperature <= 0:
+                return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            self.key, sub = jax.random.split(self.key)
+            return np.asarray(jax.random.categorical(
+                sub, logits / self.temperature, axis=-1), np.int32)
 
     def _tick(self, batch_tokens: int):
         """Advance a virtual clock by the modeled cost of one forward."""
@@ -577,6 +595,17 @@ class Engine:
     def _record(self, *, phase: str, n_active: int, tokens: int,
                 batch_tokens: int, aux: Dict[str, Any],
                 fwd_s: float = 0.0):
+        # the statistics pull is a sanctioned sync point: routing stats
+        # must land on host between forwards — they feed the predictor,
+        # the replan gates and the AIMD policy's observers
+        with self.sentinel.sanctioned("telemetry"):
+            self._record_stats(phase=phase, n_active=n_active,
+                               tokens=tokens, batch_tokens=batch_tokens,
+                               aux=aux, fwd_s=fwd_s)
+
+    def _record_stats(self, *, phase: str, n_active: int, tokens: int,
+                      batch_tokens: int, aux: Dict[str, Any],
+                      fwd_s: float = 0.0):
         # moe_stats: [n_blocks, 2, groups, ep] stacked (load_d, vis_d) rows
         ms = np.asarray(aux["moe_stats"], np.float64)
         load_sum, vis_sum = float(ms[:, 0].sum()), float(ms[:, 1].sum())
@@ -780,6 +809,14 @@ class Engine:
         self._maybe_migrate()
         if self._placement is not None:
             self._maybe_resize_capacity()
+        # everything up to here is the sanctioned between-iteration
+        # window (faults, migration drains, resize re-jits); the rest of
+        # the iteration is the hot loop the sentinel guards against
+        # unsanctioned device->host syncs
+        with self.sentinel.hot("iter"):
+            return self._step_hot()
+
+    def _step_hot(self) -> int:
         # the overlap window starts AFTER the migration charges: the
         # async budget must size against forward compute only — folding
         # a stall into the window would let the stall grow next

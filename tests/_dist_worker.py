@@ -15,6 +15,9 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+# same discipline as tests/conftest.py (subprocesses skip conftest)
+jax.config.update("jax_numpy_rank_promotion", "raise")
+
 from repro.configs import ReaLBConfig, get_config, reduced  # noqa: E402
 from repro.core import ep_moe  # noqa: E402
 from repro.models import transformer as tf  # noqa: E402
@@ -825,6 +828,67 @@ def check_elastic_kill_rejoin_under_ep():
     y_fin, _, _ = run(params)
     err = float(jnp.max(jnp.abs(y_fin - y_ref)))
     assert err < 5e-5, err
+
+
+def check_collective_census_reconciles():
+    """Three independent derivations of the dispatch path's collective
+    traffic on the (2,4) mesh must agree: the traced jaxpr census, the
+    post-XLA HLO census (while-loop trip counts multiplied through) and
+    the FlopByteLedger's analytic graph prediction.  An extra psum or a
+    silently widened all-to-all payload breaks one of the three."""
+    from repro.analysis.jaxpr_audit import collective_census_jaxpr
+    from repro.launch.hlo_analysis import collective_census
+    from repro.obs.ledger import FlopByteLedger
+
+    cfg, p, x, mod = _moe_setup()
+    rcfg = ReaLBConfig(gate_gamma=10 ** 9)
+    L = 3
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+    def fwd(p, x, m):
+        def step(carry, _):
+            x_c, m_c = carry
+            y, m_n, aux = ep_moe.ep_moe_forward(p, x_c, cfg, rcfg, m_c,
+                                                mod, mode="dispatch")
+            # return the full aux so no psum is dead code post-XLA
+            return (y, m_n), aux
+        return jax.lax.scan(step, (x, m), None, length=L)
+
+    with use_mesh(mesh):
+        m = jnp.full(ep_moe.moe_state_shape(mesh, 4), 0.9)
+        closed = jax.make_jaxpr(fwd)(p, x, m)
+        hlo = jax.jit(fwd).lower(p, x, m).compile().as_text()
+
+    jx = collective_census_jaxpr(closed)
+    # per-device tokens entering the layer: batch 4/2 x seq 16/4
+    led = FlopByteLedger(cfg, ep=4).predict_graph_census(
+        t_local=8, layers=L, itemsize=x.dtype.itemsize)
+    # jaxpr == ledger, exactly: same capacity formula, same shapes
+    for kind in ("all_to_all", "psum"):
+        assert jx.get(kind) == led[kind], (kind, jx.get(kind), led[kind])
+
+    hl = collective_census(hlo)
+    # program-issued collectives only ("user"): the partitioner also
+    # inserts all-reduces to aggregate the harness's sharded aux outputs
+    a2a = hl["user"].get("all-to-all", {"count": 0, "bytes": 0})
+    ar = hl["user"].get("all-reduce", {"count": 0, "bytes": 0})
+    assert a2a["count"] == led["all_to_all"]["count"], (a2a, led)
+    assert a2a["bytes"] == led["all_to_all"]["bytes"], (a2a, led)
+    # psum lowers to all-reduce; XLA may merge several and hoist
+    # loop-invariant scalar psums out of the scan (count <=, bytes
+    # within a few hoisted scalars of the prediction)
+    assert 0 < ar["count"] <= led["psum"]["count"], (ar, led)
+    pred_b = led["psum"]["bytes"]
+    assert abs(ar["bytes"] - pred_b) / pred_b <= 0.05, (ar, led)
+    # the steady-state body is loop-carried with the full trip count
+    assert hl["layers"] == L, hl["layers"]
+    # and the ledger's *routed* ICI bytes never exceed the graph's
+    # capacity-buffer bytes (the buffers are what actually moves)
+    t_global = 4 * 16
+    a2a_routed = (t_global * cfg.moe.top_k / 4 * 3 / 4
+                  * cfg.d_model * 2.0) * 4 * 2 * L
+    graph_global = led["all_to_all"]["bytes"] * 8  # 8 devices
+    assert a2a_routed <= graph_global, (a2a_routed, graph_global)
 
 
 def check_kernel_fp4_parity_under_ep():

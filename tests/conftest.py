@@ -6,10 +6,16 @@ resolves the ``benchmarks`` package too."""
 import pathlib
 import sys
 
+import jax
 import numpy as np
 import pytest
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+# silent rank promotion is how shape bugs ship: a [t] vector broadcast
+# against a [t, d] activation runs fine and routes garbage.  Raise
+# everywhere under test; production code must broadcast explicitly.
+jax.config.update("jax_numpy_rank_promotion", "raise")
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,266 @@
+"""AST lint: one positive + one scoped/refined negative fixture per
+rule, the escape hatch, the CLI contract, and the dogfood pin (the repo
+itself lints clean)."""
+import json
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+from repro.analysis.lint import (RULES, Finding, lint_paths, lint_source,
+                                 summarize)
+
+SRC = pathlib.Path(__file__).parents[1] / "src" / "repro"
+
+
+def _lint(code, path="repro/core/fake.py", rules=None):
+    return lint_source(textwrap.dedent(code), path, rules=rules)
+
+
+def _rules(findings, suppressed=False):
+    return [f.rule for f in findings if f.suppressed == suppressed]
+
+
+# --------------------------------------------------------------------------
+# RPL001: host coercion of traced values
+# --------------------------------------------------------------------------
+def test_rpl001_flags_float_of_jnp():
+    f = _lint("""
+        def f(x):
+            return float(jnp.sum(x))
+        """)
+    assert _rules(f) == ["RPL001"]
+
+
+def test_rpl001_flags_np_asarray_of_traced():
+    f = _lint("""
+        def f(x):
+            return np.asarray(jnp.ones(3))
+        """)
+    assert _rules(f) == ["RPL001"]
+
+
+def test_rpl001_module_level_and_host_values_exempt():
+    # module-level jnp runs eagerly at import; float(python) is fine
+    f = _lint("""
+        INV = float(jnp.float32(1.0) / jnp.float32(6.0))
+        def f(n):
+            return float(n) + int(len([1]))
+        """)
+    assert f == []
+
+
+def test_rpl001_scoped_to_hot_dirs():
+    code = """
+        def f(x):
+            return float(jnp.sum(x))
+        """
+    assert _rules(_lint(code, path="repro/serving/engine.py")) == []
+    assert _rules(_lint(code, path="repro/models/attention.py")) \
+        == ["RPL001"]
+
+
+# --------------------------------------------------------------------------
+# RPL002: Python control flow on traced values
+# --------------------------------------------------------------------------
+def test_rpl002_flags_if_on_jnp():
+    f = _lint("""
+        def f(x):
+            if jnp.any(x > 0):
+                return x
+            return -x
+        """)
+    assert _rules(f) == ["RPL002"]
+
+
+def test_rpl002_host_jax_api_exempt():
+    f = _lint("""
+        def f(x):
+            impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+            return impl
+        """)
+    assert f == []
+
+
+def test_rpl002_while_and_ternary():
+    f = _lint("""
+        def f(x):
+            y = 1 if jnp.all(x) else 2
+            while jnp.any(x):
+                x = x - 1
+            return y
+        """)
+    assert _rules(f) == ["RPL002", "RPL002"]
+
+
+# --------------------------------------------------------------------------
+# RPL003: hardware-magnitude literals
+# --------------------------------------------------------------------------
+def test_rpl003_band():
+    f = _lint("""
+        ICI_BW = 45e9
+        MASK = -1e30          # numeric sentinel: above the band
+        N = 100_000_000       # below the band
+        """, path="repro/launch/roofline.py")
+    assert _rules(f) == ["RPL003"]
+    assert "45000000000" in f[0].message or "4.5e+10" in f[0].message
+
+
+def test_rpl003_configs_exempt():
+    f = _lint("MIGRATION_BW_DEFAULT = 50e9\n",
+              path="repro/configs/base.py")
+    assert f == []
+
+
+# --------------------------------------------------------------------------
+# RPL004: unguarded tracer/profiler annotation calls
+# --------------------------------------------------------------------------
+def test_rpl004_flags_unguarded_instant():
+    f = _lint("""
+        def step(self):
+            self.tracer.instant("replan", args={"it": 3})
+        """, path="repro/serving/engine.py")
+    assert _rules(f) == ["RPL004"]
+
+
+def test_rpl004_enabled_guard_and_non_profiler_receiver_ok():
+    f = _lint("""
+        def step(self):
+            if self.tracer.enabled:
+                self.tracer.instant("replan", args={"it": 3})
+            if self.profiler.enabled:
+                self.profiler.observe_iter(moe_stats=s, tokens=4)
+            gate.observe_iter(s)       # cost gate, not a profiler
+        """, path="repro/serving/engine.py")
+    assert f == []
+
+
+# --------------------------------------------------------------------------
+# RPL005: table mutation outside the staged-commit API
+# --------------------------------------------------------------------------
+def test_rpl005_flags_direct_table_assign():
+    f = _lint("""
+        def hack(mgr, t):
+            mgr.tables = t
+        """, path="repro/serving/engine.py")
+    assert _rules(f) == ["RPL005"]
+
+
+def test_rpl005_managers_exempt():
+    f = _lint("""
+        def commit(self, t):
+            self.tables = t
+        """, path="repro/replication/manager.py")
+    assert f == []
+
+
+# --------------------------------------------------------------------------
+# RPL006: non-integral byte accounting
+# --------------------------------------------------------------------------
+def test_rpl006_flags_float_bytes():
+    f = _lint("""
+        def plan(n):
+            budget_bytes = n / 2
+            slab_bytes = float(n)
+            nbytes = 1.5
+        """, path="repro/placement/migrate.py")
+    assert _rules(f) == ["RPL006", "RPL006", "RPL006"]
+
+
+def test_rpl006_floor_div_and_ledger_exempt():
+    assert _lint("""
+        def plan(n):
+            budget_bytes = n // 2
+        """, path="repro/placement/migrate.py") == []
+    assert _lint("""
+        def f(n):
+            hbm_bytes = n * 0.53125
+        """, path="repro/obs/ledger.py") == []
+
+
+# --------------------------------------------------------------------------
+# RPL007: wall clock
+# --------------------------------------------------------------------------
+def test_rpl007_flags_time_time():
+    f = _lint("""
+        def f():
+            t0 = time.time()
+            t1 = time.perf_counter()
+        """, path="repro/launch/serve.py")
+    assert _rules(f) == ["RPL007"]
+
+
+def test_rpl007_clock_seam_exempt():
+    f = _lint("""
+        def now():
+            return time.time()
+        """, path="repro/obs/trace.py")
+    assert f == []
+
+
+# --------------------------------------------------------------------------
+# escape hatch + machinery
+# --------------------------------------------------------------------------
+def test_suppression_collected_separately():
+    f = _lint("""
+        def f(x):
+            # calibration constant, computed once at trace time
+            return float(jnp.sum(x))  # repro-lint: disable=RPL001
+        """)
+    assert _rules(f) == [] and _rules(f, suppressed=True) == ["RPL001"]
+    s = summarize(f)
+    assert s["files_ok"] and s["n_suppressed"] == 1
+
+
+def test_suppression_is_rule_specific():
+    f = _lint("""
+        def f(x):
+            return float(jnp.sum(x))  # repro-lint: disable=RPL002
+        """)
+    assert _rules(f) == ["RPL001"]
+
+
+def test_syntax_error_reported_as_rpl000():
+    f = _lint("def f(:\n")
+    assert [x.rule for x in f] == ["RPL000"]
+
+
+def test_rules_catalog_complete():
+    assert sorted(RULES) == [f"RPL00{i}" for i in range(1, 8)]
+
+
+def test_cli_json_and_exit_codes(tmp_path):
+    bad = tmp_path / "repro" / "core" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("def f(x):\n    return float(jnp.sum(x))\n")
+    env_path = str(SRC.parent)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", str(bad), "--json"],
+        capture_output=True, text=True, env={"PYTHONPATH": env_path,
+                                             "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 1
+    out = json.loads(r.stdout)
+    assert out["n_findings"] == 1 and out["by_rule"] == {"RPL001": 1}
+
+    bad.write_text("def f(x):\n"
+                   "    return float(jnp.sum(x))"
+                   "  # repro-lint: disable=RPL001\n")
+    r2 = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", str(bad)],
+        capture_output=True, text=True, env={"PYTHONPATH": env_path,
+                                             "PATH": "/usr/bin:/bin"})
+    assert r2.returncode == 0
+    assert "1 suppressed" in r2.stdout
+
+
+# --------------------------------------------------------------------------
+# dogfood pin: the repo itself is lint-clean
+# --------------------------------------------------------------------------
+def test_repo_lints_clean():
+    findings = lint_paths([str(SRC)])
+    unsup = [f for f in findings if not f.suppressed]
+    assert unsup == [], "\n".join(f.format() for f in unsup)
+    # suppressions exist and are the documented, justified ones
+    sup = {(pathlib.Path(f.path).name, f.rule)
+           for f in findings if f.suppressed}
+    assert sup <= {("lint.py", "RPL003"), ("profiler.py", "RPL006")}

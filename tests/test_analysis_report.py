@@ -1,0 +1,66 @@
+"""The invariant report CLI: clean repo exits 0 with a well-formed
+artifact; a tampered hot loop (injected host sync, extra collective)
+exits non-zero.  Subprocess-driven: the census section needs its own
+8-device XLA topology."""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.slow    # each run compiles the serving loop
+
+REPORT = pathlib.Path(__file__).parents[1] / "benchmarks" \
+    / "analysis_report.py"
+
+
+def _run(*extra, timeout=900):
+    return subprocess.run([sys.executable, str(REPORT), *extra],
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_clean_report_exits_zero(tmp_path):
+    out = tmp_path / "invariant_report.json"
+    r = _run("--out", str(out))
+    assert r.returncode == 0, r.stdout + r.stderr
+    rep = json.loads(out.read_text())
+    assert rep["schema"] == "repro.analysis.v1"
+    assert rep["ok"] is True and rep["tamper"] is None
+    assert set(rep["sections"]) == {"lint", "audit", "census", "sentinel"}
+    assert all(s["ok"] for s in rep["sections"].values())
+    # section-specific invariants the artifact must carry
+    assert rep["sections"]["lint"]["n_findings"] == 0
+    aud = rep["sections"]["audit"]["backends"]
+    assert set(aud) == {"jnp", "interpret"}
+    assert all(b["census"] == {} for b in aud.values())
+    sent = rep["sections"]["sentinel"]
+    assert sent["post_warm_recompiles"] == {}
+    assert sent["violations"] == []
+    assert sum(sent["warm_counts"].values()) > 0
+    assert rep["sections"]["census"]["checks"]["jaxpr_eq_ledger"]
+
+
+def test_tamper_sync_flips_exit(tmp_path):
+    out = tmp_path / "rep.json"
+    r = _run("--only", "sentinel", "--tamper", "sync", "--out", str(out))
+    assert r.returncode != 0, r.stdout + r.stderr
+    rep = json.loads(out.read_text())
+    assert rep["ok"] is False
+    sent = rep["sections"]["sentinel"]
+    # the injected float() was caught inside the hot window, attributed
+    # to the tamper site
+    assert sent["violations"], sent
+    assert any("analysis_report" in v["where"] for v in sent["violations"])
+
+
+def test_tamper_psum_flips_exit():
+    r = _run("--only", "census", "--tamper", "psum")
+    assert r.returncode != 0, r.stdout + r.stderr
+    assert "census: VIOLATION" in r.stdout
+
+
+def test_unknown_section_rejected():
+    r = _run("--only", "nosuch", timeout=120)
+    assert r.returncode != 0
+    assert "unknown section" in r.stderr

@@ -31,6 +31,7 @@ CHECKS = [
     "weighted_split_under_ep",
     "elastic_kill_rejoin_under_ep",
     "kernel_fp4_parity_under_ep",
+    "collective_census_reconciles",
 ]
 
 

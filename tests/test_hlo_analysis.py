@@ -49,3 +49,88 @@ def test_parse_module_structure():
     comps, entry = ha.parse_module(hlo)
     assert entry in comps
     assert len(comps) >= 2            # entry + loop body/cond
+
+
+def test_analyze_byte_counts_are_integral():
+    f = jax.jit(lambda a: (a * 2 + 1).sum())
+    res = ha.analyze(f.lower(jnp.ones((64, 64))).compile().as_text())
+    assert type(res["traffic_bytes"]) is int
+    assert type(res["collective_bytes"]) is int
+    assert all(type(v) is int for v in res["collective_by_kind"].values())
+
+
+# --------------------------------------------------------------------------
+# collective census on a handcrafted module: a 4-trip layer loop with two
+# user collectives (op_name name-stack leaf = jaxpr primitive) and one
+# partitioner-inserted all-reduce (no op_name), plus a one-off user psum
+# and an async start/done pair outside the loop.
+# --------------------------------------------------------------------------
+_CENSUS_HLO = """\
+HloModule census_fixture
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%body (bp: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %bp = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%bp), index=0
+  %x = f32[8] get-tuple-element(%bp), index=1
+  %ar = f32[8] all-reduce(%x), to_apply=%add, metadata={op_name="jit(step)/transformer/moe/psum"}
+  %a2a = f32[8] all-to-all(%ar), dimensions={0}, metadata={op_name="jit(step)/transformer/moe/all_to_all"}
+  %infra = f32[8] all-reduce(%a2a), channel_id=3, to_apply=%add
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %bt = (s32[], f32[8]) tuple(%ip, %infra)
+}
+
+%cond (cp: (s32[], f32[8])) -> pred[] {
+  %cp = (s32[], f32[8]) parameter(0)
+  %ci = s32[] get-tuple-element(%cp), index=0
+  %n = s32[] constant(4)
+  ROOT %lt = pred[] compare(%ci, %n), direction=LT
+}
+
+ENTRY %main (px: f32[8]) -> f32[8] {
+  %px = f32[8] parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[8]) tuple(%zero, %px)
+  %w = (s32[], f32[8]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"4"}}
+  %y = f32[8] get-tuple-element(%w), index=1
+  %pre = f32[8] all-reduce(%y), to_apply=%add, metadata={op_name="jit(step)/psum"}
+  %ars = f32[8] all-reduce-start(%pre), to_apply=%add, metadata={op_name="jit(step)/aux/psum"}
+  ROOT %ard = f32[8] all-reduce-done(%ars)
+}
+"""
+
+
+def test_collective_census_handcrafted():
+    c = ha.collective_census(_CENSUS_HLO)
+    assert c["layers"] == 4
+    # total: loop {user psum + a2a + infra ar} x4, entry {pre, start}
+    # (the -done half of the async pair is never double counted)
+    assert c["total"]["all-reduce"] == {"count": 10, "bytes": 320}
+    assert c["total"]["all-to-all"] == {"count": 4, "bytes": 128}
+    # user slice excludes the partitioner-inserted %infra (no op_name)
+    assert c["user"]["all-reduce"] == {"count": 6, "bytes": 192}
+    assert c["user"]["all-to-all"] == {"count": 4, "bytes": 128}
+    # steady-state body (one trip's worth) vs one-off collectives
+    assert c["per_layer"]["all-reduce"] == {"count": 2, "bytes": 64}
+    assert c["per_layer"]["all-to-all"] == {"count": 1, "bytes": 32}
+    assert c["outside"]["all-reduce"] == {"count": 2, "bytes": 64}
+    assert "all-to-all" not in c["outside"]
+    # every cell integral
+    for table in ("total", "user", "per_layer", "outside"):
+        for ent in c[table].values():
+            assert type(ent["count"]) is int and type(ent["bytes"]) is int
+
+
+def test_collective_census_analyze_agree_on_bytes():
+    """analyze()'s per-kind collective bytes equal the census totals."""
+    res = ha.analyze(_CENSUS_HLO)
+    c = ha.collective_census(_CENSUS_HLO)
+    by_kind = {k: v["bytes"] for k, v in c["total"].items()}
+    assert res["collective_by_kind"] == by_kind
+    assert res["collective_bytes"] == sum(by_kind.values())

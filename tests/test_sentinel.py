@@ -1,0 +1,220 @@
+"""Runtime sentinel: host-sync guard, recompile accounting, and the
+engine e2e invariants — zero post-warmup recompiles across replan /
+kill-rejoin / async drain, and a sync-free hot loop with tracer and
+profiler enabled."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.sentinel import NULL_SENTINEL, Sentinel
+from repro.configs import (ReaLBConfig, ReplicationConfig, get_config,
+                           reduced)
+
+
+# --------------------------------------------------------------------------
+# host-sync guard
+# --------------------------------------------------------------------------
+def test_hot_window_catches_scalar_coercion():
+    with Sentinel() as s:
+        x = jnp.ones(())
+        with s.hot("iter"):
+            float(x)                       # unsanctioned device->host pull
+    assert len(s.violations) == 1
+    v = s.violations[0]
+    assert v.kind == "host_sync" and v.context == "iter"
+    assert "test_sentinel" in v.where
+    assert not s.ok
+
+
+def test_sanctioned_window_allows_pulls():
+    with Sentinel() as s:
+        x = jnp.ones(())
+        with s.hot("iter"):
+            with s.sanctioned("telemetry"):
+                float(x)
+                int(jnp.ones((), jnp.int32))
+    assert s.violations == []
+    assert s.sanctioned_pulls == {"telemetry": 1}
+    assert s.ok
+
+
+def test_outside_hot_window_unguarded():
+    with Sentinel() as s:
+        float(jnp.ones(()))                # between iterations: fine
+    assert s.violations == []
+
+
+def test_strict_raises_with_site():
+    with Sentinel(strict=True) as s:
+        with pytest.raises(RuntimeError, match="unsanctioned"):
+            with s.hot("decode"):
+                bool(jnp.ones((), bool))
+    assert len(s.violations) == 1
+
+
+def test_guard_uninstalls_on_exit():
+    s = Sentinel()
+    with s:
+        pass
+    # after disarm the property is the original: no guard, no recording
+    with jax.transfer_guard_device_to_host("allow"):
+        float(jnp.ones(()))
+    assert s.violations == []
+
+
+def test_device_compute_unaffected_inside_hot():
+    with Sentinel() as s:
+        x = jnp.arange(8.0)
+        with s.hot("iter"):
+            y = jnp.sum(x * 2)             # stays on device: no pull
+    assert s.violations == []
+    assert float(y) == 56.0
+
+
+# --------------------------------------------------------------------------
+# recompile accounting
+# --------------------------------------------------------------------------
+def test_recompile_counter_flags_new_shapes():
+    s = Sentinel()
+    f = jax.jit(lambda x: x + 1)
+    s.register_entry("f", f)
+    f(jnp.ones(4))
+    warm = s.mark_warm()
+    assert warm == {"f": 1}
+    f(jnp.ones(4))                         # cache hit
+    assert s.post_warm_recompiles() == {}
+    assert s.ok
+    f(jnp.ones(8))                         # new shape -> recompile
+    assert s.post_warm_recompiles() == {"f": 1}
+    assert not s.ok
+
+
+def test_register_entry_cumulative_across_generations():
+    s = Sentinel()
+    f1 = jax.jit(lambda x: x + 1)
+    s.register_entry("f", f1)
+    f1(jnp.ones(4))
+    f2 = jax.jit(lambda x: x + 2)          # an engine rebuild
+    s.register_entry("f", f2)
+    s.note_rebuild("capacity resize")
+    f2(jnp.ones(4))
+    assert s.compile_counts() == {"f": 2}
+    assert s.rebuilds == ["capacity resize"]
+
+
+def test_null_sentinel_is_free_and_reentrant():
+    assert not NULL_SENTINEL.enabled
+    with NULL_SENTINEL.hot("iter"):
+        with NULL_SENTINEL.hot("iter"):
+            with NULL_SENTINEL.sanctioned("x"):
+                float(jnp.ones(()))
+    NULL_SENTINEL.note_rebuild("r")
+    assert NULL_SENTINEL.ok
+    assert NULL_SENTINEL.report()["ok"] is True
+
+
+def test_report_shape():
+    with Sentinel() as s:
+        with s.hot("iter"):
+            float(jnp.ones(()))
+    rep = s.report()
+    assert set(rep) == {"ok", "violations", "sanctioned_pulls",
+                        "compile_counts", "warm_counts",
+                        "post_warm_recompiles", "rebuilds"}
+    assert rep["ok"] is False and len(rep["violations"]) == 1
+
+
+# --------------------------------------------------------------------------
+# engine end-to-end (slow): the serving invariants themselves
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def model():
+    import repro.models.transformer as tf
+    cfg = reduced(get_config("olmoe-1b-7b"), n_layers=2)
+    params = tf.init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _reqs(cfg, n=6, p_len=12, new=4, seed=0):
+    from repro.serving.scheduler import Request
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        toks = rng.integers(0, cfg.vocab_size, p_len).astype(np.int32)
+        out.append(Request(uid=i, tokens=toks,
+                           modality=np.full(p_len, bool(i % 2)),
+                           max_new_tokens=new, arrival_time=0.0))
+    return out
+
+
+@pytest.mark.slow
+def test_engine_hot_loop_sync_free_with_obs_enabled(model):
+    """Transfer-guard invariant: with tracer AND profiler enabled, every
+    device->host pull inside the iteration happens in a sanctioned
+    window (sampling, telemetry) — zero stray syncs."""
+    from repro.obs import Tracer
+    from repro.obs.ledger import FlopByteLedger
+    from repro.obs.profiler import Profiler
+    from repro.serving.engine import Engine
+
+    cfg, params = model
+    sent = Sentinel()
+    with sent:
+        eng = Engine(cfg, params, ReaLBConfig(gate_gamma=4), max_slots=3,
+                     max_len=32, virtual_ep=4,
+                     tracer=Tracer(clock=lambda: 0.0),
+                     profiler=Profiler(FlopByteLedger(cfg, ep=4)),
+                     sentinel=sent)
+        for r in _reqs(cfg):
+            eng.submit(r)
+        done = eng.run()
+    assert len(done) == 6
+    assert sent.violations == [], [v.where for v in sent.violations]
+    # the guard was genuinely live: the engine pulled through sanctioned
+    # windows every iteration
+    assert sent.sanctioned_pulls.get("telemetry", 0) > 0
+    assert sent.sanctioned_pulls.get("sample", 0) > 0
+
+
+@pytest.mark.slow
+def test_engine_zero_recompiles_across_replan_kill_rejoin(model, tmp_path):
+    """Warmup pass covers replans, table commits, a kill/rejoin cycle,
+    async drains and every chunked-prefill bucket; an identical second
+    pass must hit the jit caches exactly — zero new compilations."""
+    from repro.replication import ReplicaManager, expand_moe_params
+    from repro.runtime.fault_tolerance import FaultInjector
+    from repro.serving.elastic import ElasticCoordinator
+    from repro.serving.engine import Engine
+
+    cfg, params = model
+    mgr = ReplicaManager(cfg, ReplicationConfig(
+        replan_every=4, warmup_iters=2, min_gain=0.0, per_layer=True,
+        spare_per_rank=1, max_replicas=2), 4)
+    co = ElasticCoordinator(mgr, ckpt_dir=str(tmp_path))
+    fi = FaultInjector([(3, "fail", 2), (14, "rejoin", 2)])
+    sent = Sentinel()
+    with sent:
+        eng = Engine(cfg, expand_moe_params(params, mgr.rsets),
+                     ReaLBConfig(gate_gamma=4), max_slots=3, max_len=32,
+                     prefill_budget=8,          # chunked prefill buckets
+                     placement=mgr, migrate_async=True,
+                     migrate_bytes_per_iter=1, elastic=co,
+                     fault_injector=fi, sentinel=sent)
+        for r in _reqs(cfg, n=8, new=6):
+            eng.submit(r)
+        eng.save_checkpoint(str(tmp_path), 0)
+        eng.run()
+        eng.drain_migrations()
+        assert fi.exhausted
+        warm = sent.mark_warm()
+        assert sum(warm.values()) > 0
+        # pass 2: identical stream on the warmed engine (replans and
+        # table commits continue; shapes must all be cached)
+        for r in _reqs(cfg, n=8, new=6):
+            eng.submit(r)
+        eng.run()
+        eng.drain_migrations()
+    assert sent.post_warm_recompiles() == {}, sent.compile_counts()
+    assert sent.violations == [], [v.where for v in sent.violations]
+    assert sent.ok
